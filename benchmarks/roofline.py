@@ -1,0 +1,133 @@
+"""Roofline derivation from dry-run artifacts (§Roofline of EXPERIMENTS.md).
+
+Hardware constants (TPU v5e target):
+  peak bf16 compute   197 TFLOP/s per chip
+  HBM bandwidth       819 GB/s per chip
+  ICI link bandwidth  ~50 GB/s per link
+
+Terms per (arch × shape × mesh), all in seconds per step:
+  compute    = HLO_FLOPs_per_device / peak
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = wire_bytes_per_device / link_bw
+
+(cost_analysis() reports per-device numbers, verified against a hand-counted
+einsum; wire bytes come from the loop-aware HLO parse.)
+
+Derived:
+  bottleneck        = argmax of the three terms
+  MODEL_FLOPS       = 6·N·D (dense train) / 6·N_active·D (MoE) / 2·N·D
+                      (inference fwd), D = tokens processed
+  useful_ratio      = MODEL_FLOPS / (HLO_FLOPs × chips)  — remat/redundancy
+  mfu_bound         = MODEL_FLOPS / (chips × peak × max(term))  — the
+                      roofline fraction: model-useful utilization if the
+                      step ran exactly at its dominant-term bound.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "artifacts")
+
+
+def model_flops(art: dict) -> float:
+    cell = art["cell"]
+    n_active = art["active_params"]
+    if cell["kind"] == "train":
+        tokens = cell["seq_len"] * cell["global_batch"]
+        return 6.0 * n_active * tokens
+    if cell["kind"] == "prefill":
+        tokens = cell["seq_len"] * cell["global_batch"]
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * cell["global_batch"]
+
+
+def derive(art: dict) -> dict:
+    chips = art["chips"]
+    compute = art["flops_per_device"] / PEAK_FLOPS
+    memory = art["bytes_accessed_per_device"] / HBM_BW
+    collective = art["collectives"]["wire_bytes_per_device"] / LINK_BW
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(art)
+    hlo_total = art["flops_per_device"] * chips
+    useful = mf / hlo_total if hlo_total else 0.0
+    bound = max(terms.values())
+    mfu_bound = mf / (chips * PEAK_FLOPS * bound) if bound else 0.0
+    return {
+        **{k: art[k] for k in ("arch", "shape", "mesh", "chips")},
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "mfu_bound": mfu_bound,
+        "peak_gib": art["memory"]["peak_bytes_estimate"] / 2**30,
+        "tpu_peak_gib": art["memory"].get("tpu_peak_model", 0) / 2**30,
+        "tag": art.get("tag", "baseline"),
+    }
+
+
+def load_all(tag: str | None = None) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))):
+        art = json.load(open(path))
+        art_tag = art.get("tag", "baseline")
+        if tag is None and art_tag != "baseline":
+            continue
+        if tag is not None and art_tag != tag:
+            continue
+        rows.append(derive(art))
+    return rows
+
+
+def bench_roofline():
+    """Emit one row per baseline cell (single-pod mesh = the §Roofline
+    table; multi-pod proves the pod axis shards)."""
+    rows = []
+    for r in load_all():
+        rows.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            "us_per_call": 0,
+            "derived": (
+                f"compute={r['compute_s']*1e3:.2f}ms "
+                f"memory={r['memory_s']*1e3:.2f}ms "
+                f"collective={r['collective_s']*1e3:.2f}ms "
+                f"bottleneck={r['bottleneck']} "
+                f"useful={r['useful_ratio']:.2f} "
+                f"mfu_bound={r['mfu_bound']:.3f}"
+            ),
+        })
+    frac = [r["mfu_bound"] for r in load_all()
+            if r["mesh"] == "pod_16x16" and r["shape"] == "train_4k"]
+    avg = sum(frac) / len(frac) if frac else 0.0
+    return rows, avg
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute (ms) | memory (ms) | "
+           "collective (ms) | bottleneck | useful | MFU-bound | raw peak GiB "
+           "| TPU peak GiB |")
+    sep = "|" + "---|" * 11
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+            f"| {r['collective_s']*1e3:.2f} | **{r['bottleneck']}** "
+            f"| {r['useful_ratio']:.2f} | {r['mfu_bound']:.3f} "
+            f"| {r['peak_gib']:.1f} | {r['tpu_peak_gib']:.1f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = load_all()
+    print(markdown_table(rows))

@@ -1,0 +1,38 @@
+"""Benchmark harness: one function per paper table/figure + the roofline
+table from dry-run artifacts.  Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import paper_benches as pb
+    from benchmarks.roofline import bench_roofline
+
+    benches = [
+        pb.bench_theorem1_cost_law,
+        pb.bench_fig2_bathtub_strong,
+        pb.bench_fig3_bathtub_relaxed,
+        pb.bench_fig4_mm_strong,
+        pb.bench_fig5_mm_relaxed,
+        pb.bench_theorem5_table,
+        pb.bench_waittime_optimality,
+        bench_roofline,
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        try:
+            rows, _ = bench()
+            for row in rows:
+                derived = str(row["derived"]).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']:.0f},{derived}")
+        except Exception as exc:  # keep the harness going
+            failures += 1
+            print(f"{bench.__name__},0,ERROR: {exc}", file=sys.stdout)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

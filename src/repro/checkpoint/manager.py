@@ -1,0 +1,161 @@
+"""Sharded, async, preemption-aware checkpointing with elastic restore.
+
+Layout: <dir>/step_<N>/
+  manifest.msgpack   — step, tree structure, dtypes/shapes, PartitionSpecs,
+                       data-pipeline cursor, mesh shape
+  <leaf_id>.npy      — one file per leaf (per-host shard in a real cluster;
+                       single process here holds the full leaf)
+
+Design points exercised by tests:
+  * async save: device_get + file writes happen on a worker thread; training
+    continues (``wait()`` joins before the next save or exit).
+  * preemption flow: ``SpotOrchestrator`` (repro.cluster) fires an
+    advance-notice callback → ``save(..., blocking=True)`` inside the notice
+    window → job re-enters the admission queue (the paper's policy decides
+    spot-wait vs on-demand).
+  * elastic restore: ``restore(..., mesh=new_mesh, specs=...)`` re-shards
+    leaves onto a *different* mesh via jax.device_put — DP width can shrink
+    or grow between spot allocations.
+  * integrity: manifest lists every leaf + sha1; partial checkpoints
+    (killed mid-save) are detected and skipped by ``latest_step``.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import ml_dtypes
+import numpy as np
+
+_EXOTIC = {"bfloat16": ml_dtypes.bfloat16}
+
+
+def _to_savable(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    """np.save can't store bfloat16 — view as uint16 + record logical dtype."""
+    name = str(arr.dtype)
+    if name in _EXOTIC:
+        return arr.view(np.uint16), name
+    return arr, name
+
+
+def _from_savable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXOTIC:
+        return arr.view(_EXOTIC[dtype_name])
+    return arr
+
+
+def _flatten(tree) -> tuple[list[tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+                       for p in path)
+        items.append((key, leaf))
+    return items, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, *, extra: Optional[dict] = None,
+             blocking: bool = False) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def write():
+            items, _ = _flatten(host_tree)
+            tmp = os.path.join(self.directory, f".tmp_step_{step}")
+            final = os.path.join(self.directory, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            manifest = {"step": step, "leaves": [], "extra": extra or {}}
+            for i, (key, leaf) in enumerate(items):
+                fn = f"leaf_{i:05d}.npy"
+                savable, dtype_name = _to_savable(leaf)
+                np.save(os.path.join(tmp, fn), savable)
+                manifest["leaves"].append({
+                    "key": key, "file": fn, "shape": list(leaf.shape),
+                    "dtype": dtype_name,
+                    "sha1": hashlib.sha1(leaf.tobytes()).hexdigest()[:16],
+                })
+            with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+                f.write(msgpack.packb(manifest))
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_"):
+                path = os.path.join(self.directory, name, "manifest.msgpack")
+                if os.path.exists(path):  # complete checkpoints only
+                    steps.append(int(name.split("_")[1]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, *, mesh=None, specs=None,
+                verify: bool = False) -> tuple[Any, dict]:
+        """Restore into the structure of ``like``; optional elastic re-shard.
+
+        ``like`` may be concrete or ShapeDtypeStructs; with ``mesh``+``specs``
+        every leaf is placed with NamedSharding(mesh, spec) — re-sharding onto
+        a different topology than the one that saved it.
+        """
+        self.wait()
+        d = os.path.join(self.directory, f"step_{step}")
+        with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+        leaves = []
+        for meta in manifest["leaves"]:
+            arr = _from_savable(np.load(os.path.join(d, meta["file"])),
+                                meta["dtype"])
+            if verify:
+                got = hashlib.sha1(arr.tobytes()).hexdigest()[:16]
+                if got != meta["sha1"]:
+                    raise IOError(f"checksum mismatch for {meta['key']}")
+            leaves.append(arr)
+        _, treedef = _flatten(jax.tree.map(lambda x: 0, like))
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), leaves)
+        if mesh is not None and specs is not None:
+            from jax.sharding import NamedSharding
+
+            tree = jax.tree.map(
+                lambda leaf, spec: jax.device_put(
+                    leaf, NamedSharding(mesh, spec)), tree, specs)
+        else:
+            tree = jax.tree.map(jnp.asarray, tree)
+        return tree, manifest.get("extra", {})

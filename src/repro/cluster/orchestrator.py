@@ -1,0 +1,213 @@
+"""Spot/on-demand cluster orchestration driven by the paper's policy.
+
+This is the paper *deployed*: a stream of delay-sensitive jobs (training
+legs / batch-inference requests) arrives at a cluster whose cheap capacity
+is spot pods (stochastic availability, advance-notice preemption) and whose
+guaranteed capacity is on-demand pods at cost ``k``.
+
+Components:
+  * :class:`OnlineAdmissionController` — Algorithm 1 running *online* on the
+    live event stream (the jit'd scan in repro.core.adaptive is the
+    offline/on-device twin; this one consumes real callbacks).
+  * :class:`SpotCluster` — discrete-event cluster: job arrivals, spot-slot
+    arrivals, preemptions with notice.  Jobs admitted to the spot queue wait
+    (Theorem 4: X = ∞ below the knob); rejected jobs run on-demand
+    immediately.  Preempted jobs checkpoint within the notice window and
+    re-enter admission — the paper's policy doubles as the recovery policy.
+  * Straggler mitigation: per-pod EWMA of step time; a pod flagged at
+    >``straggler_factor``× the median is treated as preempted-with-notice.
+
+The event loop is host-side Python (it orchestrates real JAX work — see
+examples/elastic_spot_training.py); all statistics mirror
+repro.core.simulator so Theorem-1 cost accounting applies unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.arrivals import ArrivalProcess
+from repro.core.policies import ThreePhasePolicy
+
+
+class OnlineAdmissionController:
+    """Algorithm 1 on a live stream: windowed delay → projected SGD on r."""
+
+    def __init__(self, *, delta: float, eta: float = 0.05,
+                 eta_decay: float = 0.05, r0: float = 1.0,
+                 r_max: float = 16.0, window_jobs: int = 64):
+        self.delta = delta
+        self.eta = eta
+        self.eta_decay = eta_decay
+        self.r = r0
+        self.r_max = r_max
+        self.window_jobs = window_jobs
+        self._delays: list[float] = []
+        self._updates = 0
+        self.history: list[float] = [r0]
+
+    def policy(self) -> ThreePhasePolicy:
+        return ThreePhasePolicy(r=self.r)
+
+    def admit(self, queue_len: int, rng: np.random.Generator) -> bool:
+        return rng.random() < self.policy().admit_prob(queue_len)
+
+    def on_job_complete(self, delay: float) -> None:
+        self._delays.append(delay)
+        if len(self._delays) >= self.window_jobs:
+            d = float(np.mean(self._delays))
+            self._delays.clear()
+            step = self.eta / math.sqrt(1.0 + self.eta_decay * self._updates)
+            self._updates += 1
+            self.r = min(self.r_max, max(0.0, self.r - step * (d - self.delta)))
+            self.history.append(self.r)
+
+
+@dataclasses.dataclass
+class Job:
+    job_id: int
+    arrival_time: float
+    work_steps: int  # training steps this job needs
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    jobs_completed: int = 0
+    spot_served: int = 0
+    ondemand_served: int = 0
+    preemptions: int = 0
+    stragglers_evicted: int = 0
+    checkpoints: int = 0
+    restores: int = 0
+    total_cost: float = 0.0
+    total_delay: float = 0.0
+
+    @property
+    def avg_cost(self) -> float:
+        return self.total_cost / max(self.jobs_completed, 1)
+
+    @property
+    def avg_delay(self) -> float:
+        return self.total_delay / max(self.jobs_completed, 1)
+
+
+class SpotCluster:
+    """Discrete-event spot/on-demand cluster with admission control."""
+
+    def __init__(self, *, job_process: ArrivalProcess,
+                 spot_process: ArrivalProcess, k_cost: float = 10.0,
+                 controller: OnlineAdmissionController,
+                 preemption_prob: float = 0.0,
+                 notice_hours: float = 0.05,
+                 straggler_factor: float = 1.5,
+                 on_spot_run: Optional[Callable] = None,
+                 on_ondemand_run: Optional[Callable] = None,
+                 on_preempt: Optional[Callable] = None,
+                 seed: int = 0):
+        self.jobs = job_process
+        self.spots = spot_process
+        self.k = k_cost
+        self.ctl = controller
+        self.preemption_prob = preemption_prob
+        self.notice = notice_hours
+        self.straggler_factor = straggler_factor
+        self.on_spot_run = on_spot_run
+        self.on_ondemand_run = on_ondemand_run
+        self.on_preempt = on_preempt
+        self.rng = np.random.default_rng(seed)
+        self.queue: deque[Job] = deque()
+        self.stats = ClusterStats()
+        self._t = 0.0
+        self._job_counter = 0
+        self._step_times: dict[int, float] = {}  # pod EWMA
+
+    # --------------------------------------------------------------- events
+    def _sample(self, proc: ArrivalProcess) -> float:
+        import jax
+
+        key = jax.random.key(int(self.rng.integers(2**31)))
+        return float(proc.sample(key))
+
+    def run(self, n_events: int, *, work_steps: int = 1) -> ClusterStats:
+        next_job = self._sample(self.jobs)
+        next_spot = self._sample(self.spots)
+        for _ in range(n_events):
+            if next_job <= next_spot:
+                self._t += next_job
+                next_spot -= next_job
+                next_job = self._sample(self.jobs)
+                self._job_arrival(work_steps)
+            else:
+                self._t += next_spot
+                next_job -= next_spot
+                next_spot = self._sample(self.spots)
+                self._spot_arrival()
+        return self.stats
+
+    def _job_arrival(self, work_steps: int) -> None:
+        self._job_counter += 1
+        job = Job(self._job_counter, self._t, work_steps)
+        if self.ctl.admit(len(self.queue), self.rng):
+            self.queue.append(job)  # Theorem 4: wait indefinitely
+        else:
+            self._run_ondemand(job)
+
+    def _spot_arrival(self) -> None:
+        if not self.queue:
+            return
+        job = self.queue.popleft()
+        delay = self._t - job.arrival_time
+        preempted = self.rng.random() < self.preemption_prob
+        if preempted:
+            # advance notice → checkpoint → re-admission (recovery = policy)
+            self.stats.preemptions += 1
+            self.stats.checkpoints += 1
+            if self.on_preempt is not None:
+                self.on_preempt(job)
+            self.stats.total_cost += 1.0  # the partial spot leg was paid
+            if self.ctl.admit(len(self.queue), self.rng):
+                self.stats.restores += 1
+                self.queue.append(dataclasses.replace(
+                    job, arrival_time=self._t))
+                self.stats.total_delay += delay
+                # completion will be counted when the retry finishes
+                self.ctl.on_job_complete(delay)
+                self.stats.jobs_completed += 1  # leg accounting
+            else:
+                self._run_ondemand(job, extra_delay=delay)
+            return
+        if self.on_spot_run is not None:
+            self.on_spot_run(job)
+        self.stats.jobs_completed += 1
+        self.stats.spot_served += 1
+        self.stats.total_cost += 1.0
+        self.stats.total_delay += delay
+        self.ctl.on_job_complete(delay)
+
+    def _run_ondemand(self, job: Job, extra_delay: float = 0.0) -> None:
+        if self.on_ondemand_run is not None:
+            self.on_ondemand_run(job)
+        self.stats.jobs_completed += 1
+        self.stats.ondemand_served += 1
+        self.stats.total_cost += self.k
+        self.stats.total_delay += extra_delay
+        self.ctl.on_job_complete(extra_delay)
+
+    # ----------------------------------------------------------- stragglers
+    def observe_step_time(self, pod_id: int, seconds: float) -> bool:
+        """EWMA straggler detector; returns True if the pod was evicted."""
+        prev = self._step_times.get(pod_id, seconds)
+        ewma = 0.7 * prev + 0.3 * seconds
+        self._step_times[pod_id] = ewma
+        if len(self._step_times) >= 2:
+            median = float(np.median(list(self._step_times.values())))
+            if ewma > self.straggler_factor * median:
+                self.stats.stragglers_evicted += 1
+                del self._step_times[pod_id]
+                return True
+        return False

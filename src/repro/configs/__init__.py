@@ -1,0 +1,42 @@
+"""Architecture registry: the 10 assigned architectures + paper-scheduler
+configs.  ``get_config(name)`` returns the exact published config;
+``get_config(name, smoke=True)`` returns the reduced same-family config used
+by CPU smoke tests."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import SHAPES, ModelConfig, ShapeCell
+
+_MODULES = {
+    "granite-20b": "repro.configs.granite_20b",
+    "qwen3-32b": "repro.configs.qwen3_32b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "qwen1.5-4b": "repro.configs.qwen15_4b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a27b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "whisper-small": "repro.configs.whisper_small",
+    "zamba2-1.2b": "repro.configs.zamba2_12b",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+    "mamba2-780m": "repro.configs.mamba2_780m",
+}
+
+ARCH_NAMES = list(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(_MODULES[name])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def supported_shapes(cfg: ModelConfig) -> list[str]:
+    """Which of the 4 assigned shape cells this arch runs.
+
+    long_500k requires sub-quadratic sequence mixing (SSM/hybrid families);
+    pure full-attention archs skip it (recorded as SKIP in the roofline
+    table, rationale in DESIGN.md §Arch-applicability).
+    """
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.subquadratic:
+        shapes.append("long_500k")
+    return shapes

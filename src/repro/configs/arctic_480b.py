@@ -1,0 +1,48 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual
+[hf:Snowflake/snowflake-arctic-base; hf].
+
+35L, d_model 7168, 56 heads (GQA kv=8), per-expert d_ff 4864, vocab 32000,
+MoE 128 experts top-2 with a dense residual MLP in parallel.  960 GB of bf16
+parameters ⇒ Adafactor optimizer (AdamW fp32 state would need 22 GB/chip on
+a 256-chip v5e pod — documented in EXPERIMENTS.md).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=4864,
+    moe_d_ff=4864,
+    num_experts=128,
+    num_experts_per_tok=2,
+    num_shared_experts=0,
+    dense_residual=True,
+    vocab_size=32000,
+    optimizer="adafactor",
+    fsdp=True,
+    train_accum=8,
+)
+
+SMOKE = ModelConfig(
+    name="arctic-480b-smoke",
+    family="moe",
+    num_layers=2,
+    d_model=128,
+    num_heads=8,
+    num_kv_heads=2,
+    d_ff=128,
+    moe_d_ff=64,
+    num_experts=8,
+    num_experts_per_tok=2,
+    num_shared_experts=0,
+    dense_residual=True,
+    vocab_size=512,
+    optimizer="adafactor",
+    capacity_factor=8.0,  # no token drops in smoke consistency tests
+    attn_chunk_q=32,
+    attn_chunk_k=32,
+)

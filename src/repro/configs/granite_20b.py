@@ -1,0 +1,33 @@
+"""granite-20b [dense] — llama-arch code model [arXiv:2405.04324; hf].
+
+52L, d_model 6144, 48 heads (GQA kv=1 — multi-query), d_ff 24576, vocab 49152.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b",
+    family="dense",
+    num_layers=52,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    mlp_variant="gelu",  # GPTBigCode-style 2-matrix MLP -> ~20B params
+    fsdp=True,
+    train_accum=8,
+)
+
+SMOKE = ModelConfig(
+    name="granite-20b-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=1,
+    d_ff=256,
+    vocab_size=512,
+    mlp_variant="gelu",
+    attn_chunk_q=32,
+    attn_chunk_k=32,
+)

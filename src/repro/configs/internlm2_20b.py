@@ -1,0 +1,31 @@
+"""internlm2-20b [dense] — GQA [arXiv:2403.17297; hf].
+
+48L, d_model 6144, 48 heads (GQA kv=8), d_ff 16384, vocab 92544.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-20b",
+    family="dense",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92544,
+    fsdp=True,
+    train_accum=8,
+)
+
+SMOKE = ModelConfig(
+    name="internlm2-20b-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=128,
+    num_heads=8,
+    num_kv_heads=2,
+    d_ff=256,
+    vocab_size=512,
+    attn_chunk_q=32,
+    attn_chunk_k=32,
+)

@@ -1,0 +1,45 @@
+"""qwen2-moe-a2.7b [moe] — 4 shared + 60 routed top-4
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf].
+
+24L, d_model 2048, 16 heads (kv=16), per-expert d_ff 1408, vocab 151936,
+MoE 60 experts top-4 + 4 always-on shared experts.  Routed experts are
+padded 60 → 64 under expert parallelism (padded experts masked in routing).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    moe_d_ff=1408,
+    num_experts=60,
+    num_experts_per_tok=4,
+    num_shared_experts=4,
+    vocab_size=151936,
+    qkv_bias=True,
+    fsdp=True,
+    train_accum=8,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-moe-a2.7b-smoke",
+    family="moe",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=64,
+    moe_d_ff=64,
+    num_experts=8,
+    num_experts_per_tok=2,
+    num_shared_experts=2,
+    vocab_size=512,
+    qkv_bias=True,
+    capacity_factor=8.0,  # no token drops in smoke consistency tests
+    attn_chunk_q=32,
+    attn_chunk_k=32,
+)

@@ -1,0 +1,41 @@
+"""qwen2-vl-72b [vlm] — M-RoPE, dynamic resolution [arXiv:2409.12191; hf].
+
+80L, d_model 8192, 64 heads (GQA kv=8), d_ff 29568, vocab 152064.
+Backbone only per the assignment: the patch/vision frontend is a STUB —
+``input_specs()`` supplies fused patch+token embeddings (B, S, 8192) and
+3-axis M-RoPE positions (3, B, S).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    mrope=True,
+    qkv_bias=True,
+    input_mode="embeddings",
+    optimizer="adafactor",
+    fsdp=True,
+    train_accum=8,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-vl-72b-smoke",
+    family="vlm",
+    num_layers=2,
+    d_model=128,
+    num_heads=8,
+    num_kv_heads=2,
+    d_ff=256,
+    vocab_size=512,
+    mrope=True,
+    qkv_bias=True,
+    input_mode="embeddings",
+    attn_chunk_q=32,
+    attn_chunk_k=32,
+)

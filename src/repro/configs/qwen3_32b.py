@@ -1,0 +1,38 @@
+"""qwen3-32b [dense] — qk_norm, GQA [hf:Qwen/Qwen3-8B; hf].
+
+64L, d_model 5120, 64 heads (GQA kv=8), d_ff 25600, vocab 151936.
+head_dim is 128 explicitly (Qwen3 decouples head_dim from d_model/num_heads;
+d_model/64 = 80 would be MXU-unaligned and does not match the HF config).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=25600,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    fsdp=True,
+    train_accum=8,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-32b-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=128,
+    num_heads=8,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=256,
+    vocab_size=512,
+    qk_norm=True,
+    attn_chunk_q=32,
+    attn_chunk_k=32,
+)

@@ -1,0 +1,37 @@
+"""whisper-small [audio] — enc-dec, conv frontend (stub)
+[arXiv:2212.04356; unverified].
+
+12L encoder + 12L decoder, d_model 768, 12 heads (kv=12), d_ff 3072,
+vocab 51865.  The mel/conv frontend is a STUB per the assignment:
+``input_specs()`` supplies precomputed frame embeddings (B, S, 768).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    num_layers=12,
+    num_encoder_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    mlp_variant="gelu",  # Whisper uses GELU MLPs
+    input_mode="tokens",  # decoder tokens; encoder takes stub frames
+)
+
+SMOKE = ModelConfig(
+    name="whisper-small-smoke",
+    family="encdec",
+    num_layers=2,
+    num_encoder_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=256,
+    vocab_size=512,
+    mlp_variant="gelu",
+    attn_chunk_q=32,
+    attn_chunk_k=32,
+)

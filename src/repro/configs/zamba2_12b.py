@@ -1,0 +1,40 @@
+"""zamba2-1.2b [hybrid] — Mamba2 + shared attention blocks
+[arXiv:2411.15242; hf].
+
+38 Mamba2 layers, d_model 2048, shared attention block (32 heads, MHA,
+d_ff 8192) applied every 6 layers with per-application KV caches,
+ssm_state 64, vocab 32000.  Sub-quadratic ⇒ runs the long_500k cell.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_headdim=64,
+    attn_every=6,
+    train_accum=4,
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-1.2b-smoke",
+    family="hybrid",
+    num_layers=4,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=256,
+    vocab_size=512,
+    ssm_state=16,
+    ssm_headdim=16,
+    ssm_chunk=16,
+    attn_every=2,
+    attn_chunk_q=32,
+    attn_chunk_k=32,
+)

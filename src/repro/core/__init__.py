@@ -1,0 +1,53 @@
+"""The paper's contribution: opportunistic spot/on-demand scheduling.
+
+Public API:
+  * arrival processes    — :mod:`repro.core.arrivals`
+  * cost laws            — :mod:`repro.core.cost` (Theorem 1)
+  * closed forms         — :mod:`repro.core.analytic` (Theorems 2, 5)
+  * wait-time theory     — :mod:`repro.core.waittime` (Theorem 3, Cor. 1-4)
+  * LP oracles           — :mod:`repro.core.lp`
+  * policies             — :mod:`repro.core.policies` (Theorem 4)
+  * simulators           — :mod:`repro.core.simulator`
+  * Algorithm 1          — :mod:`repro.core.adaptive`
+"""
+from repro.core.arrivals import (
+    ArrivalProcess,
+    BathtubGCP,
+    Deterministic,
+    Exponential,
+    Gamma,
+    Uniform,
+    prob_A_le_S,
+)
+from repro.core.adaptive import adaptive_admission_control
+from repro.core.analytic import (
+    mm1n_pi,
+    theorem2_cost,
+    theorem2_delta_max,
+    theorem5_cost,
+    theorem5_delta,
+)
+from repro.core.cost import cost_lower_bound, pi0_from_cost, theorem1_cost
+from repro.core.policies import SingleSlotPolicy, ThreePhasePolicy
+from repro.core.simulator import run_queue_sim, run_single_slot_sim
+from repro.core.waittime import (
+    DeterministicWait,
+    ExponentialWait,
+    InfiniteWait,
+    TwoPointWait,
+    laplace_target,
+    optimal_deterministic,
+    optimal_exp_rate,
+    optimal_two_point,
+)
+
+__all__ = [
+    "ArrivalProcess", "BathtubGCP", "Deterministic", "Exponential", "Gamma",
+    "Uniform", "prob_A_le_S", "adaptive_admission_control", "mm1n_pi",
+    "theorem2_cost", "theorem2_delta_max", "theorem5_cost", "theorem5_delta",
+    "cost_lower_bound", "pi0_from_cost", "theorem1_cost", "SingleSlotPolicy",
+    "ThreePhasePolicy", "run_queue_sim", "run_single_slot_sim",
+    "DeterministicWait", "ExponentialWait", "InfiniteWait", "TwoPointWait",
+    "laplace_target", "optimal_deterministic", "optimal_exp_rate",
+    "optimal_two_point",
+]

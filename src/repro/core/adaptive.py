@@ -1,0 +1,140 @@
+"""Algorithm 1 — Adaptive Admission Control Policy — as one jit'd scan.
+
+The learner runs the Theorem-4 three-phase policy at the current knob ``r``,
+measures the empirical average delay d(r) over a window of events, and takes
+a projected gradient step on the slack penalty L(r) = ½(d(r) − δ)²:
+
+    r ← clip(r − η·(d(r) − δ), 0, r_max)
+
+exactly as the paper's Algorithm 1 (the sign of ∂d/∂r is absorbed into η > 0
+since d(r) is increasing in r).  The outer window loop and the inner event
+loop are both ``lax.scan``s, so the full learning trajectory is one XLA
+program: deterministic given a PRNG key and cheap enough to run *on-device*
+next to a training loop.
+
+Beyond-paper (recorded in EXPERIMENTS.md): an optional 1/√n step-size decay
+(``eta_decay``) suppresses the stationary oscillation of constant-η SGD; and
+the window statistic optionally includes immediate on-demand dispatches
+(delay 0) exactly as the paper's d(r) does.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arrivals import ArrivalProcess
+from repro.core.simulator import (
+    WindowStats,
+    init_queue_carry,
+    run_queue_window,
+)
+
+
+class AdaptiveTrace(NamedTuple):
+    """Per-window trajectory (stacked over windows)."""
+
+    r: jax.Array  # knob before the window's update
+    window_delay: jax.Array  # d(r) measured in the window
+    window_cost: jax.Array  # average cost of jobs completed in the window
+    jobs: jax.Array
+    completed: jax.Array
+    spot_served: jax.Array
+    cost_sum: jax.Array
+    delay_sum: jax.Array
+    time: jax.Array
+    spot_arrivals: jax.Array
+    spot_found_empty: jax.Array
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "job", "spot", "k_cost", "rmax", "window_events", "n_windows",
+    ),
+)
+def _adaptive_jit(job, spot, k_cost, rmax, window_events, n_windows,
+                  delta, eta, eta_decay, r0, r_max, key):
+    carry0 = init_queue_carry(key, job, spot, rmax)
+
+    def outer(state, idx):
+        carry, r = state
+        carry, s = run_queue_window(
+            job, spot, k_cost, rmax, carry, r, window_events
+        )
+        completed = jnp.maximum(s.jobs_completed, 1).astype(jnp.float32)
+        d = s.delay_sum / completed
+        c = s.cost_sum / completed
+        step = eta / jnp.sqrt(1.0 + eta_decay * idx.astype(jnp.float32))
+        r_new = jnp.clip(r - step * (d - delta), 0.0, r_max)
+        trace = AdaptiveTrace(
+            r=r,
+            window_delay=d,
+            window_cost=c,
+            jobs=s.jobs_arrived,
+            completed=s.jobs_completed,
+            spot_served=s.spot_served,
+            cost_sum=s.cost_sum,
+            delay_sum=s.delay_sum,
+            time=s.time_elapsed,
+            spot_arrivals=s.spot_arrivals,
+            spot_found_empty=s.spot_found_empty,
+        )
+        return (carry, r_new), trace
+
+    (carry, r_final), traces = jax.lax.scan(
+        outer, (carry0, jnp.float32(r0)), jnp.arange(n_windows)
+    )
+    return r_final, traces
+
+
+def adaptive_admission_control(
+    job: ArrivalProcess,
+    spot: ArrivalProcess,
+    *,
+    k: float = 10.0,
+    delta: float,
+    eta: float = 0.05,
+    eta_decay: float = 0.0,
+    r0: float = 0.0,
+    r_max: float = 16.0,
+    window_events: int = 2048,
+    n_windows: int = 400,
+    rmax_slots: int = 64,
+    key: jax.Array,
+) -> dict:
+    """Run Algorithm 1; return the trajectory and running averages (float64).
+
+    Returns a dict with per-window arrays: ``r`` (knob), ``window_delay``,
+    ``window_cost``, and running averages ``running_cost`` / ``running_delay``
+    (cumulative, matching the paper's C(r(n)) and d(r(n)) plots), plus the
+    final knob ``r_star`` and Theorem-1 cross-check fields.
+    """
+    r_final, tr = _adaptive_jit(
+        job, spot, float(k), rmax_slots, window_events, n_windows,
+        jnp.float32(delta), jnp.float32(eta), jnp.float32(eta_decay),
+        jnp.float32(r0), jnp.float32(r_max), key,
+    )
+    t = jax.tree.map(lambda x: np.asarray(x, np.float64), tr)
+    cum_completed = np.maximum(np.cumsum(t.completed), 1.0)
+    running_cost = np.cumsum(t.cost_sum) / cum_completed
+    running_delay = np.cumsum(t.delay_sum) / cum_completed
+    spot_arr = np.maximum(np.cumsum(t.spot_arrivals), 1.0)
+    pi0_spot = np.cumsum(t.spot_found_empty) / spot_arr
+    return {
+        "r": t.r,
+        "r_star": float(r_final),
+        "window_delay": t.window_delay,
+        "window_cost": t.window_cost,
+        "running_cost": running_cost,
+        "running_delay": running_delay,
+        "pi0_spot": pi0_spot,
+        "final_cost": float(running_cost[-1]),
+        "final_delay": float(running_delay[-1]),
+        "final_pi0": float(pi0_spot[-1]),
+        "jobs_total": float(np.sum(t.jobs)),
+        "time_total": float(np.sum(t.time)),
+    }

@@ -1,0 +1,36 @@
+"""Cost laws (Theorem 1) and empirical cost accounting.
+
+Theorem 1: for *any* scheduling policy over a G/G/1 spot queue in steady
+state,
+
+    E[C] = k − (k−1) · (E[A]/E[S_μ]) · (1 − π₀) = k − (k−1) · (μ/λ) · (1 − π₀)
+
+where π₀ is the steady-state probability that a spot arrival finds the queue
+empty.  The whole optimization therefore reduces to maximizing spot-slot
+utilization (1 − π₀) subject to the delay constraint.
+"""
+from __future__ import annotations
+
+
+def theorem1_cost(k: float, lam: float, mu: float, pi0: float) -> float:
+    """E[C] from the empty-queue probability (Theorem 1)."""
+    return k - (k - 1.0) * (mu / lam) * (1.0 - pi0)
+
+
+def pi0_from_cost(k: float, lam: float, mu: float, cost: float) -> float:
+    """Invert Theorem 1: recover π₀ implied by an observed average cost."""
+    return 1.0 - (k - cost) / ((k - 1.0) * (mu / lam))
+
+
+def spot_utilization_bound(lam: float, mu: float, delta: float) -> float:
+    """Knapsack-LP bound on (1−π₀): min(1, λδ) (Section IV, eqs. 9-11).
+
+    With Little's law E[N] = λ·E[T] ≤ λδ and π_n ≤ coefficients increasing
+    in n, the abstract LP's optimum is Σπ_n = min(1, λδ).
+    """
+    return min(1.0, lam * delta)
+
+
+def cost_lower_bound(k: float, lam: float, mu: float, delta: float) -> float:
+    """Policy-independent lower bound on E[C] from Theorem 1 + the LP bound."""
+    return k - (k - 1.0) * (mu / lam) * spot_utilization_bound(lam, mu, delta)

@@ -1,0 +1,64 @@
+"""Scheduling policies from the paper, as composable descriptors.
+
+The central object is the Theorem-4 **three-phase policy** parameterized by a
+single continuous knob ``r = N̂ + q`` (eq. 12):
+
+  * queue length  < N̂ : admit, wait indefinitely (X = ∞)   [phase 1]
+  * queue length == N̂ : admit with probability q = r − N̂    [phase 2]
+  * queue length  > N̂ : dispatch straight to on-demand      [phase 3]
+
+``SingleSlotPolicy`` is the strong-delay-regime specialization (Theorems 2/3):
+queue capped at one with an explicit maximal-wait distribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.waittime import WaitTime, InfiniteWait
+
+
+@dataclasses.dataclass(frozen=True)
+class ThreePhasePolicy:
+    """Theorem-4 greedy policy with fractional admission knob ``r``."""
+
+    r: float
+
+    @property
+    def n_hat(self) -> int:
+        return int(math.floor(self.r))
+
+    @property
+    def q(self) -> float:
+        return self.r - math.floor(self.r)
+
+    def admit_prob(self, qlen: int) -> float:
+        if qlen < self.n_hat:
+            return 1.0
+        if qlen == self.n_hat:
+            return self.q
+        return 0.0
+
+    def admit_prob_traced(self, qlen: jax.Array, r: jax.Array) -> jax.Array:
+        n_hat = jnp.floor(r)
+        qf = qlen.astype(jnp.float32)
+        return jnp.where(qf < n_hat, 1.0, jnp.where(qf == n_hat, r - n_hat, 0.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class SingleSlotPolicy:
+    """Queue-length ≤ 1 with maximal wait-time distribution (Theorems 2/3)."""
+
+    wait: WaitTime = InfiniteWait()
+
+    def admit_prob(self, qlen: int) -> float:
+        return 1.0 if qlen == 0 else 0.0
+
+
+def phase_boundaries(r: float) -> tuple[int, float]:
+    """(N̂, q) decomposition of the fractional queue cap."""
+    n_hat = int(math.floor(r))
+    return n_hat, r - n_hat

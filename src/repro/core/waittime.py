@@ -1,0 +1,142 @@
+"""Maximal wait-time distributions and their paper-optimal constructors.
+
+Theorem 3 reduces the choice of the single-slot policy to the choice of the
+*maximal wait time* distribution f_X.  The corollaries give closed forms:
+
+  * Corollary 1 (finite-support spot, S ∈ [0, L]): optimal X puts mass only
+    at {0} and [L, ∞) with P(X ≥ L) = μδ/(1 − λδ)  →  :func:`optimal_two_point`.
+  * Corollary 3 (exponential spot): any f_X with Laplace transform
+    L{f_X}(μ) = (1 − (λ+μ)δ)/(1 − λδ) is optimal → :func:`laplace_target`.
+  * Remark 2: within the exponential family X ~ Exp(φ), φ = 1/δ − (μ + λ)
+    →  :func:`optimal_exp_rate`.
+  * Corollary 4 (min-max wait): the unique deterministic optimum
+    X = (1/μ)·log[(1−λδ)/(1−(λ+μ)δ)]  →  :func:`optimal_deterministic`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+_INF = 3e38
+
+
+@dataclasses.dataclass(frozen=True)
+class WaitTime:
+    """Static descriptor of the maximal-wait distribution X (traceable)."""
+
+    def sample(self, key: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def mean(self) -> float:
+        raise NotImplementedError
+
+    def laplace(self, s: float) -> float:
+        """E[e^{-sX}] where defined (used to check Corollary 3)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class InfiniteWait(WaitTime):
+    """X = ∞ — wait indefinitely for a spot slot (Theorem 4 phases 1-2)."""
+
+    def sample(self, key):
+        del key
+        return jnp.asarray(_INF, jnp.float32)
+
+    def mean(self):
+        return math.inf
+
+    def laplace(self, s):
+        return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoPointWait(WaitTime):
+    """X = ``value`` w.p. ``p`` else 0 (Corollary 1 / Remark 1)."""
+
+    p: float
+    value: float
+
+    def sample(self, key):
+        take = jax.random.uniform(key) < self.p
+        return jnp.where(take, jnp.float32(self.value), jnp.float32(0.0))
+
+    def mean(self):
+        return self.p * self.value
+
+    def laplace(self, s):
+        return (1.0 - self.p) + self.p * math.exp(-s * self.value)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExponentialWait(WaitTime):
+    rate_: float
+
+    def sample(self, key):
+        return jax.random.exponential(key, dtype=jnp.float32) / self.rate_
+
+    def mean(self):
+        return 1.0 / self.rate_
+
+    def laplace(self, s):
+        return self.rate_ / (self.rate_ + s)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeterministicWait(WaitTime):
+    value: float
+
+    def sample(self, key):
+        del key
+        return jnp.asarray(self.value, jnp.float32)
+
+    def mean(self):
+        return self.value
+
+    def laplace(self, s):
+        return math.exp(-s * self.value)
+
+
+# ---------------------------------------------------------------------------
+# Paper-optimal constructors
+# ---------------------------------------------------------------------------
+
+
+def strong_delay_bound(p_A_le_S: float, lam: float) -> float:
+    """Theorem 2's regime boundary: δ ≤ P(A ≤ S_μ)/λ."""
+    return p_A_le_S / lam
+
+
+def optimal_two_point(lam: float, mu: float, delta: float, L: float) -> TwoPointWait:
+    """Corollary 1 + Remark 1: mass p at L (min-max choice), 1-p at 0."""
+    p = mu * delta / (1.0 - lam * delta)
+    if not 0.0 <= p <= 1.0:
+        raise ValueError(
+            f"infeasible two-point mass p={p:.4f} (λ={lam}, μ={mu}, δ={delta})"
+        )
+    return TwoPointWait(p=p, value=L)
+
+
+def laplace_target(lam: float, mu: float, delta: float) -> float:
+    """Corollary 3: required L{f_X}(μ) for optimality under Exp(μ) spot."""
+    return (1.0 - (lam + mu) * delta) / (1.0 - lam * delta)
+
+
+def optimal_exp_rate(lam: float, mu: float, delta: float) -> ExponentialWait:
+    """Remark 2: X ~ Exp(φ) with φ = 1/δ − (μ + λ)."""
+    phi = 1.0 / delta - (mu + lam)
+    if phi <= 0:
+        raise ValueError(f"δ={delta} too large for exponential wait (φ={phi:.4f})")
+    return ExponentialWait(rate_=phi)
+
+
+def optimal_deterministic(lam: float, mu: float, delta: float) -> DeterministicWait:
+    """Corollary 4: unique min-max-wait optimum (deterministic)."""
+    num = 1.0 - lam * delta
+    den = 1.0 - (lam + mu) * delta
+    if den <= 0:
+        raise ValueError(f"δ={delta} outside the strong-delay regime")
+    return DeterministicWait(value=math.log(num / den) / mu)

@@ -1,0 +1,61 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Int8 quantization with per-tensor scale + error-feedback residual: the
+quantization error of step t is added back to the gradient at step t+1, so
+the *accumulated* update is unbiased (Seide et al. / 1-bit SGD lineage;
+convergence verified in tests/test_distributed.py on a real model).
+
+Wire format: a real multi-pod runtime ships the int8 payload + one fp32
+scale per tensor over DCN — a 2× reduction vs bf16 gradients (4× vs fp32).
+The roofline accounting in EXPERIMENTS.md applies this ratio to the
+gradient all-reduce bytes when ``compress_grads`` is enabled; inside XLA the
+collective itself still moves the dequantized values (XLA has no int8
+all-reduce with wide accumulation), which we note as a runtime-integration
+gap rather than an algorithmic one.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: dict  # error-feedback carry, same shapes as grads (fp32)
+
+
+def ef_init(params) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x fp -> (int8 payload, fp32 scale).  Symmetric per-tensor."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef: EFState) -> tuple[dict, EFState, dict]:
+    """Apply EF-int8 compression; returns (compressed grads, new EF state,
+    diagnostics).  The returned grads are the dequantized values a receiver
+    would reconstruct — feed them to the optimizer."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, scale = quantize_int8(gf)
+        dq = dequantize_int8(q, scale)
+        return dq.astype(g.dtype), gf - dq
+
+    out = jax.tree.map(one, grads, ef.residual)
+    new_grads = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+    new_res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    diag = {"compression_ratio": 2.0}  # bf16 -> int8 payload
+    return new_grads, EFState(residual=new_res), diag

@@ -1,0 +1,100 @@
+"""Single-token GQA decode-attention Pallas kernel.
+
+Decode attention is memory-bound: one query token streams the whole KV cache
+(S·KH·D·2 bytes) through VMEM at ~zero arithmetic intensity.  The kernel's
+job is pure bandwidth: KV tiles of (bk, D) are streamed per (batch·kv-head)
+grid row while the (g, D) output accumulates in VMEM scratch — no (S)-sized
+intermediate ever exists in HBM.
+
+grid = (B·KH, num_kv_blocks), KV innermost so scratch persists per row.
+``kv_len`` is a traced scalar (SMEM) so one compiled kernel serves any cache
+fill level — tiles beyond kv_len are skipped entirely (bandwidth saving,
+not just masking).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, bk: int, nk: int):
+    """q_ref (1, g, D); k_ref/v_ref (1, bk, D); o_ref (1, g, D)."""
+    kj = pl.program_id(1)
+    kv_len = len_ref[0]
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_first = kj * bk
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)  # (g, D)
+        k = k_ref[0].astype(jnp.float32)  # (bk, D)
+        scale = 1.0 / math.sqrt(q.shape[-1])
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_first + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < kv_len, s, _NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        m_scr[...] = m_new
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[..., None] + pv
+
+    # skip tiles entirely past the fill level — saves bandwidth, not just math
+    pl.when(k_first < kv_len)(compute)
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def decode_attention_bh(q, k, v, kv_len, *, block_k: int = 512,
+                        interpret: bool = True) -> jax.Array:
+    """q (BH, g, D); k/v (BH, S, D); kv_len scalar int32 -> (BH, g, D)."""
+    BH, g, D = q.shape
+    S = k.shape[1]
+    bk = min(block_k, S)
+    if S % bk:
+        raise ValueError(f"S={S} must tile by {bk}")
+    nk = S // bk
+    kernel = functools.partial(_decode_kernel, bk=bk, nk=nk)
+    len_arr = jnp.reshape(jnp.asarray(kv_len, jnp.int32), (1,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BH, nk),
+        in_specs=[
+            pl.BlockSpec((1, g, D), lambda b, j, *_: (b, 0, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, j, *_: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, j, *_: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, D), lambda b, j, *_: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, g, D), q.dtype),
+        interpret=interpret,
+    )(len_arr, q, k, v)

@@ -1,0 +1,24 @@
+"""jit'd public wrapper for the decode-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention_bh
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k, v, kv_len, *, block_k: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """q (B, 1, H, D); k/v (B, S, KH, D); kv_len scalar -> (B, 1, H, D)."""
+    B, _, H, D = q.shape
+    S, KH = k.shape[1], k.shape[2]
+    g = H // KH
+    qr = q.reshape(B, KH, g, D).reshape(B * KH, g, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KH, S, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KH, S, D)
+    o = decode_attention_bh(qr, kr, vr, kv_len, block_k=block_k,
+                            interpret=interpret)
+    return o.reshape(B, KH, g, D).reshape(B, 1, H, D)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, kv_len) -> jax.Array:
+    """q (B, 1, H, D); k/v (B, S, KH, D); kv_len scalar -> (B, 1, H, D)."""
+    B, _, H, D = q.shape
+    S, KH = k.shape[1], k.shape[2]
+    g = H // KH
+    qg = q.reshape(B, KH, g, D).astype(jnp.float32)
+    s = jnp.einsum("bngd,bsnd->bngs", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    valid = jnp.arange(S) < kv_len
+    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    y = jnp.einsum("bngs,bsnd->bngd", p, v.astype(jnp.float32))
+    return y.reshape(B, 1, H, D).astype(q.dtype)

@@ -1,0 +1,123 @@
+"""Flash-attention Pallas TPU kernel (GQA-aware, causal).
+
+Tiling: grid = (B·KH, num_q_blocks, num_kv_blocks); the KV-block axis is the
+innermost (fastest) grid dimension, so the VMEM scratch accumulators (m, l,
+acc) persist across KV blocks of one Q block — the classic TPU "revisiting"
+flash-attention schedule.  Q tiles carry the whole GQA group ``g = H/KH`` so
+each K/V tile is loaded into VMEM once per *group* instead of once per query
+head (the memory win GQA exists for).
+
+Block shapes target the MXU: Q tile (g·bq, D) × K tile (bk, D) with bq, bk
+multiples of 128 at production sizes (tests sweep smaller shapes in interpret
+mode).  fp32 accumulation throughout; logits never leave VMEM.
+
+Causal masking: KV tiles strictly in the future of a whole Q tile are skipped
+with ``pl.when`` (compute guard — the grid itself stays rectangular, as
+Pallas TPU requires); the diagonal tile applies the element mask.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, nk: int, causal: bool, q_offset: int,
+                  sk_valid: int):
+    """One (bh, qi, kj) grid step.
+
+    q_ref (1, g, bq, D); k_ref/v_ref (1, bk, D); o_ref (1, g, bq, D);
+    scratch m/l (g, bq), acc (g, bq, D), fp32.
+    """
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_first = q_offset + qi * bq  # global position of this Q tile's first row
+    k_first = kj * bk
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)  # (g, bq, D)
+        k = k_ref[0].astype(jnp.float32)  # (bk, D)
+        scale = 1.0 / math.sqrt(q.shape[-1])
+        s = jax.lax.dot_general(
+            q, k, (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (g, bq, bk)
+        kpos = k_first + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        mask = kpos < sk_valid
+        if causal:
+            qpos = q_first + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            mask &= qpos >= kpos
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        m_scr[...] = m_new
+        v = v_ref[0].astype(jnp.float32)  # (bk, D)
+        pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr[..., None] + pv
+
+    if causal:
+        # skip KV tiles strictly in the causal future of the whole Q tile
+        pl.when(k_first <= q_first + bq - 1)(compute)
+    else:
+        compute()
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def flash_attention_bh(q, k, v, *, causal: bool = True, block_q: int = 128,
+                       block_k: int = 128, q_offset: int = 0,
+                       sk_valid: Optional[int] = None,
+                       interpret: bool = True) -> jax.Array:
+    """q (BH, g, Sq, D); k/v (BH, Sk, D) -> (BH, g, Sq, D)."""
+    BH, g, Sq, D = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    if Sq % bq or Sk % bk:
+        raise ValueError(f"Sq={Sq}/Sk={Sk} must tile by ({bq},{bk})")
+    nq = Sq // bq
+    nk = Sk // bk
+    sk_valid = Sk if sk_valid is None else sk_valid
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+        q_offset=q_offset, sk_valid=sk_valid,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, g, bq, D), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, bq, D), lambda b, i, j: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, g, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, bq), jnp.float32),
+            pltpu.VMEM((g, bq), jnp.float32),
+            pltpu.VMEM((g, bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

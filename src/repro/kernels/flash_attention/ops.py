@@ -1,0 +1,34 @@
+"""jit'd public wrapper: (B, S, H, D) layout -> kernel's (B·KH, g, S, D)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bh
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "q_offset", "sk_valid",
+                     "interpret"),
+)
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, q_offset: int = 0,
+                    sk_valid: Optional[int] = None,
+                    interpret: bool = True) -> jax.Array:
+    """GQA flash attention.  q (B,Sq,H,D); k/v (B,Sk,KH,D) -> (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    g = H // KH
+    qr = q.reshape(B, Sq, KH, g, D).transpose(0, 2, 3, 1, 4)  # (B,KH,g,Sq,D)
+    qr = qr.reshape(B * KH, g, Sq, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KH, Sk, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KH, Sk, D)
+    o = flash_attention_bh(qr, kr, vr, causal=causal, block_q=block_q,
+                           block_k=block_k, q_offset=q_offset,
+                           sk_valid=sk_valid, interpret=interpret)
+    o = o.reshape(B, KH, g, Sq, D).transpose(0, 3, 1, 2, 4)
+    return o.reshape(B, Sq, H, D)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                  sk_valid: Optional[int] = None) -> jax.Array:
+    """q (B, Sq, H, D); k/v (B, Sk, KH, D) -> (B, Sq, H, D), fp32 math."""
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    g = H // KH
+    qg = q.reshape(B, Sq, KH, g, D).astype(jnp.float32)
+    s = jnp.einsum("bqngd,bsnd->bqngs", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)
+        mask &= qpos[:, None] >= kpos[None, :]
+    if sk_valid is not None:
+        mask &= kpos[None, :] < sk_valid
+    s = jnp.where(mask[None, :, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    y = jnp.einsum("bqngs,bsnd->bqngd", p, v.astype(jnp.float32))
+    return y.reshape(B, Sq, H, D).astype(q.dtype)

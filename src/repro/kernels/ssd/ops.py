@@ -1,0 +1,16 @@
+"""jit'd public wrapper for the SSD kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd.ssd import ssd_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a_log, d_skip, b_in, c_in, *, chunk: int = 256,
+        interpret: bool = True) -> jax.Array:
+    """Mamba2 SSD: x (B,L,H,P); dt (B,L,H); b/c (B,L,N) -> (B,L,H,P)."""
+    return ssd_pallas(x, dt, a_log, d_skip, b_in, c_in, chunk=chunk,
+                      interpret=interpret)

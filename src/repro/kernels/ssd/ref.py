@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for the SSD kernel: the O(L) sequential recurrence."""
+from repro.layers.ssm import ssd_reference as ssd_ref  # noqa: F401

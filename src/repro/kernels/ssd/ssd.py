@@ -1,0 +1,104 @@
+"""Mamba2 SSD (state-space dual) chunked-scan Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm (the Mamba2 paper's own formulation —
+the CUDA selective scan has no TPU analogue; SSD's chunk decomposition is
+the MXU-native equivalent):
+
+  per chunk c of length Q:      (all dense matmuls → MXU)
+    Y_diag = (L ⊙ (C Bᵀ)) · (x·dt)          intra-chunk, (Q×Q)·(Q×P)
+    Y_off  = (C · h_prev) ⊙ exp(cum)        inter-chunk read
+    S_c    = (B ⊙ decay_rest)ᵀ · (x·dt)     chunk state contribution
+    h      = exp(cum_Q)·h_prev + S_c        O(P·N) recurrence in VMEM scratch
+
+grid = (B, H, num_chunks) with the chunk axis innermost: the recurrent state
+h (P×N fp32) lives in VMEM scratch across the whole sequence of one (batch,
+head) pair and never round-trips to HBM — the kernel streams x/dt/B/C tiles
+in and Y tiles out at exactly their HBM footprint.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, d_ref, b_ref, c_ref, y_ref, h_scr, *,
+                q_chunk: int):
+    """One (b, h, c) grid step.
+
+    x_ref (1, Q, 1, P); dt_ref (1, Q, 1); a_ref/d_ref (1,);
+    b_ref/c_ref (1, Q, N); y_ref (1, Q, 1, P); h_scr (P, N) fp32.
+    """
+    cj = pl.program_id(2)
+
+    @pl.when(cj == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    b_in = b_ref[0].astype(jnp.float32)  # (Q, N)
+    c_in = c_ref[0].astype(jnp.float32)  # (Q, N)
+    a_neg = -jnp.exp(a_ref[0].astype(jnp.float32))  # scalar A < 0
+    d_skip = d_ref[0].astype(jnp.float32)
+
+    da = dt * a_neg  # (Q,)
+    cum = jnp.cumsum(da)  # (Q,) inclusive
+    seg = cum[:, None] - cum[None, :]  # (Q, Q)
+    qi = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 1)
+    decay = jnp.where(qi >= kj, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(c_in, b_in, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q,Q)
+    xdt = x * dt[:, None]  # (Q, P)
+    y_diag = jax.lax.dot_general(scores * decay, xdt,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    # inter-chunk: read h_prev, emit, then update
+    h_prev = h_scr[...]  # (P, N)
+    decay_in = jnp.exp(cum)  # (Q,)
+    y_off = jax.lax.dot_general(c_in, h_prev, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_off = y_off * decay_in[:, None]  # (Q, P)
+
+    decay_rest = jnp.exp(cum[-1] - cum)  # (Q,)
+    bw = b_in * decay_rest[:, None]  # (Q, N)
+    s_c = jax.lax.dot_general(xdt, bw, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    h_scr[...] = h_prev * jnp.exp(cum[-1]) + s_c
+
+    y = y_diag + y_off + d_skip * x
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd_pallas(x, dt, a_log, d_skip, b_in, c_in, *, chunk: int = 256,
+               interpret: bool = True) -> jax.Array:
+    """x (B, L, H, P); dt (B, L, H) fp32; b/c (B, L, N) -> y (B, L, H, P)."""
+    B, L, H, P = x.shape
+    N = b_in.shape[-1]
+    Q = min(chunk, L)
+    if L % Q:
+        raise ValueError(f"L={L} must tile by chunk={Q}")
+    nc = L // Q
+    kernel = functools.partial(_ssd_kernel, q_chunk=Q)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, L, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_log, d_skip, b_in, c_in)

@@ -1,0 +1,75 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Debug tool: lower one cell and print the largest HLO buffers + where
+they come from (op kind + metadata), to localize memory blow-ups."""
+import argparse
+import collections
+import re
+
+_DT = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "pred": 1, "s8": 1,
+       "f16": 2, "s64": 8, "u8": 1}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--min-gib", type=float, default=0.25)
+    args = ap.parse_args()
+
+    from repro.launch import dryrun as dr
+
+    cfg_mp = args.mesh == "multi"
+    # reuse run_cell's lowering path but keep the compiled object
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    # monkeypatch: capture hlo text via run_cell? simpler: inline lower
+    import dataclasses as _dc
+
+    from repro.configs import get_config
+    from repro.models.config import SHAPES
+
+    art_holder = {}
+    orig_stats = dr.collective_stats
+
+    def capture(hlo):
+        art_holder["hlo"] = hlo
+        return orig_stats(hlo)
+
+    dr.collective_stats = capture
+    art = dr.run_cell(args.arch, args.shape, cfg_mp)
+    hlo = art_holder["hlo"]
+
+    counts = collections.Counter()
+    examples = {}
+    for line in hlo.splitlines():
+        m = re.search(r"=\s*([a-z0-9]+)\[([0-9,]+)\]\S*\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        dt, dims, op = m.groups()
+        if dt not in _DT:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        b = n * _DT[dt]
+        if b < args.min_gib * 2**30:
+            continue
+        key = f"{dt}[{dims}] {b/2**30:6.2f}GiB op={op}"
+        counts[key] += 1
+        if key not in examples:
+            meta = re.search(r'op_name="([^"]*)"', line)
+            examples[key] = meta.group(1)[:120] if meta else ""
+    print(f"peak estimate: {art['memory']['peak_bytes_estimate']/2**30:.2f} "
+          f"GiB (args {art['memory']['argument_bytes']/2**30:.2f}, temp "
+          f"{art['memory']['temp_bytes']/2**30:.2f}, alias "
+          f"{art['memory']['alias_bytes']/2**30:.2f})")
+    for key, c in counts.most_common(args.top):
+        print(f"{c:4d} x {key}\n        {examples[key]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,346 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, record memory/cost/collective artifacts.
+
+MUST be the process entrypoint (the XLA_FLAGS line above runs before any
+other import — jax locks the device count at first init).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+      --shape train_4k --mesh single            # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both  # everything
+
+Artifacts land in experiments/artifacts/<arch>__<shape>__<mesh>.json and are
+the single source of truth for EXPERIMENTS.md §Dry-run/§Roofline.  Completed
+cells are skipped on re-run (--force overrides).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_config, supported_shapes
+from repro.distributed.sharding import (
+    batch_specs,
+    cache_specs,
+    param_specs,
+    zero1_state_specs,
+)
+from repro.launch.hlo_analysis import collective_stats, program_stats
+from repro.launch.mesh import batch_axes_of, make_production_mesh, mesh_sizes
+from repro.models.base import ParallelContext
+from repro.models.config import SHAPES
+from repro.models.registry import build_model, input_specs
+from repro.optim.adafactor import AdafactorState
+from repro.optim.adamw import AdamWState
+from repro.train.steps import abstract_train_state, make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "experiments", "artifacts")
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def opt_state_specs(opt_state_abs, pspecs, params_abs, *, data_axes,
+                    data_size, zero1: bool):
+    """Specs for optimizer state mirroring the param spec tree."""
+    base = zero1_state_specs(pspecs, params_abs, data_axes=data_axes,
+                             data_size=data_size) if zero1 else pspecs
+    if isinstance(opt_state_abs, AdamWState):
+        return AdamWState(m=base, v=base, count=P())
+    if isinstance(opt_state_abs, AdafactorState):
+        def drop_last(spec, leaf_p, leaf_s):
+            dims = list(spec) + [None] * (len(leaf_p.shape) - len(spec))
+            return P(*dims[:-1]) if len(leaf_p.shape) >= 2 else P(*dims)
+
+        def drop_second_last(spec, leaf_p, leaf_s):
+            dims = list(spec) + [None] * (len(leaf_p.shape) - len(spec))
+            if len(leaf_p.shape) >= 2:
+                return P(*(dims[:-2] + dims[-1:]))
+            return P(None)
+
+        vr = jax.tree.map(drop_last, pspecs, params_abs, params_abs,
+                          is_leaf=lambda x: isinstance(x, P))
+        vc = jax.tree.map(drop_second_last, pspecs, params_abs, params_abs,
+                          is_leaf=lambda x: isinstance(x, P))
+        return AdafactorState(m=base, vr=vr, vc=vc, count=P())
+    raise TypeError(type(opt_state_abs))
+
+
+def batch_divisible_specs(batch_abs, batch_axes, mesh):
+    """Replicate the batch dim when it does not divide the DP shards."""
+    n = 1
+    for a in batch_axes:
+        n *= mesh.shape[a]
+    specs = batch_specs(batch_abs, batch_axes)
+
+    def fix(spec, leaf):
+        dims = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, d in enumerate(dims):
+            if d == batch_axes or d == batch_axes[0]:
+                if leaf.shape[i] % n:
+                    dims[i] = None
+        return P(*dims)
+
+    return jax.tree.map(fix, specs, batch_abs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def tpu_native_activation_bytes(cfg, cell, *, dp_size: int,
+                                model_size: int) -> int:
+    """Analytic bf16-native workspace model (per device).
+
+    The CPU host backend's float-normalization pass shadows bf16 buffers
+    touched by float ops with fp32 copies, inflating ``memory_analysis()``
+    for train cells by ~2-3×; TPU compiles bf16 natively.  This model counts
+    the real resident set: the per-layer residual carry stack (scan AD saves
+    the bf16 layer inputs), a few in-flight activation tensors, the CE
+    logits chunk, fp32 gradient accumulators, and MoE dispatch buffers.
+    Reported as ``tpu_peak_model`` next to the raw number (§Dry-run).
+    """
+    D = cfg.d_model
+    if cell.kind == "train":
+        micro_rows = max(cell.global_batch // max(cfg.train_accum, 1), 1)
+        rows = max(micro_rows // dp_size, 1)
+        toks = rows * cell.seq_len
+        layers = cfg.num_layers + (cfg.num_encoder_layers or 0)
+        stack = layers * toks * D * 2  # bf16 residual carries
+        work = 6 * toks * D * 2  # a few live activation tensors
+        ce_chunk = (toks // 16) * max(cfg.vocab_size // model_size, 1) * 4
+        moe = 0
+        if cfg.family == "moe":
+            cap = int(toks * cfg.num_experts_per_tok * cfg.capacity_factor)
+            moe = 3 * cap * max(D, cfg.moe_d_ff) * 2
+        shards = dp_size * model_size if cfg.fsdp else model_size
+        grad_acc = (cfg.param_count() * 4 // shards
+                    if cfg.train_accum > 1 else 0)
+        return int(stack + work + ce_chunk + moe + grad_acc)
+    kh = max(cfg.num_kv_heads, 1)
+    hd = cfg.resolved_head_dim
+    shard = model_size if (kh % model_size == 0 or hd % model_size == 0) \
+        else 1
+    if cell.kind == "prefill":
+        rows = max(cell.global_batch // dp_size, 1)
+        toks = rows * cell.seq_len
+        work = 8 * toks * D * 2
+        cache = 2 * cfg.num_layers * toks * kh * hd * 2 // shard
+        return int(work + cache)
+    # decode: per-layer slice workspace only (cache is in argument bytes)
+    rows = max(cell.global_batch // dp_size, 1)
+    return int(4 * rows * cell.seq_len * kh * hd * 4 // shard)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, **overrides)
+    cell = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    baxes = batch_axes_of(mesh)
+    sizes = mesh_sizes(mesh)
+    dp_size = 1
+    for a in baxes:
+        dp_size *= sizes[a]
+    ctx = ParallelContext(mesh=mesh, batch_axes=baxes)
+    model = build_model(cfg, ctx)
+
+    params_abs = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    pspecs = param_specs(params_abs, model_size=sizes["model"],
+                         num_heads=cfg.num_heads,
+                         num_kv_heads=cfg.num_kv_heads)
+    if cfg.fsdp:  # ZeRO-3: params additionally sharded over the data axis
+        pspecs = zero1_state_specs(pspecs, params_abs, data_axes=baxes,
+                                   data_size=dp_size)
+    specs = input_specs(cfg, cell)
+    bspecs = batch_divisible_specs(specs["batch"], baxes, mesh)
+    t0 = time.time()
+
+    with mesh:
+        if cell.kind == "train":
+            state_abs = abstract_train_state(model)
+            ospecs = opt_state_specs(
+                state_abs.opt_state, pspecs, params_abs,
+                data_axes=baxes, data_size=dp_size,
+                zero1=cfg.zero1_optimizer_sharding)
+            from repro.train.steps import TrainState
+
+            sspecs = TrainState(params=pspecs, opt_state=ospecs,
+                                ef_state=None, step=P())
+            import jax.numpy as _jnp
+
+            train_step = make_train_step(
+                model, accum_steps=cfg.train_accum,
+                accum_dtype=_jnp.bfloat16
+                if cfg.grad_accum_dtype == "bfloat16" else _jnp.float32)
+            metric_specs = {"loss": P(), "grad_norm": P(), "lr": P(),
+                            "ce": P(), "aux": P()}
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(_ns(mesh, sspecs), _ns(mesh, bspecs)),
+                out_shardings=(_ns(mesh, sspecs), _ns(mesh, metric_specs)),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_abs, specs["batch"])
+        elif cell.kind == "prefill":
+            jitted = jax.jit(
+                model.prefill,
+                in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs)),
+            )
+            lowered = jitted.lower(params_abs, specs["batch"])
+        else:  # decode
+            cspecs = cache_specs(specs["cache"], batch_axes=baxes,
+                                 model_size=sizes["model"],
+                                 shard_kv_seq=cfg.shard_kv_seq)
+            # batch dim of the cache must also respect divisibility
+            def fix_cache(spec, leaf):
+                dims = list(spec) + [None] * (len(leaf.shape) - len(spec))
+                n = 1
+                for a in baxes:
+                    n *= mesh.shape[a]
+                for i, d in enumerate(dims):
+                    if (d == baxes or d == baxes[0]) and leaf.shape[i] % n:
+                        dims[i] = None
+                return P(*dims)
+
+            cspecs = jax.tree.map(fix_cache, cspecs, specs["cache"],
+                                  is_leaf=lambda x: isinstance(x, P))
+            jitted = jax.jit(
+                model.decode_step,
+                in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs),
+                              _ns(mesh, cspecs)),
+                out_shardings=(None, _ns(mesh, cspecs)),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_abs, specs["batch"], specs["cache"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    prog = program_stats(hlo)  # loop-aware (cost_analysis misses nesting)
+
+    artifact = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multipod_2x16x16" if multi_pod else "pod_16x16",
+        "chips": 512 if multi_pod else 256,
+        "cell": {"seq_len": cell.seq_len, "global_batch": cell.global_batch,
+                 "kind": cell.kind},
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": prog.flops_per_device,
+        "bytes_accessed_per_device": prog.bytes_per_device,
+        "xla_cost_flops_per_device": cost.get("flops", 0.0),
+        "xla_cost_bytes_per_device": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+            # donated buffers alias their outputs — count once
+            "peak_bytes_estimate": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes,
+            # bf16-native (TPU) model: args + analytic workspace — the raw
+            # CPU number includes fp32 float-normalization shadows
+            "tpu_peak_model": mem.argument_size_in_bytes
+            + tpu_native_activation_bytes(cfg, cell, dp_size=dp_size,
+                                          model_size=sizes["model"]),
+        },
+        "collectives": {
+            "wire_bytes_per_device": coll.wire_bytes_per_device,
+            "by_op": coll.by_op,
+            "op_counts": coll.op_counts,
+        },
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    return artifact
+
+
+def artifact_path(arch, shape_name, multi_pod):
+    mesh = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    return os.path.join(ARTIFACT_DIR, f"{arch}__{shape_name}__{mesh}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--overrides", type=str, default=None,
+                    help="JSON dict of ModelConfig overrides (perf tuning)")
+    ap.add_argument("--tag", type=str, default=None,
+                    help="artifact filename suffix for override runs")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_NAMES if (args.all or not args.arch) else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = supported_shapes(cfg) if (args.all or not args.shape) \
+            else [args.shape]
+        for shape in shapes:
+            if shape not in supported_shapes(cfg):
+                print(f"SKIP {arch} × {shape} (unsupported: sub-quadratic "
+                      "shape on full-attention arch)")
+                continue
+            meshes = {"single": [False], "multi": [True],
+                      "both": [False, True]}[args.mesh]
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    overrides = json.loads(args.overrides) if args.overrides else None
+    ok = fail = skip = 0
+    for arch, shape, mp in cells:
+        path = artifact_path(arch, shape, mp)
+        if args.tag:
+            path = path.replace(".json", f"__{args.tag}.json")
+        if os.path.exists(path) and not args.force:
+            print(f"CACHED {os.path.basename(path)}")
+            skip += 1
+            continue
+        label = f"{arch} × {shape} × {'multi' if mp else 'single'}"
+        print(f"RUN    {label} ...", flush=True)
+        try:
+            art = run_cell(arch, shape, mp, overrides)
+            if args.tag:
+                art["tag"] = args.tag
+                art["overrides"] = overrides
+            with open(path, "w") as f:
+                json.dump(art, f, indent=1)
+            peak = art["memory"]["peak_bytes_estimate"] / 2**30
+            print(f"OK     {label}: compile={art['compile_s']}s "
+                  f"flops/dev={art['flops_per_device']:.3e} "
+                  f"peak/dev={peak:.2f}GiB "
+                  f"coll/dev={art['collectives']['wire_bytes_per_device']:.3e}B",
+                  flush=True)
+            ok += 1
+        except Exception:
+            print(f"FAIL   {label}\n{traceback.format_exc()}", flush=True)
+            fail += 1
+    print(f"\ndry-run summary: ok={ok} cached={skip} fail={fail}")
+    raise SystemExit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no JAX device state.  The dry-run entrypoint
+(`dryrun.py`) sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+before any jax import; everything else in the repo sees the 1 real device.
+
+Single pod: (16, 16) = ("data", "model") — 256 v5e chips.
+Multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 512 chips, the "pod"
+axis is pure data parallelism across the DCN/ICI pod boundary.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — "
+            "run under dryrun.py (sets xla_force_host_platform_device_count)")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_elastic_mesh(n_data: int, n_model: int = 16):
+    """Smaller DP width after losing spot capacity (elastic resize)."""
+    n = n_data * n_model
+    devices = jax.devices()[:n]
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         devices=devices)
+
+
+def batch_axes_of(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def mesh_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,59 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On this CPU container only ``--smoke`` configs are runnable end-to-end; the
+full configs are exercised through ``dryrun.py``.  On a real pod the same
+driver runs the production mesh (``--mesh single|multi``) with the sharding
+rules from repro.distributed.
+"""
+import argparse
+import dataclasses
+import sys
+import tempfile
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs import get_config
+    from repro.data.pipeline import DataPipeline
+    from repro.models.registry import build_model
+    from repro.train.steps import init_train_state, make_train_step
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    cfg = dataclasses.replace(cfg, remat=False)
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.key(0),
+                             compress=args.compress_grads)
+    data = DataPipeline(vocab_size=cfg.vocab_size, global_batch=args.batch,
+                        seq_len=args.seq, seed=0)
+    if cfg.input_mode != "tokens" or cfg.family == "encdec":
+        print(f"{args.arch}: tokens-only launcher; use tests/examples for "
+              "frontend-stub archs", file=sys.stderr)
+        return
+    step_fn = jax.jit(make_train_step(model, compress=args.compress_grads),
+                      donate_argnums=(0,))
+    ckpt = CheckpointManager(args.ckpt_dir or tempfile.mkdtemp("repro_train"))
+    t0 = time.time()
+    for i in range(args.steps):
+        state, m = step_fn(state, data.next())
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+    ckpt.save(args.steps, state, extra={"data": data.state()}, blocking=True)
+    print(f"checkpointed step {args.steps} -> {ckpt.directory}")
+
+
+if __name__ == "__main__":
+    main()

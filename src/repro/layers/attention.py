@@ -1,0 +1,267 @@
+"""Attention: GQA projections + three sequence-mixing implementations.
+
+``chunked``  — flash-style two-level scan with online softmax; never
+               materializes the S×S score matrix, so 32k prefill compiles
+               with bounded memory on every backend.  This is the production
+               jnp path used by the dry-run.
+``naive``    — full score matrix; oracle for tests at small shapes.
+``pallas``   — TPU kernel (repro.kernels.flash_attention), validated in
+               interpret mode; selected via ``cfg.attn_impl``.
+
+Decode (q_len == 1) uses a single-pass masked softmax over the KV cache.
+
+``causal_block_skip`` (perf knob, §Perf): with causal masking, KV blocks
+strictly in the future of a whole Q block contribute nothing — iterate only
+j ≤ (q_offset + (i+1)·cq − 1)//ck blocks via a bounded ``fori_loop``,
+halving prefill attention FLOPs at large S.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def attention_init(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, *, qkv_bias: bool = False,
+                   qk_norm: bool = False, dtype=jnp.bfloat16) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d_model)
+    p = {
+        "wq": (jax.random.normal(kq, (d_model, num_heads, head_dim)) * scale
+               ).astype(dtype),
+        "wk": (jax.random.normal(kk, (d_model, num_kv_heads, head_dim)) * scale
+               ).astype(dtype),
+        "wv": (jax.random.normal(kv, (d_model, num_kv_heads, head_dim)) * scale
+               ).astype(dtype),
+        "wo": (jax.random.normal(ko, (num_heads, head_dim, d_model))
+               * (1.0 / math.sqrt(num_heads * head_dim))).astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads, head_dim), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads, head_dim), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads, head_dim), dtype)
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((head_dim,), jnp.float32)
+    return p
+
+
+def _head_rms(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def qkv_project(params: dict, x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if "q_norm" in params:
+        q = _head_rms(q, params["q_norm"])
+        k = _head_rms(k, params["k_norm"])
+    return q, k, v
+
+
+def out_project(params: dict, y: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", y, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Sequence mixing
+# ---------------------------------------------------------------------------
+
+
+def naive_attention(q, k, v, *, causal: bool, q_offset: int = 0,
+                    kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Oracle: full (Sq, Sk) scores. q (B,Sq,H,D); k/v (B,Sk,KH,D)."""
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    g = H // KH
+    qg = q.reshape(B, Sq, KH, g, D)
+    scores = jnp.einsum("bqngd,bsnd->bqngs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(D)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if kv_len is not None:
+        mask &= kpos[None, :] < kv_len
+    scores = jnp.where(mask[None, :, None, None, :], scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    y = jnp.einsum("bqngs,bsnd->bqngd", p, v.astype(jnp.float32))
+    return y.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
+                      k_chunk: int = 1024, q_offset: int = 0,
+                      kv_len: Optional[jax.Array] = None,
+                      block_skip: bool = False) -> jax.Array:
+    """Flash-style online-softmax attention via scan over (Q, KV) blocks."""
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    g = H // KH
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    # pad to multiples
+    nq = -(-Sq // q_chunk)
+    nk = -(-Sk // k_chunk)
+    q_pad, k_pad = nq * q_chunk - Sq, nk * k_chunk - Sk
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    kv_valid = jnp.asarray(Sk if kv_len is None else kv_len, jnp.int32)
+    scale = 1.0 / math.sqrt(D)
+
+    qs = q.reshape(B, nq, q_chunk, H, D).transpose(1, 0, 2, 3, 4)
+
+    def one_q_block(i, qb):
+        """qb (B, cq, H, D) -> attended output block."""
+        qg = qb.reshape(B, q_chunk, KH, g, D)
+        qpos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, j * k_chunk, k_chunk, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, j * k_chunk, k_chunk, axis=1)
+            kpos = j * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("bqngd,bsnd->bqngs", qg, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kpos[None, :] < kv_valid
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, :, None, None, :], s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bqngs,bsnd->bqngd", p.astype(v.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, q_chunk, KH, g), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, KH, g), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, KH, g, D), jnp.float32)
+        if block_skip and causal:
+            # Only blocks j with j*ck <= last q position can contribute.
+            last_q = q_offset + (i + 1) * q_chunk - 1
+            n_blocks = jnp.minimum(last_q // k_chunk + 1, nk).astype(jnp.int32)
+
+            def body(j, carry):
+                carry, _ = kv_step(carry, j)
+                return carry
+
+            m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, a0))
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0), jnp.arange(nk)
+            )
+        y = acc / jnp.maximum(l, 1e-30)[..., None]
+        return y.reshape(B, q_chunk, H, D).astype(q.dtype)
+
+    if nq == 1:
+        out = one_q_block(0, qs[0])[None]
+    else:
+        out = jax.lax.map(lambda args: one_q_block(*args),
+                          (jnp.arange(nq), qs))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_chunk, H, D)
+    return out[:, :Sq]
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, chunk: int = 4096,
+                     self_kv=None) -> jax.Array:
+    """Single-token decode: q (B,1,H,D) vs cache (B,S,KH,D); kv_len scalar
+    or (B,).  Flash-decode style: online softmax over KV chunks so no
+    S-sized fp32 intermediate (or backend upcast of the whole cache) ever
+    materializes.
+
+    ``self_kv=(k_new, v_new)`` each (B,1,KH,D): the new token's own K/V,
+    merged analytically into the online softmax.  This lets decode read the
+    cache *immutably* (the write happens once, outside the layer scan) —
+    keeping the multi-GiB cache out of every while-body op so backend float
+    normalization / double buffering can't touch it."""
+    B, _, H, D = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    g = H // KH
+    qg = q.reshape(B, KH, g, D)
+    kv_len = jnp.reshape(jnp.asarray(kv_len), (-1, 1))  # (B|1, 1)
+    ck = min(chunk, S)
+    if S % ck:
+        ck = S  # irregular sizes: single pass
+    nk = S // ck
+    scale = 1.0 / math.sqrt(D)
+
+    def kv_step(carry, j):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(k_cache, j * ck, ck, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v_cache, j * ck, ck, axis=1)
+        kpos = j * ck + jnp.arange(ck)
+        s = jnp.einsum("bngd,bsnd->bngs", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        valid = kpos[None, :] < kv_len
+        s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bngs,bsnd->bngd", p.astype(v_cache.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc * corr[..., None] + pv), None
+
+    m0 = jnp.full((B, KH, g), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KH, g), jnp.float32)
+    a0 = jnp.zeros((B, KH, g, D), jnp.float32)
+    if nk == 1:
+        (m, l, acc), _ = kv_step((m0, l0, a0), 0)
+    else:
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+    if self_kv is not None:
+        k_new, v_new = self_kv  # (B, 1, KH, D)
+        s_self = jnp.einsum("bngd,bnd->bng", qg, k_new[:, 0],
+                            preferred_element_type=jnp.float32) * scale
+        m_new = jnp.maximum(m, s_self)
+        p_self = jnp.exp(s_self - m_new)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p_self
+        acc = acc * corr[..., None] + p_self[..., None] * v_new[:, 0][
+            :, :, None, :].astype(jnp.float32)
+        m = m_new
+    y = acc / jnp.maximum(l, 1e-30)[..., None]
+    return y.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def mix_sequence(cfg, q, k, v, *, causal: bool, q_offset: int = 0,
+                 kv_len=None) -> jax.Array:
+    """Dispatch on cfg.attn_impl."""
+    if cfg.attn_impl == "naive":
+        return naive_attention(q, k, v, causal=causal, q_offset=q_offset,
+                               kv_len=kv_len)
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(q, k, v, causal=causal)
+    if kv_len is None:
+        # train/prefill: custom-VJP flash path (O(block) backward memory)
+        from repro.layers.flash_vjp import chunked_attention_trainable
+
+        return chunked_attention_trainable(
+            q, k, v, causal=causal, q_chunk=cfg.attn_chunk_q,
+            k_chunk=cfg.attn_chunk_k, q_offset=q_offset)
+    return chunked_attention(
+        q, k, v, causal=causal, q_chunk=cfg.attn_chunk_q,
+        k_chunk=cfg.attn_chunk_k, q_offset=q_offset, kv_len=kv_len,
+        block_skip=cfg.causal_block_skip,
+    )

@@ -1,0 +1,183 @@
+"""Memory-correct chunked attention: custom VJP (FlashAttention-2 style).
+
+Differentiating the naive scan-of-scans online-softmax attention makes JAX
+stack per-(Q-block × KV-block) score residuals — O(Sq·Sk) memory, exactly
+what flash attention exists to avoid (measured: 92 GiB/device on the
+whisper train cell).  This custom VJP saves only (q, k, v, o, lse) and
+recomputes p-blocks in the backward:
+
+  forward:   o, lse                      (lse = m + log l, per row)
+  backward:  delta = Σ(do ⊙ o)
+             p  = exp(s − lse);  ds = p ⊙ (do·vᵀ − delta)·scale
+             dq = Σ_j ds·k;  dk = Σ_i dsᵀ·q;  dv = Σ_i pᵀ·do
+
+Both passes are block-tiled scans with fp32 accumulators; no tensor larger
+than one (cq × ck) block ever exists per device.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def _mask_for(qpos, kpos, causal: bool, sk_valid: int):
+    mask = kpos[None, :] < sk_valid
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    return mask
+
+
+def _forward_blocks(q5, k, v, *, causal, cq, ck, q_offset, sk_valid):
+    """q5 (B, nq, cq, KH, g, D); k/v (B, Sk, KH, D) -> (o5, lse5)."""
+    B, nq, cqs, KH, g, D = q5.shape
+    Sk = k.shape[1]
+    nk = Sk // ck
+    scale = 1.0 / math.sqrt(D)
+
+    def one_q(args):
+        i, qb = args  # qb (B, cq, KH, g, D)
+        qpos = q_offset + i * cq + jnp.arange(cq)
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, j * ck, ck, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, j * ck, ck, axis=1)
+            kpos = j * ck + jnp.arange(ck)
+            s = jnp.einsum("bqngd,bsnd->bqngs", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _mask_for(qpos, kpos, causal, sk_valid)
+            s = jnp.where(mask[None, :, None, None, :], s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bqngs,bsnd->bqngd", p.astype(v.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc * corr[..., None] + pv), None
+
+        m0 = jnp.full((B, cq, KH, g), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, cq, KH, g), jnp.float32)
+        a0 = jnp.zeros((B, cq, KH, g, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        l = jnp.maximum(l, 1e-30)
+        o = (acc / l[..., None]).astype(q5.dtype)
+        lse = m + jnp.log(l)
+        return o, lse
+
+    qs = q5.transpose(1, 0, 2, 3, 4, 5)  # (nq, B, cq, KH, g, D)
+    o, lse = jax.lax.map(one_q, (jnp.arange(nq), qs))
+    return o.transpose(1, 0, 2, 3, 4, 5), lse.transpose(1, 0, 2, 3, 4)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_vjp(q, k, v, causal: bool, q_chunk: int, k_chunk: int,
+                        q_offset: int, sk_valid: int):
+    """q (B,Sq,H,D); k/v (B,Sk,KH,D) -> (B,Sq,H,D).  Shapes must tile."""
+    o, _ = _fwd_impl(q, k, v, causal, q_chunk, k_chunk, q_offset, sk_valid)
+    return o
+
+
+def _fwd_impl(q, k, v, causal, cq, ck, q_offset, sk_valid):
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    g = H // KH
+    nq = Sq // cq
+    q5 = q.reshape(B, nq, cq, KH, g, D)
+    o5, lse5 = _forward_blocks(q5, k, v, causal=causal, cq=cq, ck=ck,
+                               q_offset=q_offset, sk_valid=sk_valid)
+    o = o5.reshape(B, Sq, H, D)
+    lse = lse5.reshape(B, Sq, KH, g)
+    return o, lse
+
+
+def _fwd(q, k, v, causal, cq, ck, q_offset, sk_valid):
+    o, lse = _fwd_impl(q, k, v, causal, cq, ck, q_offset, sk_valid)
+    return o, (q, k, v, o, lse)
+
+
+def _bwd(causal, cq, ck, q_offset, sk_valid, res, do):
+    q, k, v, o, lse = res
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    g = H // KH
+    nq, nk = Sq // cq, Sk // ck
+    scale = 1.0 / math.sqrt(D)
+
+    q5 = q.reshape(B, nq, cq, KH, g, D)
+    do5 = do.reshape(B, nq, cq, KH, g, D).astype(jnp.float32)
+    o5 = o.reshape(B, nq, cq, KH, g, D).astype(jnp.float32)
+    lse5 = lse.reshape(B, nq, cq, KH, g)
+    delta5 = jnp.sum(do5 * o5, axis=-1)  # (B, nq, cq, KH, g)
+
+    def kv_step(dq_acc, j):
+        kb = jax.lax.dynamic_slice_in_dim(k, j * ck, ck, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, j * ck, ck, axis=1)
+        kpos = j * ck + jnp.arange(ck)
+
+        def one_q(args):
+            i, qb, dob, lseb, deltab = args
+            qpos = q_offset + i * cq + jnp.arange(cq)
+            s = jnp.einsum("bqngd,bsnd->bqngs", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _mask_for(qpos, kpos, causal, sk_valid)
+            s = jnp.where(mask[None, :, None, None, :], s, _NEG_INF)
+            p = jnp.exp(s - lseb[..., None])  # (B,cq,KH,g,ck)
+            dp = jnp.einsum("bqngd,bsnd->bqngs", dob.astype(v.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - deltab[..., None]) * scale
+            dsb = ds.astype(q.dtype)
+            dq_i = jnp.einsum("bqngs,bsnd->bqngd", dsb, kb,
+                              preferred_element_type=jnp.float32)
+            dk_j = jnp.einsum("bqngs,bqngd->bsnd", dsb, qb,
+                              preferred_element_type=jnp.float32)
+            dv_j = jnp.einsum("bqngs,bqngd->bsnd", p.astype(q.dtype), dob,
+                              preferred_element_type=jnp.float32)
+            return dq_i, dk_j, dv_j
+
+        qs = q5.transpose(1, 0, 2, 3, 4, 5)
+        dos = do5.transpose(1, 0, 2, 3, 4, 5)
+        lses = lse5.transpose(1, 0, 2, 3, 4)
+        deltas = delta5.transpose(1, 0, 2, 3, 4)
+        dq_i, dk_j, dv_j = jax.lax.map(
+            one_q, (jnp.arange(nq), qs, dos, lses, deltas))
+        # dq_i (nq, B, cq, KH, g, D) — this KV block's contribution
+        dq_acc = dq_acc + dq_i.transpose(1, 0, 2, 3, 4, 5)
+        return dq_acc, (jnp.sum(dk_j, axis=0), jnp.sum(dv_j, axis=0))
+
+    dq0 = jnp.zeros((B, nq, cq, KH, g, D), jnp.float32)
+    dq_acc, (dk_blocks, dv_blocks) = jax.lax.scan(kv_step, dq0,
+                                                  jnp.arange(nk))
+    dq = dq_acc.reshape(B, Sq, H, D).astype(q.dtype)
+    dk = dk_blocks.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KH, D).astype(
+        k.dtype)
+    dv = dv_blocks.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KH, D).astype(
+        v.dtype)
+    return dq, dk, dv
+
+
+flash_attention_vjp.defvjp(_fwd, _bwd)
+
+
+def chunked_attention_trainable(q, k, v, *, causal: bool, q_chunk: int = 512,
+                                k_chunk: int = 1024,
+                                q_offset: int = 0) -> jax.Array:
+    """Public entry: pads to tile multiples, calls the custom-VJP kernel."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    cq = min(q_chunk, Sq)
+    ck = min(k_chunk, Sk)
+    nq, nk = -(-Sq // cq), -(-Sk // ck)
+    q_pad, k_pad = nq * cq - Sq, nk * ck - Sk
+    sk_valid = Sk
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    o = flash_attention_vjp(q, k, v, causal, cq, ck, q_offset, sk_valid)
+    return o[:, :Sq]

@@ -1,0 +1,33 @@
+"""Dense MLP (SwiGLU) block."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16,
+             variant: str = "swiglu") -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    p = {
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if variant == "swiglu":
+        p["w_gate"] = (jax.random.normal(k1, (d_model, d_ff)) * s_in
+                       ).astype(dtype)
+    return p
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    """SwiGLU (3-matrix) if w_gate present, else 2-matrix GELU MLP."""
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    if "w_gate" in params:
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])

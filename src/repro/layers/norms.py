@@ -1,0 +1,25 @@
+"""Normalization layers (pure functions + init)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in fp32, cast back to input dtype."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def gated_rms_norm(params: dict, x: jax.Array, z: jax.Array,
+                   eps: float = 1e-6) -> jax.Array:
+    """Mamba2's output norm: RMSNorm(x * silu(z))."""
+    return rms_norm(params, x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                    eps=eps)

@@ -1,0 +1,82 @@
+"""Rotary position embeddings, including Qwen2-VL's 3-axis M-RoPE.
+
+RoPE is applied to the first ``rot_dim`` dims of each head (full head_dim by
+default).  M-RoPE splits the rotary *frequency* dimension into three sections
+(temporal, height, width) driven by a (3, B, S) position tensor — the stub
+VLM frontend supplies these; for pure text all three axes carry the same
+positions, which reduces M-RoPE to standard RoPE exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_angles(positions: jax.Array, rot_half: int,
+                theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (..., S) -> cos/sin of shape (..., S, rot_half), fp32."""
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, rot_half, dtype=jnp.float32) / rot_half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, H, D) rotate pairs (x1, x2) = (x[:D/2], x[D/2:])."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # cos/sin (B, S, half) -> broadcast over heads
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10_000.0) -> jax.Array:
+    """Standard RoPE. x (B, S, H, D); positions (B, S)."""
+    cos, sin = rope_angles(positions, x.shape[-1] // 2, theta)
+    return _apply(x, cos, sin)
+
+
+def mrope_sections(head_dim: int) -> tuple[int, int, int]:
+    """Qwen2-VL's split of the rotary half (e.g. 64 -> 16/24/24)."""
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    w = half - t - h
+    return t, h, w
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array,
+                theta: float = 10_000.0) -> jax.Array:
+    """M-RoPE. x (B, S, H, D); positions3 (3, B, S) = (t, h, w) axes."""
+    half = x.shape[-1] // 2
+    sec = mrope_sections(x.shape[-1])
+    cos_parts, sin_parts = [], []
+    offset = 0
+    for axis in range(3):
+        n = sec[axis]
+        freqs = 1.0 / (
+            theta ** (jnp.arange(offset, offset + n, dtype=jnp.float32) / half)
+        )
+        ang = positions3[axis].astype(jnp.float32)[..., None] * freqs
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        offset += n
+    cos = jnp.concatenate(cos_parts, axis=-1)
+    sin = jnp.concatenate(sin_parts, axis=-1)
+    return _apply(x, cos, sin)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal position embeddings (S, D), fp32."""
+    half = d_model // 2
+    freqs = jnp.exp(
+        -jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1)
+    )
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None] * freqs
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)

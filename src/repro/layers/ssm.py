@@ -1,0 +1,299 @@
+"""Mamba2 (state-space duality) block — TPU-idiomatic chunked formulation.
+
+The CUDA selective-scan of Mamba1 has no TPU analogue (warp shuffles); the
+Mamba2 paper's own SSD form is the TPU-native algorithm: big dense intra-chunk
+matmuls (MXU) plus a cheap inter-chunk state recurrence (lax.scan over
+chunks).  This module is the pure-jnp production path and the oracle for the
+Pallas kernel in ``repro.kernels.ssd``.
+
+Per-layer parameters (ngroups = 1):
+  in_proj  (D, 2·d_inner + 2·N + H)  → [z, x, B, C, dt]
+  conv     depthwise width-4 causal conv over [x, B, C] channels (+ silu)
+  A_log(H), D(H), dt_bias(H); gated RMSNorm; out_proj (d_inner, D)
+
+Recurrence: h_t = exp(dt_t·A)·h_{t−1} + dt_t·B_t ⊗ x_t ;  y_t = C_t·h_t + D·x_t
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.norms import gated_rms_norm, rms_norm_init
+
+
+class SSMDims(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_state: int
+    n_heads: int
+    head_dim: int
+    conv_width: int
+    chunk: int
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.n_state
+
+    @property
+    def proj_dim(self) -> int:
+        return 2 * self.d_inner + 2 * self.n_state + self.n_heads
+
+
+def dims_from_cfg(cfg) -> SSMDims:
+    return SSMDims(
+        d_model=cfg.d_model,
+        d_inner=cfg.d_inner,
+        n_state=cfg.ssm_state,
+        n_heads=cfg.ssm_heads,
+        head_dim=cfg.ssm_headdim,
+        conv_width=cfg.ssm_conv_width,
+        chunk=cfg.ssm_chunk,
+    )
+
+
+def ssm_init(key, dims: SSMDims, dtype=jnp.bfloat16) -> dict:
+    """Projections are SPLIT (z/x/B/C/dt as separate matrices) rather than
+    packed into one in_proj: the packed layout cannot be sharded over the
+    ``model`` axis without splitting its segments across shards.  With the
+    split layout z/x shard over d_inner (heads), dt over heads, B/C stay
+    replicated (shared across heads, ngroups=1) — clean tensor parallelism.
+    """
+    kz, kx, kb, kc, kdt, kcv, k3, k4 = jax.random.split(key, 8)
+    s_in = 1.0 / math.sqrt(dims.d_model)
+    s_out = 1.0 / math.sqrt(dims.d_inner)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba default)
+    dt = jnp.exp(
+        jax.random.uniform(k3, (dims.n_heads,)) * (math.log(0.1) - math.log(1e-3))
+        + math.log(1e-3)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    cw = 1.0 / math.sqrt(dims.conv_width)
+    return {
+        "z_proj": (jax.random.normal(kz, (dims.d_model, dims.d_inner)) * s_in
+                   ).astype(dtype),
+        "x_proj": (jax.random.normal(kx, (dims.d_model, dims.d_inner)) * s_in
+                   ).astype(dtype),
+        "b_proj": (jax.random.normal(kb, (dims.d_model, dims.n_state)) * s_in
+                   ).astype(dtype),
+        "c_proj": (jax.random.normal(kc, (dims.d_model, dims.n_state)) * s_in
+                   ).astype(dtype),
+        "dt_proj": (jax.random.normal(kdt, (dims.d_model, dims.n_heads)) * s_in
+                    ).astype(dtype),
+        "conv_x_w": (jax.random.normal(kcv, (dims.conv_width, dims.d_inner))
+                     * cw).astype(dtype),
+        "conv_x_b": jnp.zeros((dims.d_inner,), dtype),
+        "conv_bc_w": (jax.random.normal(kcv, (dims.conv_width,
+                                              2 * dims.n_state)) * cw
+                      ).astype(dtype),
+        "conv_bc_b": jnp.zeros((2 * dims.n_state,), dtype),
+        "A_log": jnp.log(jnp.arange(1, dims.n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((dims.n_heads,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": rms_norm_init(dims.d_inner),
+        "out_proj": (jax.random.normal(k4, (dims.d_inner, dims.d_model)) * s_out
+                     ).astype(dtype),
+    }
+
+
+def causal_conv(w: jax.Array, b: jax.Array, u: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds.  u (B, L, C); w (W, C)."""
+    W = w.shape[0]
+    out = jnp.zeros_like(u)
+    for i in range(W):
+        shift = W - 1 - i
+        shifted = jnp.pad(u, ((0, 0), (shift, 0), (0, 0)))[:, : u.shape[1]]
+        out = out + shifted * w[i]
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(u.dtype)
+
+
+def ssd_chunked(x, dt, a_log, d_skip, b_in, c_in, *, chunk: int,
+                return_final: bool = False):
+    """Chunked SSD scan.
+
+    x (B, L, H, P); dt (B, L, H) fp32 post-softplus; b_in/c_in (B, L, N);
+    returns y (B, L, H, P) in x.dtype (+ final state (B,H,P,N) fp32 if
+    ``return_final``; zero-padded tail steps carry dt=0 ⇒ no spurious decay).
+    """
+    Bsz, L, H, P = x.shape
+    N = b_in.shape[-1]
+    Q = min(chunk, L)
+    nc = -(-L // Q)
+    pad = nc * Q - L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    A = -jnp.exp(a_log.astype(jnp.float32))  # (H,) negative
+    da = dt * A  # (B, L', H)
+
+    def chunkify(t, extra_dims):
+        return t.reshape((Bsz, nc, Q) + extra_dims)
+
+    xc = chunkify(x, (H, P))
+    dtc = chunkify(dt, (H,))
+    dac = chunkify(da, (H,))
+    bc = chunkify(b_in, (N,))
+    cc = chunkify(c_in, (N,))
+
+    cum = jnp.cumsum(dac, axis=2)  # (B, nc, Q, H) inclusive
+    # intra-chunk: contribution of s to q (q >= s): exp(cum_q - cum_s)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", cc.astype(jnp.float32),
+                        bc.astype(jnp.float32))
+    xdt = xc.astype(jnp.float32) * dtc[..., None]  # (B,nc,Q,H,P)
+    y_diag = jnp.einsum("bcqs,bcqsh,bcshp->bcqhp", scores, decay, xdt)
+
+    # chunk-final states: S_c = Σ_s exp(cum_last - cum_s) B_s ⊗ xdt_s
+    decay_rest = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcsn,bcsh,bcshp->bchpn", bc.astype(jnp.float32),
+                         decay_rest, xdt)
+    total = jnp.exp(cum[:, :, -1, :])  # (B,nc,H) whole-chunk decay
+
+    def inter(h, inputs):
+        s_c, tot = inputs  # (B,H,P,N), (B,H)
+        h_next = h * tot[..., None, None] + s_c
+        return h_next, h  # emit state *before* this chunk
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    h_final, h_before = jax.lax.scan(
+        inter, h0,
+        (s_chunk.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    h_before = h_before.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    decay_in = jnp.exp(cum)  # (B,nc,Q,H): decay from chunk start to q
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cc.astype(jnp.float32),
+                       h_before, decay_in)
+
+    y = y_diag + y_off + d_skip[None, None, :, None] * xc.astype(jnp.float32)
+    y = y.reshape(Bsz, nc * Q, H, P)[:, :L]
+    if return_final:
+        return y.astype(x.dtype), h_final
+    return y.astype(x.dtype)
+
+
+def ssd_reference(x, dt, a_log, d_skip, b_in, c_in) -> jax.Array:
+    """O(L) sequential recurrence — the ground-truth oracle for tests."""
+    Bsz, L, H, P = x.shape
+    N = b_in.shape[-1]
+    A = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs  # (B,H,P),(B,H),(B,N),(B,N)
+        da = jnp.exp(dtt * A)  # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+        h = h * da[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          b_in.astype(jnp.float32).transpose(1, 0, 2),
+          c_in.astype(jnp.float32).transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3) + d_skip[None, None, :, None] * x.astype(
+        jnp.float32)
+    return y.astype(x.dtype)
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array  # (B, conv_width-1, conv_channels)
+    state: jax.Array  # (B, H, P, N) fp32
+
+
+def ssm_init_cache(dims: SSMDims, batch: int, dtype=jnp.bfloat16) -> SSMCache:
+    return SSMCache(
+        conv=jnp.zeros((batch, dims.conv_width - 1, dims.conv_channels), dtype),
+        state=jnp.zeros((batch, dims.n_heads, dims.head_dim, dims.n_state),
+                        jnp.float32),
+    )
+
+
+def mamba_block(params: dict, dims: SSMDims, u: jax.Array, *,
+                norm_eps: float = 1e-6, impl: str = "chunked",
+                return_cache: bool = False):
+    """Full Mamba2 block on a sequence.  u (B, L, D) -> (B, L, D).
+
+    With ``return_cache`` also returns the decode :class:`SSMCache` (terminal
+    recurrent state + last conv window) so prefill hands off to decode.
+    """
+    z = jnp.einsum("bld,di->bli", u, params["z_proj"])
+    x_raw = jnp.einsum("bld,di->bli", u, params["x_proj"])
+    bc_raw = jnp.concatenate(
+        [jnp.einsum("bld,dn->bln", u, params["b_proj"]),
+         jnp.einsum("bld,dn->bln", u, params["c_proj"])], axis=-1)
+    dt_raw = jnp.einsum("bld,dh->blh", u, params["dt_proj"])
+    x = causal_conv(params["conv_x_w"], params["conv_x_b"], x_raw)
+    bc = causal_conv(params["conv_bc_w"], params["conv_bc_b"], bc_raw)
+    b_in = bc[..., : dims.n_state]
+    c_in = bc[..., dims.n_state:]
+    conv_in = jnp.concatenate([x_raw, bc_raw], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    xh = x.reshape(x.shape[0], x.shape[1], dims.n_heads, dims.head_dim)
+    h_final = None
+    if return_cache or impl == "chunked" or impl == "pallas":
+        if impl == "pallas" and not return_cache:
+            from repro.kernels.ssd import ops as ssd_ops
+
+            y = ssd_ops.ssd(xh, dt, params["A_log"], params["D"], b_in, c_in,
+                            chunk=dims.chunk)
+        else:
+            y, h_final = ssd_chunked(xh, dt, params["A_log"], params["D"],
+                                     b_in, c_in, chunk=dims.chunk,
+                                     return_final=True)
+    else:
+        y = ssd_reference(xh, dt, params["A_log"], params["D"], b_in, c_in)
+    y = y.reshape(x.shape)
+    y = gated_rms_norm(params["norm"], y, z, eps=norm_eps)
+    out = jnp.einsum("bli,id->bld", y, params["out_proj"])
+    if return_cache:
+        W = dims.conv_width
+        cache = SSMCache(conv=conv_in[:, -(W - 1):, :], state=h_final)
+        return out, cache
+    return out
+
+
+def mamba_block_decode(params: dict, dims: SSMDims, u: jax.Array,
+                       cache: SSMCache, *, norm_eps: float = 1e-6
+                       ) -> tuple[jax.Array, SSMCache]:
+    """Single-token recurrent step.  u (B, 1, D) -> (B, 1, D)."""
+    B = u.shape[0]
+    ut = u[:, 0]
+    z = jnp.einsum("bd,di->bi", ut, params["z_proj"])
+    x_raw = jnp.einsum("bd,di->bi", ut, params["x_proj"])
+    bc_raw = jnp.concatenate(
+        [jnp.einsum("bd,dn->bn", ut, params["b_proj"]),
+         jnp.einsum("bd,dn->bn", ut, params["c_proj"])], axis=-1)
+    dt_raw = jnp.einsum("bd,dh->bh", ut, params["dt_proj"])
+    conv_in = jnp.concatenate([x_raw, bc_raw], axis=-1)  # (B, C)
+    window = jnp.concatenate([cache.conv, conv_in[:, None, :]], axis=1)
+    conv_w = jnp.concatenate([params["conv_x_w"], params["conv_bc_w"]],
+                             axis=-1)
+    conv_b = jnp.concatenate([params["conv_x_b"], params["conv_bc_b"]])
+    conv_out = jnp.einsum("bwc,wc->bc", window, conv_w)
+    conv_out = jax.nn.silu(
+        (conv_out + conv_b).astype(jnp.float32)
+    ).astype(u.dtype)
+    x = conv_out[..., : dims.d_inner]
+    b_in = conv_out[..., dims.d_inner: dims.d_inner + dims.n_state]
+    c_in = conv_out[..., dims.d_inner + dims.n_state:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * A)  # (B,H)
+    xh = x.reshape(B, dims.n_heads, dims.head_dim).astype(jnp.float32)
+    upd = jnp.einsum("bhp,bn->bhpn", xh * dt[..., None],
+                     b_in.astype(jnp.float32))
+    state = cache.state * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, c_in.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(B, dims.d_inner).astype(u.dtype)
+    y = gated_rms_norm(params["norm"], y, z, eps=norm_eps)
+    out = jnp.einsum("bi,id->bd", y, params["out_proj"])
+    new_cache = SSMCache(conv=window[:, 1:], state=state)
+    return out[:, None, :], new_cache

@@ -1,0 +1,103 @@
+"""Shared model plumbing: parallel context, embeddings, chunked CE loss."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    """Mesh context threaded through models.
+
+    ``mesh=None`` (default) → single-device: MoE uses the local path and
+    sharding constraints are no-ops, so the same model code runs smoke tests
+    and the production dry-run.
+    """
+
+    mesh: Optional[object] = None
+    batch_axes: tuple = ("data",)
+    model_axis: str = "model"
+
+    def constrain(self, x: jax.Array, spec) -> jax.Array:
+        if self.mesh is None:
+            return x
+        from jax.sharding import NamedSharding
+
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+
+    def batch_spec_entry(self):
+        from jax.sharding import PartitionSpec as P
+
+        return self.batch_axes if self.mesh is not None else None
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model)) * (1.0 / math.sqrt(d_model))
+            ).astype(dtype)
+
+
+def lm_head_init(key, d_model: int, vocab: int, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, (d_model, vocab)) * (1.0 / math.sqrt(d_model))
+            ).astype(dtype)
+
+
+def cross_entropy_chunked(x: jax.Array, lm_head: jax.Array,
+                          targets: jax.Array, *, num_chunks: int = 16,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Sequence-chunked CE: never materializes the full (B, S, V) logits.
+
+    x (B, S, D); lm_head (D, V); targets (B, S) int32.  Chunks slice the
+    *sequence* axis so the batch axis keeps its DP sharding (slicing the
+    flattened token axis would cut across data shards and force GSPMD to
+    all-gather the activations).  The chunk body is rematerialized in the
+    backward pass (jax.checkpoint), so peak memory is one chunk of logits —
+    the difference between fitting and OOM at 151k vocab × 1M tokens.
+    """
+    B, S, D = x.shape
+    mask_full = jnp.ones((B, S), jnp.float32) if mask is None else mask
+    num_chunks = max(1, min(num_chunks, S))
+    while S % num_chunks:
+        num_chunks -= 1
+    C = S // num_chunks
+
+    @jax.checkpoint
+    def chunk_loss(xc, tc, mc):
+        logits = jnp.einsum("bsd,dv->bsv", xc, lm_head,
+                            preferred_element_type=jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=2)[..., 0]
+        return jnp.sum((lse - gold) * mc)
+
+    def body(acc, idx):
+        xc = jax.lax.dynamic_slice_in_dim(x, idx * C, C, axis=1)
+        tc = jax.lax.dynamic_slice_in_dim(targets, idx * C, C, axis=1)
+        mc = jax.lax.dynamic_slice_in_dim(mask_full, idx * C, C, axis=1)
+        return acc + chunk_loss(xc, tc, mc), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            jnp.arange(num_chunks))
+    return total / jnp.maximum(jnp.sum(mask_full), 1.0)
+
+
+def logits_for_tokens(x: jax.Array, lm_head: jax.Array) -> jax.Array:
+    """Decode-time logits (small T): plain matmul, fp32."""
+    return jnp.einsum("bsd,dv->bsv", x, lm_head,
+                      preferred_element_type=jnp.float32)
+
+
+def remat_wrap(fn, cfg):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    elif cfg.remat_policy == "none":
+        policy = None
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)

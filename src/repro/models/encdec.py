@@ -1,0 +1,217 @@
+"""Whisper-style encoder-decoder backbone (whisper-small).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()`` feeds
+precomputed frame embeddings (B, S, d_model).  Positions are fixed
+sinusoidal (added at embed time), matching Whisper's design more closely
+than RoPE.  Decoder layers carry self-attention (causal, cached) and
+cross-attention to the encoded frames (KV computed once at prefill).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.layers.attention import (
+    attention_init,
+    decode_attention,
+    mix_sequence,
+    out_project,
+    qkv_project,
+)
+from repro.layers.mlp import mlp, mlp_init
+from repro.layers.norms import rms_norm, rms_norm_init
+from repro.layers.rotary import sinusoidal_positions
+from repro.models.base import (
+    ParallelContext,
+    cross_entropy_chunked,
+    embed_init,
+    lm_head_init,
+    logits_for_tokens,
+    remat_wrap,
+)
+from repro.models.config import ModelConfig
+
+
+class EncDecCache(NamedTuple):
+    self_k: jax.Array  # (L, B, S_dec, KH, hd)
+    self_v: jax.Array
+    cross_k: jax.Array  # (L, B, S_enc, KH, hd) — fixed after prefill
+    cross_v: jax.Array
+    index: jax.Array
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, ctx: Optional[ParallelContext] = None):
+        self.cfg = cfg
+        self.ctx = ctx or ParallelContext()
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def _enc_layer_init(self, key):
+        cfg = self.cfg
+        ka, km = jax.random.split(key)
+        return {
+            "ln1": rms_norm_init(cfg.d_model),
+            "ln2": rms_norm_init(cfg.d_model),
+            "attn": attention_init(ka, cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.resolved_head_dim,
+                                   dtype=self.dtype),
+            "mlp": mlp_init(km, cfg.d_model, cfg.d_ff, dtype=self.dtype,
+                            variant=cfg.mlp_variant),
+        }
+
+    def _dec_layer_init(self, key):
+        cfg = self.cfg
+        ka, kx, km = jax.random.split(key, 3)
+        return {
+            "ln1": rms_norm_init(cfg.d_model),
+            "ln_x": rms_norm_init(cfg.d_model),
+            "ln2": rms_norm_init(cfg.d_model),
+            "attn": attention_init(ka, cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.resolved_head_dim,
+                                   dtype=self.dtype),
+            "cross": attention_init(kx, cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, cfg.resolved_head_dim,
+                                    dtype=self.dtype),
+            "mlp": mlp_init(km, cfg.d_model, cfg.d_ff, dtype=self.dtype,
+                            variant=cfg.mlp_variant),
+        }
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ke, kenc, kdec, kh = jax.random.split(key, 4)
+        enc_keys = jax.random.split(kenc, cfg.num_encoder_layers)
+        dec_keys = jax.random.split(kdec, cfg.num_layers)
+        return {
+            "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, self.dtype),
+            "enc_layers": jax.vmap(self._enc_layer_init)(enc_keys),
+            "enc_norm": rms_norm_init(cfg.d_model),
+            "dec_layers": jax.vmap(self._dec_layer_init)(dec_keys),
+            "final_norm": rms_norm_init(cfg.d_model),
+            "lm_head": lm_head_init(kh, cfg.d_model, cfg.vocab_size,
+                                    self.dtype),
+        }
+
+    # ---------------------------------------------------------------- encode
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames (B, S, D) stub embeddings -> encoded (B, S, D)."""
+        cfg, ctx = self.cfg, self.ctx
+        S = frames.shape[1]
+        x = frames.astype(self.dtype) + sinusoidal_positions(
+            S, cfg.d_model).astype(self.dtype)[None]
+        x = ctx.constrain(x, P(ctx.batch_spec_entry(), None, None))
+
+        def body(xc, p_layer):
+            h = rms_norm(p_layer["ln1"], xc, cfg.norm_eps)
+            q, k, v = qkv_project(p_layer["attn"], h)
+            y = mix_sequence(cfg, q, k, v, causal=False)
+            xc = xc + out_project(p_layer["attn"], y)
+            h = rms_norm(p_layer["ln2"], xc, cfg.norm_eps)
+            xc = ctx.constrain(xc + mlp(p_layer["mlp"], h),
+                               P(ctx.batch_spec_entry(), None, None))
+            return xc, None
+
+        body = remat_wrap(body, cfg)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+    # ---------------------------------------------------------------- decode
+    def _decoder_seq(self, params, tokens, encoded, *, collect_cache: bool):
+        cfg, ctx = self.cfg, self.ctx
+        B, S = tokens.shape
+        x = params["embed"][tokens] + sinusoidal_positions(
+            S, cfg.d_model).astype(self.dtype)[None]
+        x = ctx.constrain(x, P(ctx.batch_spec_entry(), None, None))
+
+        def body(xc, p_layer):
+            h = rms_norm(p_layer["ln1"], xc, cfg.norm_eps)
+            q, k, v = qkv_project(p_layer["attn"], h)
+            y = mix_sequence(cfg, q, k, v, causal=True)
+            xc = xc + out_project(p_layer["attn"], y)
+            # cross attention
+            h = rms_norm(p_layer["ln_x"], xc, cfg.norm_eps)
+            qx = jnp.einsum("bsd,dhk->bshk", h, p_layer["cross"]["wq"])
+            kx = jnp.einsum("bsd,dhk->bshk", encoded, p_layer["cross"]["wk"])
+            vx = jnp.einsum("bsd,dhk->bshk", encoded, p_layer["cross"]["wv"])
+            yx = mix_sequence(cfg, qx, kx, vx, causal=False)
+            xc = xc + out_project(p_layer["cross"], yx)
+            h = rms_norm(p_layer["ln2"], xc, cfg.norm_eps)
+            xc = ctx.constrain(xc + mlp(p_layer["mlp"], h),
+                               P(ctx.batch_spec_entry(), None, None))
+            out = (k, v, kx, vx) if collect_cache else None
+            return xc, out
+
+        body = remat_wrap(body, cfg)
+        x, caches = jax.lax.scan(body, x, params["dec_layers"])
+        return rms_norm(params["final_norm"], x, cfg.norm_eps), caches
+
+    def loss(self, params, batch):
+        encoded = self.encode(params, batch["frames"])
+        x, _ = self._decoder_seq(params, batch["tokens"], encoded,
+                                 collect_cache=False)
+        ce = cross_entropy_chunked(x, params["lm_head"], batch["targets"])
+        return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+    def init_cache(self, batch_size: int, max_len: int) -> EncDecCache:
+        cfg = self.cfg
+        kv = (cfg.num_layers, batch_size, max_len, cfg.num_kv_heads,
+              cfg.resolved_head_dim)
+        return EncDecCache(
+            self_k=jnp.zeros(kv, self.dtype), self_v=jnp.zeros(kv, self.dtype),
+            cross_k=jnp.zeros(kv, self.dtype),
+            cross_v=jnp.zeros(kv, self.dtype),
+            index=jnp.zeros((), jnp.int32),
+        )
+
+    def prefill(self, params, batch, max_len=None
+                ) -> tuple[jax.Array, EncDecCache]:
+        encoded = self.encode(params, batch["frames"])
+        x, (sk, sv, ck, cv) = self._decoder_seq(
+            params, batch["tokens"], encoded, collect_cache=True)
+        logits = logits_for_tokens(x[:, -1:], params["lm_head"])
+        S = batch["tokens"].shape[1]
+        if max_len is not None and max_len > S:
+            pad = ((0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0))
+            sk, sv = jnp.pad(sk, pad), jnp.pad(sv, pad)
+        return logits, EncDecCache(self_k=sk, self_v=sv, cross_k=ck,
+                                   cross_v=cv,
+                                   index=jnp.asarray(S, jnp.int32))
+
+    def decode_step(self, params, batch, cache: EncDecCache
+                    ) -> tuple[jax.Array, EncDecCache]:
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]
+        B = x.shape[0]
+        idx = cache.index
+        pos_table = sinusoidal_positions(cache.self_k.shape[2],
+                                         cfg.d_model).astype(self.dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(pos_table, idx, 1, axis=0)[None]
+
+        def body(carry, inputs):
+            xc = carry
+            p_layer, sk_l, sv_l, ck_l, cv_l = inputs
+            h = rms_norm(p_layer["ln1"], xc, cfg.norm_eps)
+            q, k, v = qkv_project(p_layer["attn"], h)
+            sk_l = jax.lax.dynamic_update_slice_in_dim(sk_l, k, idx, axis=1)
+            sv_l = jax.lax.dynamic_update_slice_in_dim(sv_l, v, idx, axis=1)
+            y = decode_attention(q, sk_l, sv_l, idx + 1)
+            xc = xc + out_project(p_layer["attn"], y)
+            h = rms_norm(p_layer["ln_x"], xc, cfg.norm_eps)
+            qx = jnp.einsum("bsd,dhk->bshk", h, p_layer["cross"]["wq"])
+            yx = decode_attention(qx, ck_l, cv_l, ck_l.shape[1])
+            xc = xc + out_project(p_layer["cross"], yx)
+            h = rms_norm(p_layer["ln2"], xc, cfg.norm_eps)
+            xc = xc + mlp(p_layer["mlp"], h)
+            return xc, (sk_l, sv_l)
+
+        x, (sk_new, sv_new) = jax.lax.scan(
+            body, x,
+            (params["dec_layers"], cache.self_k, cache.self_v,
+             cache.cross_k, cache.cross_v),
+        )
+        x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = logits_for_tokens(x, params["lm_head"])
+        return logits, cache._replace(self_k=sk_new, self_v=sv_new,
+                                      index=idx + 1)

@@ -1,0 +1,249 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+applied every ``attn_every`` layers (weights shared, per-application KV
+caches).  Sub-quadratic in sequence length between attention applications,
+which is why this family runs the long_500k cell.
+
+Structure: layers are partitioned into ``n_apps`` groups; each group is
+[shared attention block] → scan over its Mamba2 layers.  The group loop is a
+static Python loop (n_apps ≈ 7), so each application's KV cache is indexed
+statically and the scan bodies stay deduplicated in HLO.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.layers.attention import (
+    attention_init,
+    decode_attention,
+    mix_sequence,
+    out_project,
+    qkv_project,
+)
+from repro.layers.mlp import mlp, mlp_init
+from repro.layers.norms import rms_norm, rms_norm_init
+from repro.layers.ssm import (
+    SSMCache,
+    dims_from_cfg,
+    mamba_block,
+    mamba_block_decode,
+    ssm_init,
+    ssm_init_cache,
+)
+from repro.models.base import (
+    ParallelContext,
+    cross_entropy_chunked,
+    embed_init,
+    lm_head_init,
+    logits_for_tokens,
+    remat_wrap,
+)
+from repro.models.config import ModelConfig
+
+
+class HybridCache(NamedTuple):
+    conv: jax.Array  # (L, B, W-1, C)
+    state: jax.Array  # (L, B, H, P, N)
+    attn_k: jax.Array  # (n_apps, B, S, KH, hd)
+    attn_v: jax.Array
+    index: jax.Array  # scalar int32
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig, ctx: Optional[ParallelContext] = None):
+        self.cfg = cfg
+        self.ctx = ctx or ParallelContext()
+        self.dims = dims_from_cfg(cfg)
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        self.n_apps = -(-cfg.num_layers // cfg.attn_every)
+        # group g covers mamba layers [bounds[g], bounds[g+1])
+        self.bounds = [min(g * cfg.attn_every, cfg.num_layers)
+                       for g in range(self.n_apps + 1)]
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ke, kl, ka, km, kh = jax.random.split(key, 5)
+        layer_keys = jax.random.split(kl, cfg.num_layers)
+
+        def layer_init(k):
+            return {"ln": rms_norm_init(cfg.d_model),
+                    "ssm": ssm_init(k, self.dims, dtype=self.dtype)}
+
+        return {
+            "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, self.dtype),
+            "layers": jax.vmap(layer_init)(layer_keys),
+            "shared": {
+                "ln1": rms_norm_init(cfg.d_model),
+                "ln2": rms_norm_init(cfg.d_model),
+                "attn": attention_init(
+                    ka, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.resolved_head_dim, dtype=self.dtype),
+                "mlp": mlp_init(km, cfg.d_model, cfg.d_ff, dtype=self.dtype),
+            },
+            "final_norm": rms_norm_init(cfg.d_model),
+            "lm_head": lm_head_init(kh, cfg.d_model, cfg.vocab_size,
+                                    self.dtype),
+        }
+
+    def _group_params(self, params, g):
+        lo, hi = self.bounds[g], self.bounds[g + 1]
+        return jax.tree.map(lambda a: a[lo:hi], params["layers"])
+
+    # ---------------------------------------------------------------- shared
+    def _shared_block_seq(self, shared, x, positions, *, collect_kv: bool):
+        cfg = self.cfg
+        h = rms_norm(shared["ln1"], x, cfg.norm_eps)
+        q, k, v = qkv_project(shared["attn"], h)
+        q = apply_rope_local(q, positions, cfg.rope_theta)
+        k = apply_rope_local(k, positions, cfg.rope_theta)
+        y = mix_sequence(cfg, q, k, v, causal=True)
+        x = x + out_project(shared["attn"], y)
+        h = rms_norm(shared["ln2"], x, cfg.norm_eps)
+        x = x + mlp(shared["mlp"], h)
+        return (x, (k, v)) if collect_kv else (x, None)
+
+    def _mamba_group(self, group_params, x, *, collect_cache: bool):
+        cfg, ctx = self.cfg, self.ctx
+        impl = "pallas" if cfg.attn_impl == "pallas" else "chunked"
+
+        def body(xc, p_layer):
+            h = rms_norm(p_layer["ln"], xc, cfg.norm_eps)
+            if collect_cache:
+                y, c = mamba_block(p_layer["ssm"], self.dims, h,
+                                   norm_eps=cfg.norm_eps, impl=impl,
+                                   return_cache=True)
+            else:
+                y = mamba_block(p_layer["ssm"], self.dims, h,
+                                norm_eps=cfg.norm_eps, impl=impl)
+                c = None
+            xc = ctx.constrain(xc + y, P(ctx.batch_spec_entry(), None, None))
+            return xc, c
+
+        body = remat_wrap(body, cfg)
+        return jax.lax.scan(body, x, group_params)
+
+    def _run_layers(self, params, x, positions, *, collect_cache: bool = False):
+        shared = params["shared"]
+        kvs, ssm_caches = [], []
+        for g in range(self.n_apps):
+            x, kv = self._shared_block_seq(shared, x, positions,
+                                           collect_kv=collect_cache)
+            x, c = self._mamba_group(self._group_params(params, g), x,
+                                     collect_cache=collect_cache)
+            if collect_cache:
+                kvs.append(kv)
+                ssm_caches.append(c)
+        if not collect_cache:
+            return x, None
+        attn_k = jnp.stack([kv[0] for kv in kvs])  # (n_apps,B,S,KH,hd)
+        attn_v = jnp.stack([kv[1] for kv in kvs])
+        conv = jnp.concatenate([c.conv for c in ssm_caches])  # (L,...)
+        state = jnp.concatenate([c.state for c in ssm_caches])
+        return x, (attn_k, attn_v, conv, state)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]
+        B, S = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x = self.ctx.constrain(x, P(self.ctx.batch_spec_entry(), None, None))
+        x, _ = self._run_layers(params, x, positions)
+        x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        ce = cross_entropy_chunked(x, params["lm_head"], batch["targets"])
+        return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+    # --------------------------------------------------------------- serving
+    def init_cache(self, batch_size: int, max_len: int) -> HybridCache:
+        cfg, d = self.cfg, self.dims
+        c = ssm_init_cache(d, batch_size, self.dtype)
+        L = cfg.num_layers
+        return HybridCache(
+            conv=jnp.broadcast_to(c.conv[None], (L,) + c.conv.shape).copy(),
+            state=jnp.broadcast_to(c.state[None], (L,) + c.state.shape).copy(),
+            attn_k=jnp.zeros((self.n_apps, batch_size, max_len,
+                              cfg.num_kv_heads, cfg.resolved_head_dim),
+                             self.dtype),
+            attn_v=jnp.zeros((self.n_apps, batch_size, max_len,
+                              cfg.num_kv_heads, cfg.resolved_head_dim),
+                             self.dtype),
+            index=jnp.zeros((), jnp.int32),
+        )
+
+    def prefill(self, params, batch, max_len: Optional[int] = None
+                ) -> tuple[jax.Array, HybridCache]:
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]
+        B, S = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x, caches = self._run_layers(params, x, positions, collect_cache=True)
+        x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = logits_for_tokens(x[:, -1:], params["lm_head"])
+        attn_k, attn_v, conv, state = caches
+        if max_len is not None and max_len > S:
+            pad = ((0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0))
+            attn_k, attn_v = jnp.pad(attn_k, pad), jnp.pad(attn_v, pad)
+        return logits, HybridCache(conv=conv, state=state, attn_k=attn_k,
+                                   attn_v=attn_v,
+                                   index=jnp.asarray(S, jnp.int32))
+
+    def decode_step(self, params, batch, cache: HybridCache
+                    ) -> tuple[jax.Array, HybridCache]:
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]  # (B, 1, D)
+        B = x.shape[0]
+        idx = cache.index
+        positions = jnp.broadcast_to(idx[None, None], (B, 1))
+        shared = params["shared"]
+
+        def shared_decode(xc, ak, av):
+            h = rms_norm(shared["ln1"], xc, cfg.norm_eps)
+            q, k, v = qkv_project(shared["attn"], h)
+            q = apply_rope_local(q, positions, cfg.rope_theta)
+            k = apply_rope_local(k, positions, cfg.rope_theta)
+            ak = jax.lax.dynamic_update_slice_in_dim(ak, k, idx, axis=1)
+            av = jax.lax.dynamic_update_slice_in_dim(av, v, idx, axis=1)
+            y = decode_attention(q, ak, av, idx + 1)
+            xc = xc + out_project(shared["attn"], y)
+            h = rms_norm(shared["ln2"], xc, cfg.norm_eps)
+            return xc + mlp(shared["mlp"], h), ak, av
+
+        def mamba_decode_group(xc, group_params, conv_g, state_g):
+            def body(xb, inputs):
+                p_layer, conv_l, state_l = inputs
+                h = rms_norm(p_layer["ln"], xb, cfg.norm_eps)
+                y, new_c = mamba_block_decode(
+                    p_layer["ssm"], self.dims, h,
+                    SSMCache(conv=conv_l, state=state_l),
+                    norm_eps=cfg.norm_eps)
+                return xb + y, (new_c.conv, new_c.state)
+
+            return jax.lax.scan(body, xc, (group_params, conv_g, state_g))
+
+        ak_new, av_new, conv_new, state_new = [], [], [], []
+        for g in range(self.n_apps):
+            x, ak, av = shared_decode(x, cache.attn_k[g], cache.attn_v[g])
+            lo, hi = self.bounds[g], self.bounds[g + 1]
+            x, (conv_g, state_g) = mamba_decode_group(
+                x, self._group_params(params, g),
+                cache.conv[lo:hi], cache.state[lo:hi])
+            ak_new.append(ak)
+            av_new.append(av)
+            conv_new.append(conv_g)
+            state_new.append(state_g)
+
+        x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = logits_for_tokens(x, params["lm_head"])
+        return logits, HybridCache(
+            conv=jnp.concatenate(conv_new), state=jnp.concatenate(state_new),
+            attn_k=jnp.stack(ak_new), attn_v=jnp.stack(av_new),
+            index=idx + 1)
+
+
+def apply_rope_local(x, positions, theta):
+    from repro.layers.rotary import apply_rope
+
+    return apply_rope(x, positions, theta)

@@ -1,0 +1,279 @@
+"""Decoder-only transformer LM: dense, MoE and VLM-backbone variants.
+
+One implementation covers granite-20b, qwen3-32b, internlm2-20b, qwen1.5-4b
+(dense), qwen2-moe-a2.7b, arctic-480b (MoE) and qwen2-vl-72b (VLM backbone —
+``input_mode="embeddings"`` with M-RoPE; the patch frontend is a stub that
+supplies fused embeddings, per the assignment).
+
+Layers are *stacked* and iterated with ``lax.scan`` (MaxText-style): HLO size
+and compile time are O(1) in depth, and remat policy applies per layer.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.layers.attention import (
+    attention_init,
+    decode_attention,
+    mix_sequence,
+    out_project,
+    qkv_project,
+)
+from repro.layers.mlp import mlp, mlp_init
+from repro.layers.moe import moe_apply_local, moe_apply_sharded, moe_init, \
+    padded_experts
+from repro.layers.norms import rms_norm, rms_norm_init
+from repro.layers.rotary import apply_mrope, apply_rope
+from repro.models.base import (
+    ParallelContext,
+    cross_entropy_chunked,
+    embed_init,
+    lm_head_init,
+    logits_for_tokens,
+    remat_wrap,
+)
+from repro.models.config import ModelConfig
+
+
+class KVCache(NamedTuple):
+    """Layer-stacked KV cache.
+
+    K/V are stored as RAW 16-bit words (uint16 bitcast of bf16) and bitcast
+    back at the point of use.  On TPU this is a no-op (same bits, bf16 is
+    native); on CPU hosts it keeps the multi-GiB cache out of XLA's float-
+    normalization pass, which otherwise shadows every bf16 buffer touched by
+    a float op with an f32 copy (2× decode memory, measured).
+    """
+
+    k: jax.Array  # (L, B, S, KH, hd) uint16 (bf16 bits)
+    v: jax.Array
+    index: jax.Array  # scalar int32 — next write slot == #valid tokens
+
+
+def kv_to_bits(x: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(x, jnp.uint16)
+
+
+def kv_from_bits(x: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(x, jnp.bfloat16)
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig, ctx: Optional[ParallelContext] = None):
+        self.cfg = cfg
+        self.ctx = ctx or ParallelContext()
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        if cfg.family == "moe":
+            model_axis = (self.ctx.mesh.shape[self.ctx.model_axis]
+                          if self.ctx.mesh is not None else 1)
+            self.num_padded_experts = padded_experts(cfg.num_experts,
+                                                     max(model_axis, 1))
+        else:
+            self.num_padded_experts = 0
+
+    # ------------------------------------------------------------------ init
+    def _layer_init(self, key) -> dict:
+        cfg = self.cfg
+        ka, km, ks, kd = jax.random.split(key, 4)
+        p = {
+            "ln1": rms_norm_init(cfg.d_model),
+            "ln2": rms_norm_init(cfg.d_model),
+            "attn": attention_init(
+                ka, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.resolved_head_dim, qkv_bias=cfg.qkv_bias,
+                qk_norm=cfg.qk_norm, dtype=self.dtype,
+            ),
+        }
+        if cfg.family == "moe":
+            p["moe"] = moe_init(km, cfg.d_model, cfg.moe_d_ff,
+                                cfg.num_experts, self.num_padded_experts,
+                                dtype=self.dtype)
+            if cfg.num_shared_experts:
+                p["shared_mlp"] = mlp_init(
+                    ks, cfg.d_model,
+                    cfg.num_shared_experts * cfg.moe_d_ff, dtype=self.dtype)
+            if cfg.dense_residual:
+                p["dense_mlp"] = mlp_init(kd, cfg.d_model, cfg.d_ff,
+                                          dtype=self.dtype)
+        else:
+            p["mlp"] = mlp_init(km, cfg.d_model, cfg.d_ff, dtype=self.dtype,
+                                variant=cfg.mlp_variant)
+        return p
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ke, kl, kh = jax.random.split(key, 3)
+        layer_keys = jax.random.split(kl, cfg.num_layers)
+        params = {
+            "layers": jax.vmap(self._layer_init)(layer_keys),
+            "final_norm": rms_norm_init(cfg.d_model),
+            "lm_head": lm_head_init(kh, cfg.d_model, cfg.vocab_size,
+                                    self.dtype),
+        }
+        if cfg.input_mode == "tokens":
+            params["embed"] = embed_init(ke, cfg.vocab_size, cfg.d_model,
+                                         self.dtype)
+        return params
+
+    # ----------------------------------------------------------- core blocks
+    def _ffn(self, p_layer, h):
+        cfg, ctx = self.cfg, self.ctx
+        if cfg.family != "moe":
+            return mlp(p_layer["mlp"], h), jnp.zeros((), jnp.float32)
+        if ctx.mesh is not None:
+            y, aux = moe_apply_sharded(p_layer["moe"], h, cfg, ctx.mesh,
+                                       ctx.batch_axes, ctx.model_axis)
+        else:
+            y, aux = moe_apply_local(p_layer["moe"], h, cfg)
+        if "shared_mlp" in p_layer:
+            y = y + mlp(p_layer["shared_mlp"], h)
+        if "dense_mlp" in p_layer:
+            y = y + mlp(p_layer["dense_mlp"], h)
+        return y, aux
+
+    def _rope(self, q, k, positions):
+        cfg = self.cfg
+        if cfg.mrope:
+            return (apply_mrope(q, positions, cfg.rope_theta),
+                    apply_mrope(k, positions, cfg.rope_theta))
+        return (apply_rope(q, positions, cfg.rope_theta),
+                apply_rope(k, positions, cfg.rope_theta))
+
+    def _block_seq(self, p_layer, x, positions):
+        """Full-sequence block (train / prefill). Returns (x, aux, (k, v))."""
+        cfg, ctx = self.cfg, self.ctx
+        h = rms_norm(p_layer["ln1"], x, cfg.norm_eps)
+        q, k, v = qkv_project(p_layer["attn"], h)
+        q, k = self._rope(q, k, positions)
+        y = mix_sequence(cfg, q, k, v, causal=True)
+        y = out_project(p_layer["attn"], y)
+        x = ctx.constrain(x + y, P(ctx.batch_spec_entry(), None, None))
+        h = rms_norm(p_layer["ln2"], x, cfg.norm_eps)
+        f, aux = self._ffn(p_layer, h)
+        x = ctx.constrain(x + f, P(ctx.batch_spec_entry(), None, None))
+        return x, aux, (k, v)
+
+    def _run_layers(self, params, x, positions, *, collect_cache: bool):
+        cfg = self.cfg
+
+        def body(carry, p_layer):
+            xc, aux = carry
+            xc, a, kv = self._block_seq(p_layer, xc, positions)
+            out = kv if collect_cache else None
+            return (xc, aux + a), out
+
+        body = remat_wrap(body, cfg)
+        (x, aux), kvs = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                     params["layers"])
+        return x, aux, kvs
+
+    # ------------------------------------------------------------------ train
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        x, aux, _ = self._run_layers(params, x, positions, collect_cache=False)
+        x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        ce = cross_entropy_chunked(x, params["lm_head"], batch["targets"])
+        loss = ce + cfg.router_aux_weight * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        if cfg.input_mode == "tokens":
+            x = params["embed"][batch["tokens"]]
+            B, S = batch["tokens"].shape
+        else:
+            x = batch["embeds"].astype(self.dtype)
+            B, S = x.shape[0], x.shape[1]
+        if cfg.mrope:
+            positions = batch["positions"]  # (3, B, S)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x = self.ctx.constrain(x, P(self.ctx.batch_spec_entry(), None, None))
+        return x, positions
+
+    # ---------------------------------------------------------------- serving
+    def init_cache(self, batch_size: int, max_len: int) -> KVCache:
+        cfg = self.cfg
+        shape = (cfg.num_layers, batch_size, max_len, cfg.num_kv_heads,
+                 cfg.resolved_head_dim)
+        return KVCache(
+            k=jnp.zeros(shape, jnp.uint16),
+            v=jnp.zeros(shape, jnp.uint16),
+            index=jnp.zeros((), jnp.int32),
+        )
+
+    def prefill(self, params, batch, max_len: Optional[int] = None
+                ) -> tuple[jax.Array, KVCache]:
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        S = x.shape[1]
+        x, _, kvs = self._run_layers(params, x, positions, collect_cache=True)
+        x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = logits_for_tokens(x[:, -1:], params["lm_head"])
+        k, v = kvs
+        if max_len is not None and max_len > S:
+            pad = ((0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        cache = KVCache(k=kv_to_bits(k), v=kv_to_bits(v),
+                        index=jnp.asarray(S, jnp.int32))
+        return logits, cache
+
+    def decode_step(self, params, batch, cache: KVCache
+                    ) -> tuple[jax.Array, KVCache]:
+        """One token for every sequence.  batch: {"tokens": (B,1)} or embeds."""
+        cfg, ctx = self.cfg, self.ctx
+        if cfg.input_mode == "tokens":
+            x = params["embed"][batch["tokens"]]
+            B = batch["tokens"].shape[0]
+        else:
+            x = batch["embeds"].astype(self.dtype)
+            B = x.shape[0]
+        if cfg.mrope:
+            positions = batch["positions"]  # (3, B, 1)
+        else:
+            positions = jnp.broadcast_to(cache.index[None, None], (B, 1))
+        idx = cache.index
+
+        # Memory discipline (measured on qwen1.5-4b decode_32k, 22.5 → 8.9
+        # GiB/device):
+        #  * the cache rides the scan as *uint16* xs — integer buffers are
+        #    immune to backend float normalization (a bf16 cache in a while
+        #    loop gets shadowed in f32), and the loop structure forces
+        #    per-layer liveness of the upcast slices;
+        #  * reads are immutable — the new token's own K/V folds into the
+        #    online softmax (self_kv) — so there is no ys cache stack;
+        #  * the write-back is a single uint16 DUS after the loop (pure data
+        #    movement: in-place with donation).
+        def body(xc, inputs):
+            p_layer, k_bits, v_bits = inputs
+            h = rms_norm(p_layer["ln1"], xc, cfg.norm_eps)
+            q, k, v = qkv_project(p_layer["attn"], h)
+            q, k = self._rope(q, k, positions)
+            y = decode_attention(q, kv_from_bits(k_bits),
+                                 kv_from_bits(v_bits), idx, self_kv=(k, v))
+            y = out_project(p_layer["attn"], y)
+            xc = xc + y
+            h = rms_norm(p_layer["ln2"], xc, cfg.norm_eps)
+            f, _ = self._ffn(p_layer, h)
+            return xc + f, (k, v)
+
+        x, (k_out, v_out) = jax.lax.scan(
+            body, x, (params["layers"], cache.k, cache.v))
+        k_steps = kv_to_bits(k_out.astype(jnp.bfloat16))
+        v_steps = kv_to_bits(v_out.astype(jnp.bfloat16))
+        x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = logits_for_tokens(x, params["lm_head"])
+        zero = jnp.zeros((), jnp.int32)
+        # uint16 DUS: pure data movement — in-place with donation, immune to
+        # backend float normalization
+        k_new = jax.lax.dynamic_update_slice(
+            cache.k, k_steps, (zero, zero, idx, zero, zero))
+        v_new = jax.lax.dynamic_update_slice(
+            cache.v, v_steps, (zero, zero, idx, zero, zero))
+        return logits, KVCache(k=k_new, v=v_new, index=idx + 1)

@@ -1,0 +1,137 @@
+"""Mamba2 (attention-free SSM) language model — mamba2-780m."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.layers.norms import rms_norm, rms_norm_init
+from repro.layers.ssm import (
+    SSMCache,
+    dims_from_cfg,
+    mamba_block,
+    mamba_block_decode,
+    ssm_init,
+    ssm_init_cache,
+)
+from repro.models.base import (
+    ParallelContext,
+    cross_entropy_chunked,
+    embed_init,
+    lm_head_init,
+    logits_for_tokens,
+    remat_wrap,
+)
+from repro.models.config import ModelConfig
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array  # (L, B, W-1, C)
+    state: jax.Array  # (L, B, H, P, N) fp32
+    index: jax.Array  # scalar int32 (for API parity; recurrence is O(1))
+
+
+class MambaLM:
+    def __init__(self, cfg: ModelConfig, ctx: Optional[ParallelContext] = None):
+        self.cfg = cfg
+        self.ctx = ctx or ParallelContext()
+        self.dims = dims_from_cfg(cfg)
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def _layer_init(self, key) -> dict:
+        return {
+            "ln": rms_norm_init(self.cfg.d_model),
+            "ssm": ssm_init(key, self.dims, dtype=self.dtype),
+        }
+
+    def init(self, key) -> dict:
+        ke, kl, kh = jax.random.split(key, 3)
+        layer_keys = jax.random.split(kl, self.cfg.num_layers)
+        return {
+            "embed": embed_init(ke, self.cfg.vocab_size, self.cfg.d_model,
+                                self.dtype),
+            "layers": jax.vmap(self._layer_init)(layer_keys),
+            "final_norm": rms_norm_init(self.cfg.d_model),
+            "lm_head": lm_head_init(kh, self.cfg.d_model, self.cfg.vocab_size,
+                                    self.dtype),
+        }
+
+    def _run_layers(self, params, x, *, collect_cache: bool = False):
+        cfg, ctx = self.cfg, self.ctx
+        impl = "pallas" if cfg.attn_impl == "pallas" else "chunked"
+
+        def body(xc, p_layer):
+            h = rms_norm(p_layer["ln"], xc, cfg.norm_eps)
+            if collect_cache:
+                y, cache = mamba_block(p_layer["ssm"], self.dims, h,
+                                       norm_eps=cfg.norm_eps, impl=impl,
+                                       return_cache=True)
+            else:
+                y = mamba_block(p_layer["ssm"], self.dims, h,
+                                norm_eps=cfg.norm_eps, impl=impl)
+                cache = None
+            xc = ctx.constrain(xc + y, P(ctx.batch_spec_entry(), None, None))
+            return xc, cache
+
+        body = remat_wrap(body, cfg)
+        x, caches = jax.lax.scan(body, x, params["layers"])
+        return (x, caches) if collect_cache else x
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]
+        x = self.ctx.constrain(x, P(self.ctx.batch_spec_entry(), None, None))
+        x = self._run_layers(params, x)
+        x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        ce = cross_entropy_chunked(x, params["lm_head"], batch["targets"])
+        return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+    def init_cache(self, batch_size: int, max_len: int) -> MambaCache:
+        del max_len  # O(1) state
+        d = self.dims
+        c = ssm_init_cache(d, batch_size, self.dtype)
+        L = self.cfg.num_layers
+        return MambaCache(
+            conv=jnp.broadcast_to(c.conv[None], (L,) + c.conv.shape).copy(),
+            state=jnp.broadcast_to(c.state[None], (L,) + c.state.shape).copy(),
+            index=jnp.zeros((), jnp.int32),
+        )
+
+    def prefill(self, params, batch, max_len=None) -> tuple[jax.Array, MambaCache]:
+        """Prefill: run the sequence, emitting each layer's terminal
+        recurrent state + conv window as the decode cache (O(1) size, so
+        ``max_len`` is ignored)."""
+        del max_len
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]
+        B, S = batch["tokens"].shape
+        x, caches = self._run_layers(params, x, collect_cache=True)
+        x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = logits_for_tokens(x[:, -1:], params["lm_head"])
+        cache = MambaCache(conv=caches.conv, state=caches.state,
+                           index=jnp.asarray(S, jnp.int32))
+        return logits, cache
+
+    def decode_step(self, params, batch, cache: MambaCache
+                    ) -> tuple[jax.Array, MambaCache]:
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]  # (B, 1, D)
+
+        def body(xc, inputs):
+            p_layer, conv_l, state_l = inputs
+            h = rms_norm(p_layer["ln"], xc, cfg.norm_eps)
+            y, new_c = mamba_block_decode(
+                p_layer["ssm"], self.dims, h,
+                SSMCache(conv=conv_l, state=state_l), norm_eps=cfg.norm_eps,
+            )
+            return xc + y, (new_c.conv, new_c.state)
+
+        x, (conv_new, state_new) = jax.lax.scan(
+            body, x, (params["layers"], cache.conv, cache.state)
+        )
+        x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = logits_for_tokens(x, params["lm_head"])
+        return logits, MambaCache(conv=conv_new, state=state_new,
+                                  index=cache.index + 1)

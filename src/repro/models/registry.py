@@ -1,0 +1,76 @@
+"""Model factory + abstract input specs for every (arch × shape) cell."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ParallelContext
+from repro.models.config import SHAPES, ModelConfig, ShapeCell
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid_lm import HybridLM
+from repro.models.lm import TransformerLM
+from repro.models.mamba_lm import MambaLM
+
+_FAMILY_CLS = {
+    "dense": TransformerLM,
+    "moe": TransformerLM,
+    "vlm": TransformerLM,
+    "ssm": MambaLM,
+    "hybrid": HybridLM,
+    "encdec": EncDecLM,
+}
+
+
+def build_model(cfg: ModelConfig, ctx: Optional[ParallelContext] = None):
+    return _FAMILY_CLS[cfg.family](cfg, ctx)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStruct stand-ins for the step inputs of one cell.
+
+    ``train``/``prefill`` specs feed loss/prefill; ``decode`` specs feed
+    decode_step and include the KV/SSM cache at full sequence length
+    (obtained via jax.eval_shape on init_cache — no allocation).
+    """
+    B, S = cell.global_batch, cell.seq_len
+    D = cfg.d_model
+    bf16, i32 = jnp.bfloat16, jnp.int32
+
+    if cell.kind in ("train", "prefill"):
+        batch = {}
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((B, S, D), bf16)
+            batch["tokens"] = _sds((B, S), i32)
+        elif cfg.input_mode == "embeddings":
+            batch["embeds"] = _sds((B, S, D), bf16)
+            if cfg.mrope:
+                batch["positions"] = _sds((3, B, S), i32)
+        else:
+            batch["tokens"] = _sds((B, S), i32)
+        if cell.kind == "train":
+            batch["targets"] = _sds((B, S), i32)
+        return {"batch": batch}
+
+    # decode: one new token against a cache of length S
+    batch = {}
+    if cfg.input_mode == "embeddings":
+        batch["embeds"] = _sds((B, 1, D), bf16)
+        if cfg.mrope:
+            batch["positions"] = _sds((3, B, 1), i32)
+    else:
+        batch["tokens"] = _sds((B, 1), i32)
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {"batch": batch, "cache": cache}
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs via eval_shape — no allocation."""
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))

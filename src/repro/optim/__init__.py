@@ -1,0 +1,51 @@
+"""Optimizers + LR schedule; ``build_optimizer(cfg)`` picks per config."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.optim.adafactor import AdafactorState, adafactor_init, \
+    adafactor_update
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, \
+    clip_by_global_norm, global_norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = base_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, jnp.maximum(cos, 0.1 * base_lr))
+
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (params, state)
+
+
+def build_optimizer(cfg) -> Optimizer:
+    if cfg.optimizer == "adafactor":
+        return Optimizer(
+            name="adafactor",
+            init=adafactor_init,
+            update=lambda g, s, p, lr: adafactor_update(g, s, p, lr=lr),
+        )
+    return Optimizer(
+        name="adamw",
+        init=adamw_init,
+        update=lambda g, s, p, lr: adamw_update(g, s, p, lr=lr),
+    )
+
+
+__all__ = [
+    "AdafactorState", "AdamWState", "Optimizer", "adafactor_init",
+    "adafactor_update", "adamw_init", "adamw_update", "build_optimizer",
+    "clip_by_global_norm", "cosine_schedule", "global_norm",
+]

@@ -1,0 +1,119 @@
+"""Train/serve step factories — the functions the dry-run lowers.
+
+``make_train_step``: value_and_grad over the model loss, global-norm clip,
+optional EF-int8 gradient compression, optimizer update, donated buffers.
+Optional microbatch gradient accumulation runs as a ``lax.scan`` whose
+per-microbatch backward overlaps the accumulated psum under GSPMD.
+
+``make_prefill_step`` / ``make_decode_step``: serving entry points
+(decode_step is what the ``decode_*``/``long_*`` dry-run cells lower).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import EFState, compress_grads, ef_init
+from repro.optim import Optimizer, build_optimizer, clip_by_global_norm, \
+    cosine_schedule
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    ef_state: Optional[EFState]
+    step: jax.Array
+
+
+def init_train_state(model, key, *, compress: bool = False) -> TrainState:
+    params = model.init(key)
+    optimizer = build_optimizer(model.cfg)
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        ef_state=ef_init(params) if compress else None,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def abstract_train_state(model, *, compress: bool = False):
+    return jax.eval_shape(
+        lambda: init_train_state(model, jax.random.key(0), compress=compress))
+
+
+def make_train_step(model, *, base_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000, max_grad_norm: float = 1.0,
+                    compress: bool = False, accum_steps: int = 1,
+                    accum_dtype=jnp.float32):
+    optimizer = build_optimizer(model.cfg)
+    lr_fn = cosine_schedule(base_lr, warmup, total_steps)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        def micro(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype), acc, grads)
+            return (acc, loss_acc + loss), None
+
+        def split(path, x):
+            # batch axis is dim 0 except M-RoPE "positions" (3, B, S)
+            name = str(getattr(path[-1], "key", ""))
+            if name == "positions":
+                r = x.reshape(x.shape[:1] + (accum_steps,
+                                             x.shape[1] // accum_steps)
+                              + x.shape[2:])
+                return jnp.moveaxis(r, 1, 0)  # (accum, 3, B/accum, S)
+            return x.reshape((accum_steps, x.shape[0] // accum_steps)
+                             + x.shape[1:])
+
+        micro_batches = jax.tree_util.tree_map_with_path(split, batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+        (grads, loss_sum), _ = jax.lax.scan(
+            micro, (zeros, jnp.zeros(())), micro_batches)
+        scale = 1.0 / accum_steps
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads)
+        return loss_sum * scale, {"ce": loss_sum * scale,
+                                  "aux": jnp.zeros(())}, grads
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        loss, metrics, grads = compute_grads(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        ef_state = state.ef_state
+        if compress and ef_state is not None:
+            grads, ef_state, _ = compress_grads(grads, ef_state)
+        lr = lr_fn(state.step)
+        params, opt_state = optimizer.update(grads, state.opt_state,
+                                             state.params, lr)
+        new_state = TrainState(params=params, opt_state=opt_state,
+                               ef_state=ef_state, step=state.step + 1)
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr, **metrics}
+        return new_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, batch, cache):
+        return model.decode_step(params, batch, cache)
+
+    return decode_step

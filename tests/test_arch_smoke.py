@@ -1,0 +1,173 @@
+"""Per-architecture smoke tests (reduced configs, single CPU device).
+
+For every assigned arch: instantiate the reduced same-family config, run one
+forward/train step, assert output shapes + finiteness, check grads are
+finite, and verify prefill→decode_step consistency against teacher-forced
+full-sequence logits (the serving path must agree with the training path).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, supported_shapes
+from repro.models.registry import build_model, input_specs
+from repro.models.config import SHAPES
+
+B, S = 2, 32
+
+
+def make_batch(cfg, key, *, batch=B, seq=S, with_targets=True):
+    ks = jax.random.split(key, 4)
+    out = {}
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(ks[0], (batch, seq, cfg.d_model),
+                                          jnp.bfloat16)
+        out["tokens"] = jax.random.randint(ks[1], (batch, seq), 0,
+                                           cfg.vocab_size)
+    elif cfg.input_mode == "embeddings":
+        out["embeds"] = jax.random.normal(ks[0], (batch, seq, cfg.d_model),
+                                          jnp.bfloat16)
+        if cfg.mrope:
+            out["positions"] = jnp.broadcast_to(
+                jnp.arange(seq)[None, None, :], (3, batch, seq))
+    else:
+        out["tokens"] = jax.random.randint(ks[1], (batch, seq), 0,
+                                           cfg.vocab_size)
+    if with_targets:
+        out["targets"] = jax.random.randint(ks[2], (batch, seq), 0,
+                                            cfg.vocab_size)
+    return out
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Init each smoke model once per test session."""
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = get_config(name, smoke=True)
+            model = build_model(cfg)
+            params = model.init(jax.random.key(0))
+            cache[name] = (cfg, model, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_loss_finite(name, built):
+    cfg, model, params = built(name)
+    batch = make_batch(cfg, jax.random.key(1))
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_grads_finite(name, built):
+    cfg, model, params = built(name)
+    batch = make_batch(cfg, jax.random.key(2))
+    grads = jax.jit(jax.grad(lambda p, b: model.loss(p, b)[0]))(params, batch)
+    flat, _ = jax.tree.flatten(grads)
+    for g in flat:
+        assert np.isfinite(np.asarray(g, np.float32)).all(), name
+    # at least some gradient signal
+    norms = [float(jnp.linalg.norm(g.astype(jnp.float32))) for g in flat]
+    assert max(norms) > 0
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_prefill_decode_consistency(name, built):
+    """decode_step after prefill(T) must reproduce teacher-forced logits."""
+    cfg, model, params = built(name)
+    T = 16
+    full = make_batch(cfg, jax.random.key(3), with_targets=False)
+
+    def slice_batch(b, lo, hi):
+        out = {}
+        for k, v in b.items():
+            if k == "positions":
+                out[k] = v[:, :, lo:hi]
+            elif k == "frames":
+                out[k] = v  # encoder input is not sliced
+            else:
+                out[k] = v[:, lo:hi]
+        return out
+
+    prefix = slice_batch(full, 0, T)
+    logits_p, cache = jax.jit(model.prefill, static_argnames=("max_len",))(
+        params, prefix, max_len=S)
+    step = slice_batch(full, T, T + 1)
+    logits_d, cache = jax.jit(model.decode_step)(params, step, cache)
+
+    # teacher-forced oracle: prefill over T+1 tokens, take last logits
+    longer = slice_batch(full, 0, T + 1)
+    logits_full, _ = jax.jit(model.prefill, static_argnames=("max_len",))(
+        params, longer, max_len=S)
+    # bf16 params/activations: allow bf16-scale accumulation noise
+    np.testing.assert_allclose(
+        np.asarray(logits_d[:, 0], np.float32),
+        np.asarray(logits_full[:, 0], np.float32),
+        rtol=1e-1, atol=6e-2,
+    )
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_step_advances_cache(name, built):
+    cfg, model, params = built(name)
+    cache = model.init_cache(B, S)
+    step = make_batch(cfg, jax.random.key(4), seq=1, with_targets=False)
+    if cfg.family == "encdec":
+        # decode against an empty cross cache is legal (masked)
+        step.pop("frames")
+        step["tokens"] = step["tokens"][:, :1]
+    logits, cache2 = jax.jit(model.decode_step)(params, step, cache)
+    assert int(cache2.index) == int(cache.index) + 1
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_input_specs_cover_supported_shapes(name):
+    cfg = get_config(name)
+    for shape_name in supported_shapes(cfg):
+        cell = SHAPES[shape_name]
+        specs = input_specs(cfg, cell)
+        assert "batch" in specs
+        if cell.kind == "decode":
+            assert "cache" in specs
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the exact published numbers."""
+    c = get_config("granite-20b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (52, 6144, 48, 1, 24576, 49152)
+    c = get_config("qwen3-32b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.vocab_size, c.qk_norm) == (64, 5120, 64, 8, 151936, True)
+    c = get_config("arctic-480b")
+    assert (c.num_experts, c.num_experts_per_tok, c.dense_residual,
+            c.d_model) == (128, 2, True, 7168)
+    c = get_config("qwen2-moe-a2.7b")
+    assert (c.num_experts, c.num_experts_per_tok,
+            c.num_shared_experts) == (60, 4, 4)
+    c = get_config("mamba2-780m")
+    assert (c.num_layers, c.d_model, c.ssm_state) == (48, 1536, 128)
+    c = get_config("zamba2-1.2b")
+    assert (c.num_layers, c.d_model, c.ssm_state) == (38, 2048, 64)
+    c = get_config("qwen2-vl-72b")
+    assert (c.num_layers, c.d_model, c.mrope) == (80, 8192, True)
+    c = get_config("whisper-small")
+    assert (c.num_layers, c.num_encoder_layers, c.d_model) == (12, 12, 768)
+    # parameter counts are in the advertised ballpark
+    assert 15e9 < get_config("granite-20b").param_count() < 25e9
+    assert 25e9 < get_config("qwen3-32b").param_count() < 40e9
+    assert 420e9 < get_config("arctic-480b").param_count() < 540e9
+    assert 0.6e9 < get_config("mamba2-780m").param_count() < 1.0e9
+    assert 60e9 < get_config("qwen2-vl-72b").param_count() < 85e9

@@ -1,0 +1,118 @@
+"""Algorithm 1 (Adaptive Admission Control) convergence tests — the paper's
+Figures 2-5 in miniature."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    BathtubGCP,
+    Exponential,
+    Gamma,
+    adaptive_admission_control,
+    theorem2_cost,
+    theorem5_cost,
+    theorem5_delta,
+)
+from repro.core.policies import ThreePhasePolicy, phase_boundaries
+
+LAM, MU, K = 1 / 12, 1 / 24, 10.0
+
+
+def test_three_phase_policy_decomposition():
+    pol = ThreePhasePolicy(r=3.4)
+    assert pol.n_hat == 3
+    assert abs(pol.q - 0.4) < 1e-12
+    assert pol.admit_prob(2) == 1.0
+    assert pol.admit_prob(3) == pytest.approx(0.4)
+    assert pol.admit_prob(4) == 0.0
+    assert phase_boundaries(0.25) == (0, 0.25)
+
+
+def test_fig4_strong_delay_memoryless():
+    """M/M, δ=3 < 1/(λ+μ): cost → k−(k−1)μδ = 8.875, delay → 3."""
+    out = adaptive_admission_control(
+        Exponential(LAM), Exponential(MU), k=K, delta=3.0, eta=0.05,
+        eta_decay=0.05, r0=4.0, window_events=2048, n_windows=300,
+        key=jax.random.key(0),
+    )
+    assert abs(out["final_cost"] - theorem2_cost(K, MU, 3.0)) < 0.25
+    assert abs(out["final_delay"] - 3.0) < 0.5
+    assert out["r_star"] < 1.5  # strong regime ⇒ single-slot-ish knob
+
+
+def test_fig5_relaxed_delay_memoryless_converges_to_N3():
+    """M/M, δ=27 ≈ δ₃: r* → 3, cost → E[C₃] = 5.8 (Theorem 5)."""
+    out = adaptive_admission_control(
+        Exponential(LAM), Exponential(MU), k=K, delta=27.0, eta=0.02,
+        eta_decay=0.05, r0=0.5, r_max=8.0, window_events=4096, n_windows=500,
+        key=jax.random.key(1),
+    )
+    assert abs(out["r_star"] - 3.0) < 0.35
+    assert abs(out["final_cost"] - theorem5_cost(K, LAM, MU, 3)) < 0.25
+    assert abs(out["final_delay"] - 27.0) < 2.0
+
+
+def test_convergence_from_both_inits_agree():
+    """Paper's key empirical claim: low and high r₀ converge to the same r*."""
+    kwargs = dict(
+        k=K, delta=27.0, eta=0.02, eta_decay=0.05, r_max=8.0,
+        window_events=4096, n_windows=500,
+    )
+    lo = adaptive_admission_control(
+        Exponential(LAM), Exponential(MU), r0=0.5, key=jax.random.key(2),
+        **kwargs,
+    )
+    hi = adaptive_admission_control(
+        Exponential(LAM), Exponential(MU), r0=8.0, key=jax.random.key(3),
+        **kwargs,
+    )
+    assert abs(lo["r_star"] - hi["r_star"]) < 0.4
+    assert abs(lo["final_cost"] - hi["final_cost"]) < 0.3
+
+
+def test_fig2_bathtub_strong_delay():
+    """Bathtub spot (μ≈1/12), Poisson jobs (λ=1/12), δ=3: cost → ≈7.75."""
+    spot = BathtubGCP()
+    mu = spot.rate()
+    out = adaptive_admission_control(
+        Exponential(LAM), spot, k=K, delta=3.0, eta=0.05, eta_decay=0.05,
+        r0=2.0, window_events=2048, n_windows=300, key=jax.random.key(4),
+    )
+    target = theorem2_cost(K, mu, 3.0)  # ≈ 7.75 with μ≈1/12
+    assert abs(out["final_cost"] - target) < 0.35
+    assert out["final_delay"] <= 3.5
+
+
+def test_fig3_bathtub_relaxed_delay_converges():
+    """Bathtub, δ=18 (λδ>1): no closed form — but cost curves from far-apart
+    inits must converge to a common value (paper Fig. 3)."""
+    spot = BathtubGCP()
+    kwargs = dict(k=K, delta=18.0, eta=0.02, eta_decay=0.05, r_max=8.0,
+                  window_events=4096, n_windows=400)
+    lo = adaptive_admission_control(Exponential(LAM), spot, r0=0.3,
+                                    key=jax.random.key(5), **kwargs)
+    hi = adaptive_admission_control(Exponential(LAM), spot, r0=6.0,
+                                    key=jax.random.key(6), **kwargs)
+    assert abs(lo["final_cost"] - hi["final_cost"]) < 0.3
+    assert abs(lo["final_delay"] - 18.0) < 2.5
+
+
+def test_gamma_arrivals_supported():
+    """Paper §V also runs Gamma(12,1) job arrivals."""
+    out = adaptive_admission_control(
+        Gamma(12.0, 1.0), Exponential(MU), k=K, delta=3.0, eta=0.05,
+        eta_decay=0.05, r0=1.0, window_events=2048, n_windows=200,
+        key=jax.random.key(7),
+    )
+    assert np.isfinite(out["final_cost"])
+    assert out["final_delay"] < 4.5
+
+
+def test_delay_constraint_never_grossly_violated_at_convergence():
+    out = adaptive_admission_control(
+        Exponential(LAM), Exponential(MU), k=K, delta=10.0, eta=0.02,
+        eta_decay=0.05, r0=0.5, window_events=4096, n_windows=400,
+        key=jax.random.key(8),
+    )
+    tail = out["window_delay"][-30:]
+    assert abs(tail.mean() - 10.0) < 2.0

@@ -1,0 +1,94 @@
+"""Arrival-process unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.arrivals import (
+    BathtubGCP,
+    Deterministic,
+    Exponential,
+    Gamma,
+    Uniform,
+    int_G_mu,
+    prob_A_le_S,
+)
+
+PROCS = [
+    Exponential(1 / 12),
+    Gamma(12.0, 1.0),
+    Uniform(0.0, 48.0),
+    Deterministic(12.0),
+    BathtubGCP(),
+]
+
+
+def _sample_many(proc, n, key):
+    keys = jax.random.split(key, n)
+    return np.asarray(jax.vmap(proc.sample)(keys))
+
+
+@pytest.mark.parametrize("proc", PROCS, ids=lambda p: type(p).__name__)
+def test_empirical_mean_matches(proc):
+    xs = _sample_many(proc, 200_000, jax.random.key(0))
+    assert xs.min() >= 0.0
+    np.testing.assert_allclose(xs.mean(), proc.mean(), rtol=0.02)
+
+
+@pytest.mark.parametrize("proc", PROCS, ids=lambda p: type(p).__name__)
+def test_empirical_cdf_matches(proc):
+    xs = _sample_many(proc, 200_000, jax.random.key(1))
+    grid = np.linspace(0.0, float(np.quantile(xs, 0.99)), 25)[1:]
+    emp = (xs[None, :] <= grid[:, None]).mean(axis=1)
+    np.testing.assert_allclose(emp, proc.cdf(grid), atol=0.02)
+
+
+def test_bathtub_is_bimodal():
+    """Bathtub: substantial mass near 0 and near b=24, little in between."""
+    proc = BathtubGCP()
+    xs = _sample_many(proc, 100_000, jax.random.key(2))
+    near0 = (xs < 3.0).mean()
+    near24 = (xs > 21.0).mean()
+    middle = ((xs > 6.0) & (xs < 18.0)).mean()
+    assert near0 > 0.4 and near24 > 0.4 and middle < 0.02
+    assert 11.0 < proc.mean() < 14.0  # paper's "μ ≈ 1/12"
+
+
+def test_prob_A_le_S_exponential_closed_form():
+    """For independent exponentials, P(A<=S) = λ/(λ+μ)."""
+    lam, mu = 1 / 12, 1 / 24
+    p = prob_A_le_S(Exponential(lam), Exponential(mu))
+    np.testing.assert_allclose(p, lam / (lam + mu), rtol=1e-3)
+
+
+@given(
+    lam=st.floats(0.02, 1.0),
+    mu=st.floats(0.02, 1.0),
+)
+@settings(max_examples=20, deadline=None)
+def test_prob_A_le_S_property(lam, mu):
+    p = prob_A_le_S(Exponential(lam), Exponential(mu), grid_points=50_000)
+    assert abs(p - lam / (lam + mu)) < 5e-3
+
+
+def test_int_G_mu_exponential():
+    """H(w) = (1 - e^{-μw})/μ for Exp(μ)."""
+    mu = 1 / 24
+    w = np.linspace(0, 100, 50)
+    h = int_G_mu(Exponential(mu), w)
+    np.testing.assert_allclose(h, (1 - np.exp(-mu * w)) / mu, rtol=2e-3, atol=1e-3)
+
+
+def test_int_G_mu_saturates_at_mean():
+    """H(∞) = E[S] for any process (here: finite-support uniform)."""
+    proc = Uniform(0.0, 48.0)
+    h = int_G_mu(proc, np.array([48.0, 60.0, 100.0]))
+    np.testing.assert_allclose(h, proc.mean(), rtol=1e-3)
+
+
+def test_samplers_are_deterministic_given_key():
+    proc = BathtubGCP()
+    a = _sample_many(proc, 100, jax.random.key(7))
+    b = _sample_many(proc, 100, jax.random.key(7))
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,98 @@
+"""LP-oracle tests: knapsack structure (eqs. 9-11) and the Theorem-3 LP."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Exponential, Uniform
+from repro.core.lp import knapsack_lp, waittime_lp, waittime_lp_cost
+from repro.core.analytic import theorem2_cost
+from repro.core.waittime import optimal_deterministic
+
+LAM, MU, K = 1 / 12, 1 / 24, 10.0
+
+
+def test_knapsack_strong_regime_mass_at_one():
+    """λδ ≤ 1: all mass at n=1 (Theorem 2's queue-length-one optimality)."""
+    out = knapsack_lp(LAM, 3.0)
+    assert out["support"] == [1]
+    np.testing.assert_allclose(out["objective"], LAM * 3.0, rtol=1e-12)
+    np.testing.assert_allclose(out["objective"], out["analytic_objective"])
+
+
+def test_knapsack_relaxed_regime_saturates():
+    """λδ > 1: the LP saturates Σπ = 1 using only n=1."""
+    out = knapsack_lp(LAM, 27.0)
+    np.testing.assert_allclose(out["objective"], 1.0, rtol=1e-12)
+
+
+@given(delta=st.floats(0.1, 40.0), lam=st.floats(0.02, 0.5))
+@settings(max_examples=50, deadline=None)
+def test_knapsack_greedy_equals_analytic(delta, lam):
+    out = knapsack_lp(lam, delta)
+    np.testing.assert_allclose(out["objective"], min(1.0, lam * delta),
+                               rtol=1e-9)
+
+
+def test_knapsack_greedy_dominates_any_feasible():
+    """Random feasible π allocations never beat the greedy objective."""
+    rng = np.random.default_rng(0)
+    out = knapsack_lp(LAM, 3.0)
+    budget = LAM * 3.0
+    for _ in range(200):
+        raw = rng.random(16)
+        raw = raw / raw.sum() * rng.random()  # Σπ ≤ 1
+        w = np.arange(1, 17, dtype=np.float64)
+        scale = min(1.0, budget / np.dot(w, raw))
+        feasible = raw * scale
+        assert feasible.sum() <= out["objective"] + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Theorem-3 LP
+# ---------------------------------------------------------------------------
+def test_waittime_lp_uniform_recovers_corollary1():
+    L, delta = 48.0, 3.0
+    spot = Uniform(0.0, L)
+    mu = spot.rate()
+    res = waittime_lp(spot, LAM, delta)
+    # Corollary 1/2: support exactly {0} ∪ [L, ∞) with p = μδ/(1−λδ)
+    p_expected = mu * delta / (1 - LAM * delta)
+    assert res.support[0] < L / 100
+    assert res.support[-1] >= L - 1e-6
+    np.testing.assert_allclose(res.masses[-1], p_expected, rtol=1e-3)
+    np.testing.assert_allclose(res.objective, p_expected, rtol=1e-3)
+    # implied cost hits the Theorem-2 bound
+    np.testing.assert_allclose(
+        waittime_lp_cost(K, LAM, delta, res), theorem2_cost(K, mu, delta),
+        rtol=1e-3,
+    )
+
+
+def test_waittime_lp_exponential_matches_corollary3():
+    """Exp spot: LP optimum must equal μδ/(1−λδ) (Corollary 3's objective)."""
+    delta = 3.0
+    spot = Exponential(MU)
+    res = waittime_lp(spot, LAM, delta, w_max=400.0, grid_points=3000)
+    np.testing.assert_allclose(
+        res.objective, MU * delta / (1 - LAM * delta), rtol=2e-3
+    )
+    # Corollary 4's deterministic wait is one optimal solution; the LP cannot
+    # beat the common optimum.
+    det = optimal_deterministic(LAM, MU, delta)
+    det_obj = 1.0 - np.exp(-MU * det.value)
+    assert res.objective >= det_obj - 2e-3
+
+
+@given(delta=st.floats(0.5, 6.0))
+@settings(max_examples=15, deadline=None)
+def test_waittime_lp_objective_never_exceeds_bound(delta):
+    """P(X>S) ≤ μδ/(1−λδ) — the Theorem-2 optimum is a hard ceiling."""
+    spot = Uniform(0.0, 48.0)
+    res = waittime_lp(spot, LAM, delta, grid_points=600)
+    assert res.objective <= spot.rate() * delta / (1 - LAM * delta) + 1e-6
+
+
+def test_waittime_lp_masses_are_distribution():
+    res = waittime_lp(Uniform(0.0, 48.0), LAM, 3.0)
+    assert np.all(res.masses >= -1e-12)
+    np.testing.assert_allclose(res.masses.sum(), 1.0, rtol=1e-9)

@@ -1,0 +1,183 @@
+"""Validation of the paper's theorems against the event simulator.
+
+These are the reproduction's correctness spine: every closed-form claim in
+the paper is checked against the jit-compiled G/G/1+spot simulator.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Exponential,
+    Gamma,
+    Uniform,
+    optimal_deterministic,
+    optimal_exp_rate,
+    optimal_two_point,
+    laplace_target,
+    run_queue_sim,
+    run_single_slot_sim,
+    theorem1_cost,
+    theorem2_cost,
+    theorem2_delta_max,
+    theorem5_cost,
+    theorem5_delta,
+)
+from repro.core.analytic import mm1n_cost_from_pi, mm1n_pi
+from repro.core.cost import cost_lower_bound, pi0_from_cost
+
+LAM, MU, K = 1 / 12, 1 / 24, 10.0
+N_EVENTS = 300_000
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1: E[C] = k − (k−1)(μ/λ)(1−π₀) for ANY policy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "job,spot,r",
+    [
+        (Exponential(LAM), Exponential(MU), 1.0),
+        (Exponential(LAM), Exponential(MU), 2.5),
+        (Gamma(12.0, 1.0), Exponential(MU), 3.0),
+        (Exponential(LAM), Uniform(0.0, 48.0), 1.5),
+        (Gamma(12.0, 1.0), Uniform(0.0, 48.0), 0.7),
+    ],
+    ids=["mm-r1", "mm-r2.5", "gm-r3", "mu-r1.5", "gu-r0.7"],
+)
+def test_theorem1_cost_law(job, spot, r):
+    res = run_queue_sim(job, spot, k=K, r=r, n_events=N_EVENTS,
+                        key=jax.random.key(42))
+    lam, mu = job.rate(), spot.rate()
+    predicted = theorem1_cost(K, lam, mu, res["pi0_spot"])
+    assert abs(predicted - res["avg_cost"]) < 0.06, (predicted, res["avg_cost"])
+
+
+def test_pi0_from_cost_inverts():
+    pi0 = 0.37
+    c = theorem1_cost(K, LAM, MU, pi0)
+    np.testing.assert_allclose(pi0_from_cost(K, LAM, MU, c), pi0, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2 + Corollaries: strong-delay regime
+# ---------------------------------------------------------------------------
+def test_theorem2_regime_boundary():
+    # Exponentials: P(A<=S)/λ = (λ/(λ+μ))/λ = 1/(λ+μ) = 8 h
+    np.testing.assert_allclose(
+        theorem2_delta_max(Exponential(LAM), Exponential(MU)), 8.0, rtol=1e-3
+    )
+
+
+@pytest.mark.parametrize("delta", [1.5, 3.0, 5.0])
+def test_corollary4_deterministic_wait_achieves_optimum(delta):
+    wait = optimal_deterministic(LAM, MU, delta)
+    res = run_single_slot_sim(
+        Exponential(LAM), Exponential(MU), wait, k=K, n_events=N_EVENTS,
+        key=jax.random.key(0),
+    )
+    target = theorem2_cost(K, MU, delta)
+    assert abs(res["avg_cost"] - target) < 0.08, (res["avg_cost"], target)
+    assert abs(res["avg_delay"] - delta) < 0.15
+
+
+@pytest.mark.parametrize("delta", [1.5, 3.0])
+def test_remark2_exponential_wait_achieves_optimum(delta):
+    wait = optimal_exp_rate(LAM, MU, delta)
+    np.testing.assert_allclose(
+        wait.laplace(MU), laplace_target(LAM, MU, delta), rtol=1e-12
+    )
+    res = run_single_slot_sim(
+        Exponential(LAM), Exponential(MU), wait, k=K, n_events=N_EVENTS,
+        key=jax.random.key(1),
+    )
+    assert abs(res["avg_cost"] - theorem2_cost(K, MU, delta)) < 0.08
+    assert abs(res["avg_delay"] - delta) < 0.15
+
+
+def test_corollary1_two_point_finite_support():
+    """Uniform spot on [0,L]: X ∈ {0, L} with p = μδ/(1−λδ) is optimal.
+
+    The two-point policy maximizes P(X > S) at the same E[C] bound; its
+    realized delay is ≤ δ (the bound construction guards the worst case), and
+    its cost must beat any other feasible single-slot policy at equal delay.
+    """
+    L, delta = 48.0, 3.0
+    mu = 2.0 / L
+    wait = optimal_two_point(LAM, mu, delta, L)
+    np.testing.assert_allclose(wait.p, mu * delta / (1 - LAM * delta), rtol=1e-12)
+    res = run_single_slot_sim(
+        Exponential(LAM), Uniform(0.0, L), wait, k=K, n_events=N_EVENTS,
+        key=jax.random.key(2),
+    )
+    # cost within the theorem-2 bound window and delay within budget
+    assert res["avg_delay"] <= delta + 0.1
+    assert res["avg_cost"] <= theorem2_cost(K, mu, delta) + 0.1
+
+
+@given(delta=st.floats(0.5, 6.0))
+@settings(max_examples=10, deadline=None)
+def test_theorem2_cost_is_lower_bound_property(delta):
+    """No single-slot policy simulated at E[T]≈δ beats k−(k−1)μδ."""
+    wait = optimal_deterministic(LAM, MU, delta)
+    res = run_single_slot_sim(
+        Exponential(LAM), Exponential(MU), wait, k=K, n_events=80_000,
+        key=jax.random.key(3),
+    )
+    assert res["avg_cost"] >= theorem2_cost(K, MU, delta) - 0.15
+
+
+# ---------------------------------------------------------------------------
+# Theorem 5: M/M/1/N closed forms
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_cap", [1, 2, 3, 4])
+def test_theorem5_cost_and_delay(n_cap):
+    res = run_queue_sim(
+        Exponential(LAM), Exponential(MU), k=K, r=float(n_cap),
+        n_events=N_EVENTS, key=jax.random.key(n_cap),
+    )
+    assert abs(res["avg_cost"] - theorem5_cost(K, LAM, MU, n_cap)) < 0.08
+    assert abs(res["avg_delay"] - theorem5_delta(LAM, MU, n_cap)) < 0.8
+    assert abs(res["pi0_spot"] - mm1n_pi(LAM, MU, n_cap)[0]) < 0.01
+
+
+def test_theorem5_equals_theorem1_on_mm1n():
+    for n in range(1, 8):
+        np.testing.assert_allclose(
+            theorem5_cost(K, LAM, MU, n), mm1n_cost_from_pi(K, LAM, MU, n),
+            rtol=1e-12,
+        )
+
+
+def test_theorem5_monotonicity():
+    costs = [theorem5_cost(K, LAM, MU, n) for n in range(1, 10)]
+    deltas = [theorem5_delta(LAM, MU, n) for n in range(1, 10)]
+    assert all(a > b for a, b in zip(costs, costs[1:]))  # strictly decreasing
+    assert all(a < b for a, b in zip(deltas, deltas[1:]))  # strictly increasing
+
+
+@given(
+    lam=st.floats(0.05, 0.5),
+    ratio=st.floats(0.2, 3.0).filter(lambda x: abs(x - 1.0) > 0.05),
+    n=st.integers(1, 12),
+)
+@settings(max_examples=50, deadline=None)
+def test_theorem5_cost_in_range_property(lam, ratio, n):
+    mu = lam * ratio
+    c = theorem5_cost(K, lam, mu, n)
+    # cost is always in [max(1, k-(k-1)μ/λ), k]
+    assert c <= K + 1e-9
+    assert c >= max(1.0, K - (K - 1) * mu / lam) - 1e-9
+    assert c >= cost_lower_bound(K, lam, mu, theorem5_delta(lam, mu, n)) - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Fractional admission r = N + p interpolates Theorem-5 costs
+# ---------------------------------------------------------------------------
+def test_fractional_r_interpolates():
+    r = 1.5
+    res = run_queue_sim(Exponential(LAM), Exponential(MU), k=K, r=r,
+                        n_events=N_EVENTS, key=jax.random.key(9))
+    c1 = theorem5_cost(K, LAM, MU, 1)
+    c2 = theorem5_cost(K, LAM, MU, 2)
+    assert c2 - 0.06 <= res["avg_cost"] <= c1 + 0.06

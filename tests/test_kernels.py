@@ -1,0 +1,187 @@
+"""Pallas kernel tests: shape/dtype sweeps + allclose vs ref.py oracles,
+executed in interpret mode (kernel bodies run in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+FA_CASES = [
+    # (B, Sq, Sk, H, KH, D, causal, bq, bk)
+    (2, 128, 128, 8, 2, 64, True, 64, 64),
+    (1, 256, 256, 4, 4, 32, True, 128, 128),
+    (2, 64, 256, 8, 1, 64, False, 32, 64),
+    (1, 128, 384, 6, 2, 128, True, 64, 128),
+    (1, 64, 64, 2, 2, 16, True, 64, 64),  # single-tile path
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    B, Sq, Sk, H, KH, D, causal, bq, bk = case
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KH, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KH, D), dtype)
+    off = Sk - Sq if causal else 0
+    o = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                        q_offset=off)
+    r = attention_ref(q, k, v, causal=causal, q_offset=off)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), **_tol(dtype))
+
+
+@given(
+    b=st.integers(1, 3),
+    nq=st.integers(1, 4),
+    nk_extra=st.integers(0, 3),
+    kh=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([16, 32, 64]),
+    causal=st.booleans(),
+)
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_property(b, nq, nk_extra, kh, g, d, causal):
+    """Property: kernel == oracle across random tile configurations."""
+    bq = 32
+    sq = nq * bq
+    sk = sq + nk_extra * bq
+    ks = jax.random.split(jax.random.key(b * 7 + nq), 3)
+    q = jax.random.normal(ks[0], (b, sq, kh * g, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, sk, kh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, sk, kh, d), jnp.float32)
+    off = sk - sq if causal else 0
+    o = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bq,
+                        q_offset=off)
+    r = attention_ref(q, k, v, causal=causal, q_offset=off)
+    np.testing.assert_allclose(o, r, rtol=3e-5, atol=3e-5)
+
+
+def test_flash_attention_rejects_bad_tiling():
+    q = jnp.zeros((1, 100, 4, 32))
+    k = jnp.zeros((1, 128, 4, 32))
+    with pytest.raises(ValueError):
+        flash_attention(q, k, k, block_q=64, block_k=64)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+DEC_CASES = [
+    (2, 256, 8, 2, 64, 200, 64),
+    (1, 512, 4, 1, 128, 512, 128),
+    (3, 128, 6, 6, 32, 1, 32),
+    (2, 1024, 8, 2, 64, 700, 256),
+]
+
+
+@pytest.mark.parametrize("case", DEC_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(case, dtype):
+    B, S, H, KH, D, kvl, bk = case
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KH, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KH, D), dtype)
+    o = decode_attention(q, k, v, jnp.int32(kvl), block_k=bk)
+    r = decode_attention_ref(q, k, v, kvl)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_dynamic_kv_len_one_compile():
+    """The same compiled kernel must serve every fill level (traced len)."""
+    ks = jax.random.split(jax.random.key(2), 3)
+    B, S, H, KH, D = 2, 256, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, 1, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KH, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KH, D), jnp.float32)
+    for kvl in [1, 63, 128, 256]:
+        o = decode_attention(q, k, v, jnp.int32(kvl), block_k=64)
+        r = decode_attention_ref(q, k, v, kvl)
+        np.testing.assert_allclose(o, r, rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+SSD_CASES = [
+    (2, 64, 4, 16, 16, 16),
+    (1, 128, 2, 32, 64, 32),
+    (2, 256, 4, 64, 32, 64),
+    (1, 64, 8, 16, 128, 64),  # single chunk
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_matches_ref(case, dtype):
+    B, L, H, P, N, Q = case
+    ks = jax.random.split(jax.random.key(3), 4)
+    x = (jax.random.normal(ks[0], (B, L, H, P)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    a_log = jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32))
+    d_skip = jnp.ones((H,), jnp.float32)
+    b_in = (jax.random.normal(ks[2], (B, L, N)) * 0.3).astype(dtype)
+    c_in = (jax.random.normal(ks[3], (B, L, N)) * 0.3).astype(dtype)
+    o = ssd(x, dt, a_log, d_skip, b_in, c_in, chunk=Q)
+    r = ssd_ref(x, dt, a_log, d_skip, b_in, c_in)
+    tol = dict(rtol=4e-2, atol=4e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), **tol)
+
+
+@given(
+    b=st.integers(1, 2),
+    nc=st.integers(1, 4),
+    h=st.sampled_from([1, 2, 4]),
+    p=st.sampled_from([16, 32]),
+    n=st.sampled_from([16, 64]),
+)
+@settings(max_examples=10, deadline=None)
+def test_ssd_property(b, nc, h, p, n):
+    Q = 32
+    L = nc * Q
+    ks = jax.random.split(jax.random.key(nc * 13 + h), 4)
+    x = jax.random.normal(ks[0], (b, L, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, h)))
+    a_log = jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32))
+    d_skip = jnp.zeros((h,), jnp.float32)
+    b_in = jax.random.normal(ks[2], (b, L, n)) * 0.3
+    c_in = jax.random.normal(ks[3], (b, L, n)) * 0.3
+    o = ssd(x, dt, a_log, d_skip, b_in, c_in, chunk=Q)
+    r = ssd_ref(x, dt, a_log, d_skip, b_in, c_in)
+    np.testing.assert_allclose(o, r, rtol=5e-4, atol=5e-4)
+
+
+def test_ssd_state_continuity_across_chunks():
+    """Chunk boundaries must be invisible: chunk=Q vs chunk=L agree."""
+    B, L, H, P, N = 1, 128, 2, 16, 16
+    ks = jax.random.split(jax.random.key(9), 4)
+    x = jax.random.normal(ks[0], (B, L, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    a_log = jnp.zeros((H,), jnp.float32)
+    d_skip = jnp.zeros((H,), jnp.float32)
+    b_in = jax.random.normal(ks[2], (B, L, N)) * 0.3
+    c_in = jax.random.normal(ks[3], (B, L, N)) * 0.3
+    o_small = ssd(x, dt, a_log, d_skip, b_in, c_in, chunk=16)
+    o_big = ssd(x, dt, a_log, d_skip, b_in, c_in, chunk=128)
+    np.testing.assert_allclose(o_small, o_big, rtol=5e-4, atol=5e-4)
