@@ -1,25 +1,36 @@
-"""Paper-figure/table benchmarks.
+"""Paper-figure/table benchmarks, built on the batched sweep engine.
 
 One function per figure/table in the paper; each returns (rows, derived)
 where rows are CSV-able dicts and derived is a headline scalar checked
 against the paper's claim.
+
+Grid-shaped benches (the Theorem-5 table, the two-initialization adaptive
+figures) run as ONE jitted program each via
+:func:`repro.core.engine.run_sweep` / ``adaptive_admission_control_batched``
+instead of the seed's one-Python-call-per-point loops.
+
+``set_scale(s)`` shrinks event counts for smoke runs (``benchmarks/run.py
+--smoke``); statistical tolerances in the derived strings are only
+meaningful at scale 1.
 """
 from __future__ import annotations
 
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
     BathtubGCP,
     Exponential,
     Gamma,
+    ThreePhaseKernel,
     Uniform,
-    adaptive_admission_control,
+    adaptive_admission_control_batched,
     optimal_deterministic,
-    run_queue_sim,
     run_single_slot_sim,
+    run_sweep,
     theorem1_cost,
     theorem2_cost,
     theorem2_delta_max,
@@ -30,6 +41,18 @@ from repro.core.lp import waittime_lp, waittime_lp_cost
 
 LAM, MU, K = 1 / 12, 1 / 24, 10.0
 
+_SCALE = 1.0
+
+
+def set_scale(scale: float) -> None:
+    """Scale event/window counts (smoke mode uses e.g. 0.05)."""
+    global _SCALE
+    _SCALE = scale
+
+
+def _n(base: int, floor: int = 2048) -> int:
+    return max(floor, int(base * _SCALE))
+
 
 def _timed(fn):
     t0 = time.time()
@@ -38,41 +61,51 @@ def _timed(fn):
 
 
 def bench_theorem1_cost_law():
-    """Theorem 1: E[C] = k − (k−1)(μ/λ)(1−π₀) across process mixes."""
+    """Theorem 1: E[C] = k − (k−1)(μ/λ)(1−π₀) across process mixes.
+
+    Each mix is a different static (job, spot) pair — its own compiled
+    program — but every mix checks the law at four admission knobs in one
+    batched ``run_sweep`` call.
+    """
     mixes = [
-        ("M/M", Exponential(LAM), Exponential(MU), 1.5),
-        ("G(gamma)/M", Gamma(12.0, 1.0), Exponential(MU), 2.0),
-        ("M/G(unif)", Exponential(LAM), Uniform(0.0, 48.0), 1.0),
-        ("M/G(bathtub)", Exponential(LAM), BathtubGCP(), 1.0),
+        ("M/M", Exponential(LAM), Exponential(MU)),
+        ("G(gamma)/M", Gamma(12.0, 1.0), Exponential(MU)),
+        ("M/G(unif)", Exponential(LAM), Uniform(0.0, 48.0)),
+        ("M/G(bathtub)", Exponential(LAM), BathtubGCP()),
     ]
+    rs = jnp.array([0.5, 1.0, 1.5, 2.0])
     rows = []
     worst = 0.0
-    for name, job, spot, r in mixes:
-        res, us = _timed(lambda: run_queue_sim(
-            job, spot, k=K, r=r, n_events=200_000, key=jax.random.key(1)))
-        pred = theorem1_cost(K, job.rate(), spot.rate(), res["pi0_spot"])
-        err = abs(pred - res["avg_cost"])
+    for name, job, spot in mixes:
+        res, us = _timed(lambda: run_sweep(
+            job, spot, ThreePhaseKernel(), {"r": rs}, k=K,
+            n_events=_n(200_000), key=jax.random.key(1)))
+        lam, mu = job.rate(), spot.rate()
+        pred = theorem1_cost(K, lam, mu, res["pi0_spot"][..., 0])
+        err = float(np.max(np.abs(pred - res["avg_cost"][..., 0])))
         worst = max(worst, err)
         rows.append({"name": f"theorem1/{name}", "us_per_call": us,
-                     "derived": f"sim={res['avg_cost']:.4f} "
-                                f"thm1={pred:.4f} err={err:.4f}"})
+                     "derived": f"4-knob sweep worst |sim-thm1|={err:.4f}"})
     return rows, worst
 
 
 def bench_fig2_bathtub_strong():
-    """Fig 2: bathtub spot, Poisson(1/12) jobs, δ=3h → cost ≈ 7.75."""
+    """Fig 2: bathtub spot, Poisson(1/12) jobs, δ=3h → cost ≈ 7.75.
+
+    Both initializations advance as one batched learner fleet."""
     spot = BathtubGCP()
     target = theorem2_cost(K, spot.rate(), 3.0)
-    rows = []
-    for r0 in (0.05, 4.0):
-        out, us = _timed(lambda: adaptive_admission_control(
-            Exponential(LAM), spot, k=K, delta=3.0, eta=0.05, eta_decay=0.05,
-            r0=r0, window_events=2048, n_windows=400, key=jax.random.key(2)))
-        rows.append({
-            "name": f"fig2/bathtub_delta3_r0={r0}", "us_per_call": us,
-            "derived": f"cost={out['final_cost']:.3f} target≈{target:.3f} "
-                       f"delay={out['final_delay']:.2f} r*={out['r_star']:.3f}",
-        })
+    r0s = (0.05, 4.0)
+    out, us = _timed(lambda: adaptive_admission_control_batched(
+        Exponential(LAM), spot, k=K, delta=3.0, eta=0.05, eta_decay=0.05,
+        r0=jnp.array(r0s), window_events=2048, n_windows=_n(400, 50),
+        key=jax.random.key(2)))
+    rows = [{
+        "name": f"fig2/bathtub_delta3_r0={r0}", "us_per_call": us / len(r0s),
+        "derived": f"cost={out['final_cost'][i]:.3f} target≈{target:.3f} "
+                   f"delay={out['final_delay'][i]:.2f} "
+                   f"r*={out['r_star'][i]:.3f}",
+    } for i, r0 in enumerate(r0s)]
     return rows, target
 
 
@@ -80,20 +113,18 @@ def bench_fig3_bathtub_relaxed():
     """Fig 3: bathtub spot, δ=18h (λδ>1): both inits converge to a common
     cost (no closed form in this regime)."""
     spot = BathtubGCP()
-    outs = []
-    rows = []
-    for r0 in (0.3, 6.0):
-        out, us = _timed(lambda: adaptive_admission_control(
-            Exponential(LAM), spot, k=K, delta=18.0, eta=0.02, eta_decay=0.05,
-            r0=r0, r_max=8.0, window_events=4096, n_windows=400,
-            key=jax.random.key(3)))
-        outs.append(out)
-        rows.append({
-            "name": f"fig3/bathtub_delta18_r0={r0}", "us_per_call": us,
-            "derived": f"cost={out['final_cost']:.3f} "
-                       f"delay={out['final_delay']:.2f} r*={out['r_star']:.3f}",
-        })
-    gap = abs(outs[0]["final_cost"] - outs[1]["final_cost"])
+    r0s = (0.3, 6.0)
+    out, us = _timed(lambda: adaptive_admission_control_batched(
+        Exponential(LAM), spot, k=K, delta=18.0, eta=0.02, eta_decay=0.05,
+        r0=jnp.array(r0s), r_max=8.0, window_events=4096,
+        n_windows=_n(400, 50), key=jax.random.key(3)))
+    rows = [{
+        "name": f"fig3/bathtub_delta18_r0={r0}", "us_per_call": us / len(r0s),
+        "derived": f"cost={out['final_cost'][i]:.3f} "
+                   f"delay={out['final_delay'][i]:.2f} "
+                   f"r*={out['r_star'][i]:.3f}",
+    } for i, r0 in enumerate(r0s)]
+    gap = abs(out["final_cost"][0] - out["final_cost"][1])
     rows.append({"name": "fig3/convergence_gap", "us_per_call": 0,
                  "derived": f"cost_gap={gap:.3f}"})
     return rows, gap
@@ -101,53 +132,55 @@ def bench_fig3_bathtub_relaxed():
 
 def bench_fig4_mm_strong():
     """Fig 4: M/M, δ=3 → cost → k−(k−1)μδ = 8.875."""
-    rows = []
-    for r0 in (0.05, 4.0):
-        out, us = _timed(lambda: adaptive_admission_control(
-            Exponential(LAM), Exponential(MU), k=K, delta=3.0, eta=0.05,
-            eta_decay=0.05, r0=r0, window_events=2048, n_windows=400,
-            key=jax.random.key(4)))
-        rows.append({
-            "name": f"fig4/mm_delta3_r0={r0}", "us_per_call": us,
-            "derived": f"cost={out['final_cost']:.3f} target=8.875 "
-                       f"delay={out['final_delay']:.2f}",
-        })
+    r0s = (0.05, 4.0)
+    out, us = _timed(lambda: adaptive_admission_control_batched(
+        Exponential(LAM), Exponential(MU), k=K, delta=3.0, eta=0.05,
+        eta_decay=0.05, r0=jnp.array(r0s), window_events=2048,
+        n_windows=_n(400, 50), key=jax.random.key(4)))
+    rows = [{
+        "name": f"fig4/mm_delta3_r0={r0}", "us_per_call": us / len(r0s),
+        "derived": f"cost={out['final_cost'][i]:.3f} target=8.875 "
+                   f"delay={out['final_delay'][i]:.2f}",
+    } for i, r0 in enumerate(r0s)]
     return rows, 8.875
 
 
 def bench_fig5_mm_relaxed():
     """Fig 5: M/M, δ=27 → r* → 3, cost → E[C₃] = 5.8 (Theorem 5)."""
-    rows = []
-    for r0 in (0.5, 8.0):
-        out, us = _timed(lambda: adaptive_admission_control(
-            Exponential(LAM), Exponential(MU), k=K, delta=27.0, eta=0.02,
-            eta_decay=0.05, r0=r0, r_max=8.0, window_events=4096,
-            n_windows=500, key=jax.random.key(5)))
-        rows.append({
-            "name": f"fig5/mm_delta27_r0={r0}", "us_per_call": us,
-            "derived": f"r*={out['r_star']:.3f} (target 3) "
-                       f"cost={out['final_cost']:.3f} (target "
-                       f"{theorem5_cost(K, LAM, MU, 3):.3f}) "
-                       f"delay={out['final_delay']:.2f}",
-        })
+    r0s = (0.5, 8.0)
+    out, us = _timed(lambda: adaptive_admission_control_batched(
+        Exponential(LAM), Exponential(MU), k=K, delta=27.0, eta=0.02,
+        eta_decay=0.05, r0=jnp.array(r0s), r_max=8.0, window_events=4096,
+        n_windows=_n(500, 50), key=jax.random.key(5)))
+    rows = [{
+        "name": f"fig5/mm_delta27_r0={r0}", "us_per_call": us / len(r0s),
+        "derived": f"r*={out['r_star'][i]:.3f} (target 3) "
+                   f"cost={out['final_cost'][i]:.3f} (target "
+                   f"{theorem5_cost(K, LAM, MU, 3):.3f}) "
+                   f"delay={out['final_delay'][i]:.2f}",
+    } for i, r0 in enumerate(r0s)]
     return rows, theorem5_cost(K, LAM, MU, 3)
 
 
 def bench_theorem5_table():
-    """Theorem 5 closed forms vs simulation, N = 1..6."""
+    """Theorem 5 closed forms vs simulation, N = 1..6 — one sweep call."""
+    ns = np.arange(1, 7)
+    res, us = _timed(lambda: run_sweep(
+        Exponential(LAM), Exponential(MU), ThreePhaseKernel(),
+        {"r": jnp.asarray(ns, jnp.float32)}, k=K, n_events=_n(200_000),
+        key=jax.random.key(10)))
     rows = []
     worst = 0.0
-    for n in range(1, 7):
-        res, us = _timed(lambda: run_queue_sim(
-            Exponential(LAM), Exponential(MU), k=K, r=float(n),
-            n_events=200_000, key=jax.random.key(10 + n)))
-        c_thm = theorem5_cost(K, LAM, MU, n)
-        d_thm = theorem5_delta(LAM, MU, n)
-        worst = max(worst, abs(res["avg_cost"] - c_thm))
+    for i, n in enumerate(ns):
+        cost = float(res["avg_cost"][i, 0])
+        delay = float(res["avg_delay"][i, 0])
+        c_thm = theorem5_cost(K, LAM, MU, int(n))
+        d_thm = theorem5_delta(LAM, MU, int(n))
+        worst = max(worst, abs(cost - c_thm))
         rows.append({
-            "name": f"theorem5/N={n}", "us_per_call": us,
-            "derived": f"cost sim={res['avg_cost']:.4f} thm={c_thm:.4f}; "
-                       f"delay sim={res['avg_delay']:.2f} thm={d_thm:.2f}",
+            "name": f"theorem5/N={n}", "us_per_call": us / len(ns),
+            "derived": f"cost sim={cost:.4f} thm={c_thm:.4f}; "
+                       f"delay sim={delay:.2f} thm={d_thm:.2f}",
         })
     return rows, worst
 
@@ -159,7 +192,7 @@ def bench_waittime_optimality():
     # Corollary 4 deterministic wait under Exp spot
     det = optimal_deterministic(LAM, MU, delta)
     res, us = _timed(lambda: run_single_slot_sim(
-        Exponential(LAM), Exponential(MU), det, k=K, n_events=200_000,
+        Exponential(LAM), Exponential(MU), det, k=K, n_events=_n(200_000),
         key=jax.random.key(20)))
     rows.append({"name": "waittime/corollary4_det", "us_per_call": us,
                  "derived": f"cost={res['avg_cost']:.4f} "

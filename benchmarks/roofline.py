@@ -89,6 +89,43 @@ def load_all(tag: str | None = None) -> list[dict]:
     return rows
 
 
+def bench_engine_roofline():
+    """Sweep-engine throughput roofline from BENCH_sweep.json.
+
+    The event loop's working set per (event × grid point) is the engine
+    state + stats (~``16·rmax + 96`` bytes read+written); comparing achieved
+    event throughput against the streaming-bandwidth bound says how far the
+    batched engine sits from its memory roofline on this host.  (Run
+    ``benchmarks/sweep_bench.py`` first — benchmarks/run.py orders them.)
+    """
+    root = os.path.join(os.path.dirname(__file__), "..")
+    paths = [os.path.join(root, n)
+             for n in ("BENCH_sweep.json", "BENCH_sweep_smoke.json")]
+    path = next((p for p in paths if os.path.exists(p)), None)
+    if path is None:
+        return [{"name": "engine_roofline/missing", "us_per_call": 0,
+                 "derived": "BENCH_sweep.json not found; run sweep bench"}], 0.0
+    r = json.load(open(path))
+    state_bytes = 2 * (16 * r["rmax"] + 96)  # state+stats, read and written
+    # CPU hosts: assume ~20 GB/s sustained single-core-ish stream as the
+    # reference bound; TPU/GPU backends use HBM_BW.
+    bw = HBM_BW if r.get("backend") not in (None, "cpu") else 20e9
+    bound_ev_s = bw / state_bytes
+    frac = r["sweep_events_per_s"] / bound_ev_s
+    rows = [{
+        "name": f"engine_roofline/{r['grid_points']}pt",
+        "us_per_call": 0,
+        "derived": (
+            f"batched {r['sweep_events_per_s']/1e6:.2f}M ev/s vs "
+            f"stream-bound {bound_ev_s/1e6:.0f}M ev/s "
+            f"({frac*100:.1f}% of roofline; loop path "
+            f"{r['loop_events_per_s']/1e6:.2f}M ev/s; "
+            f"speedup {r['speedup']:.1f}x on {r.get('backend', '?')})"
+        ),
+    }]
+    return rows, frac
+
+
 def bench_roofline():
     """Emit one row per baseline cell (single-pod mesh = the §Roofline
     table; multi-pod proves the pod axis shards)."""

@@ -1,13 +1,38 @@
-"""Benchmark harness: one function per paper table/figure + the roofline
-table from dry-run artifacts.  Prints ``name,us_per_call,derived`` CSV."""
+"""Benchmark harness: one function per paper table/figure, the sweep-engine
+throughput bench, and the roofline table from dry-run artifacts.
+
+    PYTHONPATH=src python benchmarks/run.py [--smoke] [--json PATH] [--only SUBSTR]
+
+Prints ``name,us_per_call,derived`` CSV.  ``--smoke`` shrinks event counts
+(~20× fewer events) so the whole suite runs in a couple of minutes on CPU —
+statistical targets in the derived strings only hold at full scale, but the
+sweep-engine speedup numbers still land in BENCH_sweep.json.  ``--json``
+additionally dumps all rows (plus per-bench headline scalars) to PATH.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="scale event counts down ~20x")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump rows to a BENCH_*.json file")
+    ap.add_argument("--only", default=None, metavar="SUBSTR",
+                    help="run only benches whose name contains SUBSTR")
+    args = ap.parse_args()
+
     from benchmarks import paper_benches as pb
-    from benchmarks.roofline import bench_roofline
+    from benchmarks import sweep_bench
+    from benchmarks.roofline import bench_engine_roofline, bench_roofline
+
+    if args.smoke:
+        pb.set_scale(0.05)
+        sweep_bench.set_scale(0.1)
 
     benches = [
         pb.bench_theorem1_cost_law,
@@ -17,19 +42,31 @@ def main() -> None:
         pb.bench_fig5_mm_relaxed,
         pb.bench_theorem5_table,
         pb.bench_waittime_optimality,
+        sweep_bench.bench_sweep_engine,  # writes BENCH_sweep.json
+        bench_engine_roofline,  # reads it back
         bench_roofline,
     ]
+    if args.only:
+        benches = [b for b in benches if args.only in b.__name__]
     print("name,us_per_call,derived")
+    all_rows = []
     failures = 0
     for bench in benches:
         try:
-            rows, _ = bench()
+            rows, headline = bench()
             for row in rows:
                 derived = str(row["derived"]).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']:.0f},{derived}")
+            all_rows.append({"bench": bench.__name__, "rows": rows,
+                             "headline": float(headline)})
         except Exception as exc:  # keep the harness going
             failures += 1
             print(f"{bench.__name__},0,ERROR: {exc}", file=sys.stdout)
+            all_rows.append({"bench": bench.__name__, "error": str(exc)})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, "benches": all_rows}, f,
+                      indent=2, default=str)
     if failures:
         raise SystemExit(1)
 

@@ -1,0 +1,114 @@
+"""Sweep-engine throughput: one batched jit vs the per-point Python loop.
+
+Measures an (r × seed) admission-knob grid run two ways at equal total
+events:
+
+  * ``loop``  — one ``run_queue_sim`` call per grid point (the seed's only
+    option: each point dispatches its own compiled scan from Python);
+  * ``sweep`` — the whole grid as ONE ``run_sweep`` program (nested vmap).
+
+Writes BENCH_sweep.json next to the repo root so CI and
+``benchmarks/roofline.py`` can consume the numbers.  Compile time is
+excluded for BOTH paths (each is warmed with an identical-shape call first);
+the comparison is steady-state wall clock.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Exponential, ThreePhaseKernel, run_queue_sim, run_sweep
+
+LAM, MU, K = 1 / 12, 1 / 24, 10.0
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+_SCALE = 1.0
+
+
+def set_scale(scale: float) -> None:
+    global _SCALE
+    _SCALE = scale
+
+
+def _bench_json_path() -> str:
+    # full-scale runs refresh the version-controlled reference numbers;
+    # smoke runs write a separate (gitignored) file so they never clobber it
+    name = "BENCH_sweep.json" if _SCALE == 1.0 else "BENCH_sweep_smoke.json"
+    return os.path.join(_REPO_ROOT, name)
+
+
+def measure_sweep_speedup(n_r: int = 16, n_seeds: int = 4,
+                          n_events: int | None = None,
+                          rmax: int = 64) -> dict:
+    """Time the grid both ways; return a result dict (also JSON-dumped)."""
+    if n_events is None:
+        n_events = max(2_000, int(50_000 * _SCALE))
+    job, spot = Exponential(LAM), Exponential(MU)
+    kernel = ThreePhaseKernel()
+    rs = jnp.linspace(0.25, 4.0, n_r)
+    key = jax.random.key(0)
+    seed_keys = jax.random.split(key, n_seeds)
+
+    # warm both compiled paths
+    run_sweep(job, spot, kernel, {"r": rs}, k=K, n_events=n_events, key=key,
+              n_seeds=n_seeds, rmax=rmax)
+    run_queue_sim(job, spot, k=K, r=0.25, n_events=n_events,
+                  key=seed_keys[0], rmax=rmax)
+
+    t0 = time.perf_counter()
+    out = run_sweep(job, spot, kernel, {"r": rs}, k=K, n_events=n_events,
+                    key=key, n_seeds=n_seeds, rmax=rmax)
+    t_sweep = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    loop_cost = np.zeros((n_r, n_seeds))
+    for i, r in enumerate(np.asarray(rs)):
+        for s in range(n_seeds):
+            loop_cost[i, s] = run_queue_sim(
+                job, spot, k=K, r=float(r), n_events=n_events,
+                key=seed_keys[s], rmax=rmax)["avg_cost"]
+    t_loop = time.perf_counter() - t0
+
+    grid_points = n_r * n_seeds
+    total_events = grid_points * n_events
+    result = {
+        "grid_points": grid_points,
+        "n_r": n_r,
+        "n_seeds": n_seeds,
+        "n_events_per_point": n_events,
+        "total_events": total_events,
+        "rmax": rmax,
+        "t_sweep_s": t_sweep,
+        "t_loop_s": t_loop,
+        "speedup": t_loop / t_sweep,
+        "sweep_events_per_s": total_events / t_sweep,
+        "loop_events_per_s": total_events / t_loop,
+        "max_abs_cost_diff": float(
+            np.max(np.abs(out["avg_cost"] - loop_cost))),
+        "backend": jax.default_backend(),
+    }
+    with open(_bench_json_path(), "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def bench_sweep_engine():
+    """Benchmark-harness entry: rows + headline speedup."""
+    res = measure_sweep_speedup()
+    rows = [{
+        "name": f"sweep/{res['grid_points']}pt_grid",
+        "us_per_call": res["t_sweep_s"] * 1e6,
+        "derived": (
+            f"{res['grid_points']} points × {res['n_events_per_point']} ev: "
+            f"sweep={res['t_sweep_s']:.2f}s loop={res['t_loop_s']:.2f}s "
+            f"speedup={res['speedup']:.1f}x "
+            f"({res['sweep_events_per_s']/1e6:.2f}M ev/s batched; "
+            f"max|Δcost|={res['max_abs_cost_diff']:.1e})"
+        ),
+    }]
+    return rows, res["speedup"]

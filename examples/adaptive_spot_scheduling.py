@@ -2,6 +2,11 @@
 under every §V experimental setting (Figures 2-5), printed as convergence
 traces.
 
+Each figure's two far-apart initializations run as ONE batched learner fleet
+(`adaptive_admission_control_batched`): the whole multi-r₀ trajectory is a
+single jitted scan, so adding initializations (or a multi-δ sweep — see the
+closing section) costs one vmap lane, not another Python loop iteration.
+
     PYTHONPATH=src python examples/adaptive_spot_scheduling.py
 """
 import sys
@@ -9,13 +14,14 @@ import sys
 sys.path.insert(0, "src")
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
     BathtubGCP,
     Exponential,
     Gamma,
-    adaptive_admission_control,
+    adaptive_admission_control_batched,
     theorem2_cost,
     theorem5_cost,
     theorem5_delta,
@@ -25,23 +31,26 @@ K = 10.0
 LAM = 1 / 12
 
 
-def trace(title, job, spot, delta, r0, *, eta=0.05, n_windows=400,
-          window=2048, r_max=16.0, target=None):
-    out = adaptive_admission_control(
-        job, spot, k=K, delta=delta, eta=eta, eta_decay=0.05, r0=r0,
-        r_max=r_max, window_events=window, n_windows=n_windows,
-        key=jax.random.key(0))
-    print(f"\n== {title} (r0={r0}) ==")
-    idxs = np.linspace(0, len(out["r"]) - 1, 8).astype(int)
-    print("  window:      " + " ".join(f"{i:7d}" for i in idxs))
-    print("  r(n):        " + " ".join(f"{out['r'][i]:7.3f}" for i in idxs))
-    print("  cost C(r(n)):" + " ".join(f"{out['running_cost'][i]:7.3f}"
-                                       for i in idxs))
-    print("  delay d(n):  " + " ".join(f"{out['running_delay'][i]:7.3f}"
-                                       for i in idxs))
-    tgt = f" (theory {target:.3f})" if target else ""
-    print(f"  -> r*={out['r_star']:.3f} cost={out['final_cost']:.3f}{tgt} "
-          f"delay={out['final_delay']:.3f} (δ={delta})")
+def trace_fleet(title, job, spot, delta, r0s, *, eta=0.05, n_windows=400,
+                window=2048, r_max=16.0, target=None):
+    out = adaptive_admission_control_batched(
+        job, spot, k=K, delta=delta, eta=eta, eta_decay=0.05,
+        r0=jnp.asarray(r0s, jnp.float32), r_max=r_max, window_events=window,
+        n_windows=n_windows, key=jax.random.key(0))
+    for i, r0 in enumerate(r0s):
+        print(f"\n== {title} (r0={r0}) ==")
+        idxs = np.linspace(0, out["r"].shape[-1] - 1, 8).astype(int)
+        print("  window:      " + " ".join(f"{j:7d}" for j in idxs))
+        print("  r(n):        " + " ".join(f"{out['r'][i, j]:7.3f}"
+                                           for j in idxs))
+        print("  cost C(r(n)):" + " ".join(f"{out['running_cost'][i, j]:7.3f}"
+                                           for j in idxs))
+        print("  delay d(n):  " + " ".join(f"{out['running_delay'][i, j]:7.3f}"
+                                           for j in idxs))
+        tgt = f" (theory {target:.3f})" if target else ""
+        print(f"  -> r*={out['r_star'][i]:.3f} "
+              f"cost={out['final_cost'][i]:.3f}{tgt} "
+              f"delay={out['final_delay'][i]:.3f} (δ={delta})")
     return out
 
 
@@ -51,31 +60,42 @@ def main():
     print("Paper §V — spot cost 1, on-demand cost k=10, times in hours")
     print(f"bathtub spot: mean inter-arrival {1/mu_b:.2f}h (μ≈1/12)")
 
-    # Fig 2: bathtub, strong delay constraint
-    for r0 in (0.05, 4.0):
-        trace("Fig 2: Poisson jobs + bathtub spot, δ=3", Exponential(LAM),
-              bathtub, 3.0, r0, target=theorem2_cost(K, mu_b, 3.0))
+    # Fig 2: bathtub, strong delay constraint — both inits in one fleet
+    trace_fleet("Fig 2: Poisson jobs + bathtub spot, δ=3", Exponential(LAM),
+                bathtub, 3.0, (0.05, 4.0),
+                target=theorem2_cost(K, mu_b, 3.0))
     # Gamma variant (paper also runs Gamma(12,1) arrivals)
-    trace("Fig 2b: Gamma(12,1) jobs + bathtub spot, δ=3", Gamma(12.0, 1.0),
-          bathtub, 3.0, 1.0, target=theorem2_cost(K, mu_b, 3.0))
+    trace_fleet("Fig 2b: Gamma(12,1) jobs + bathtub spot, δ=3",
+                Gamma(12.0, 1.0), bathtub, 3.0, (1.0,),
+                target=theorem2_cost(K, mu_b, 3.0))
 
     # Fig 3: bathtub, relaxed delay
-    for r0 in (0.3, 6.0):
-        trace("Fig 3: bathtub spot, δ=18 (λδ>1)", Exponential(LAM), bathtub,
-              18.0, r0, eta=0.02, window=4096, r_max=8.0)
+    trace_fleet("Fig 3: bathtub spot, δ=18 (λδ>1)", Exponential(LAM),
+                bathtub, 18.0, (0.3, 6.0), eta=0.02, window=4096, r_max=8.0)
 
     # Fig 4: memoryless, strong delay
-    for r0 in (0.05, 4.0):
-        trace("Fig 4: M/M δ=3", Exponential(LAM), Exponential(1 / 24), 3.0,
-              r0, target=theorem2_cost(K, 1 / 24, 3.0))
+    trace_fleet("Fig 4: M/M δ=3", Exponential(LAM), Exponential(1 / 24), 3.0,
+                (0.05, 4.0), target=theorem2_cost(K, 1 / 24, 3.0))
 
     # Fig 5: memoryless, relaxed delay — r* -> N=3 (Theorem 5)
     print(f"\nTheorem 5: δ_3 = {theorem5_delta(LAM, 1/24, 3):.2f}h, "
           f"E[C_3] = {theorem5_cost(K, LAM, 1/24, 3):.3f}")
-    for r0 in (0.5, 8.0):
-        trace("Fig 5: M/M δ=27", Exponential(LAM), Exponential(1 / 24), 27.0,
-              r0, eta=0.02, window=4096, n_windows=500, r_max=8.0,
-              target=theorem5_cost(K, LAM, 1 / 24, 3))
+    trace_fleet("Fig 5: M/M δ=27", Exponential(LAM), Exponential(1 / 24),
+                27.0, (0.5, 8.0), eta=0.02, window=4096, n_windows=500,
+                r_max=8.0, target=theorem5_cost(K, LAM, 1 / 24, 3))
+
+    # Beyond the paper: a 12-target multi-δ fleet in one jitted scan — the
+    # learned δ→(r*, cost) frontier, no per-δ Python loop.
+    deltas = np.linspace(2.0, 30.0, 12)
+    out = adaptive_admission_control_batched(
+        Exponential(LAM), Exponential(1 / 24), k=K,
+        delta=jnp.asarray(deltas, jnp.float32), eta=0.02, eta_decay=0.05,
+        r0=1.0, r_max=8.0, window_events=4096, n_windows=300,
+        key=jax.random.key(1))
+    print("\n== multi-δ fleet (12 learners, one scan) ==")
+    print("  δ:     " + " ".join(f"{d:6.1f}" for d in deltas))
+    print("  r*:    " + " ".join(f"{r:6.2f}" for r in out["r_star"]))
+    print("  cost:  " + " ".join(f"{c:6.2f}" for c in out["final_cost"]))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,80 @@
+"""Policy-grid sweeps as single compiled programs.
+
+Three sweeps, each ONE jitted call regardless of grid size:
+
+  1. admission knob r × seeds        (Theorem-4 kernel)
+  2. r × cost-ratio k 2-D meshgrid   (the paper's k-sensitivity axis)
+  3. deterministic-wait X × seeds    (Theorems-2/3 kernel with TRACED
+                                      wait-time parameters — the wait
+                                      distribution is swept inside the
+                                      compiled program, no retracing)
+
+    PYTHONPATH=src python examples/sweep_grids.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DeterministicWait,
+    Exponential,
+    SingleSlotKernel,
+    ThreePhaseKernel,
+    run_sweep,
+    theorem2_cost,
+    theorem5_cost,
+)
+
+LAM, MU, K = 1 / 12, 1 / 24, 10.0
+JOB, SPOT = Exponential(LAM), Exponential(MU)
+
+
+def main():
+    # 1. r-sweep: cost/delay frontier of the three-phase policy
+    rs = jnp.linspace(0.5, 6.0, 12)
+    out = run_sweep(JOB, SPOT, ThreePhaseKernel(), {"r": rs}, k=K,
+                    n_events=100_000, key=jax.random.key(0), n_seeds=4)
+    print("== r-sweep (12 r × 4 seeds, one jit) ==")
+    print("  r:      " + " ".join(f"{r:6.2f}" for r in np.asarray(rs)))
+    print("  cost:   " + " ".join(f"{c:6.2f}"
+                                  for c in out["avg_cost"].mean(-1)))
+    print("  delay:  " + " ".join(f"{d:6.2f}"
+                                  for d in out["avg_delay"].mean(-1)))
+    print("  (Theorem-5 closed forms at integer r: "
+          + " ".join(f"E[C_{n}]={theorem5_cost(K, LAM, MU, n):.2f}"
+                     for n in (1, 2, 3)) + ")")
+
+    # 2. r × k meshgrid: how the optimal knob shifts with the cost ratio
+    r_ax = jnp.linspace(0.5, 5.0, 10)
+    k_ax = jnp.array([2.0, 5.0, 10.0, 20.0])
+    rg, kg = jnp.meshgrid(r_ax, k_ax, indexing="ij")
+    out2 = run_sweep(JOB, SPOT, ThreePhaseKernel(), {"r": rg}, k=kg,
+                     n_events=100_000, key=jax.random.key(1), n_seeds=2)
+    cost = out2["avg_cost"].mean(-1)  # (10, 4)
+    best = np.asarray(r_ax)[cost.argmin(axis=0)]
+    print("\n== r × k meshgrid (10×4×2 seeds, one jit) ==")
+    for j, k in enumerate(np.asarray(k_ax)):
+        print(f"  k={k:5.1f}: min-cost r*={best[j]:.1f} "
+              f"cost={cost[:, j].min():.3f}")
+
+    # 3. wait-time parameter sweep with traced params: vary deterministic X
+    kernel = SingleSlotKernel(wait=DeterministicWait(1.0))
+    xs = jnp.linspace(2.0, 40.0, 10)
+    out3 = run_sweep(JOB, SPOT, kernel, {"wait": {"value": xs}}, k=K,
+                     n_events=100_000, key=jax.random.key(2), n_seeds=4,
+                     rmax=1)
+    print("\n== deterministic-wait sweep (10 X × 4 seeds, one jit) ==")
+    print("  X:      " + " ".join(f"{x:6.1f}" for x in np.asarray(xs)))
+    print("  cost:   " + " ".join(f"{c:6.2f}"
+                                  for c in out3["avg_cost"].mean(-1)))
+    print("  delay:  " + " ".join(f"{d:6.2f}"
+                                  for d in out3["avg_delay"].mean(-1)))
+    print(f"  (Theorem-2 bound at δ=3: {theorem2_cost(K, MU, 3.0):.3f})")
+
+
+if __name__ == "__main__":
+    main()

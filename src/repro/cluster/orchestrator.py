@@ -8,7 +8,12 @@ guaranteed capacity is on-demand pods at cost ``k``.
 Components:
   * :class:`OnlineAdmissionController` — Algorithm 1 running *online* on the
     live event stream (the jit'd scan in repro.core.adaptive is the
-    offline/on-device twin; this one consumes real callbacks).
+    offline/on-device twin; this one consumes real callbacks).  Admission
+    decisions go through :func:`repro.core.policies.three_phase_admit_prob`
+    — the same admission law the engine kernels trace — and
+    :meth:`OnlineAdmissionController.kernel` hands the current knob to
+    :func:`repro.core.engine.run_sweep`/``run_sim`` for on-device what-if
+    sweeps against the live controller state.
   * :class:`SpotCluster` — discrete-event cluster: job arrivals, spot-slot
     arrivals, preemptions with notice.  Jobs admitted to the spot queue wait
     (Theorem 4: X = ∞ below the knob); rejected jobs run on-demand
@@ -32,7 +37,11 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
-from repro.core.policies import ThreePhasePolicy
+from repro.core.policies import (
+    ThreePhaseKernel,
+    ThreePhasePolicy,
+    three_phase_admit_prob,
+)
 
 
 class OnlineAdmissionController:
@@ -54,8 +63,15 @@ class OnlineAdmissionController:
     def policy(self) -> ThreePhasePolicy:
         return ThreePhasePolicy(r=self.r)
 
+    def kernel(self) -> ThreePhaseKernel:
+        """The engine kernel twin; pair with :meth:`kernel_params`."""
+        return ThreePhaseKernel()
+
+    def kernel_params(self) -> dict:
+        return self.policy().kernel_params()
+
     def admit(self, queue_len: int, rng: np.random.Generator) -> bool:
-        return rng.random() < self.policy().admit_prob(queue_len)
+        return rng.random() < three_phase_admit_prob(queue_len, self.r)
 
     def on_job_complete(self, delay: float) -> None:
         self._delays.append(delay)

@@ -1,14 +1,26 @@
 """The paper's contribution: opportunistic spot/on-demand scheduling.
 
-Public API:
+Architecture (post-engine-refactor):
   * arrival processes    — :mod:`repro.core.arrivals`
   * cost laws            — :mod:`repro.core.cost` (Theorem 1)
   * closed forms         — :mod:`repro.core.analytic` (Theorems 2, 5)
   * wait-time theory     — :mod:`repro.core.waittime` (Theorem 3, Cor. 1-4)
   * LP oracles           — :mod:`repro.core.lp`
-  * policies             — :mod:`repro.core.policies` (Theorem 4)
-  * simulators           — :mod:`repro.core.simulator`
-  * Algorithm 1          — :mod:`repro.core.adaptive`
+  * policy kernels       — :mod:`repro.core.policies` (Theorem 4; the one
+                           admission law shared by engine, host descriptors,
+                           and the cluster orchestrator)
+  * sweep engine         — :mod:`repro.core.engine` (the single
+                           merged-renewal event loop; ``run_sweep`` runs a
+                           whole policy grid × seed fleet as one jitted
+                           program with chunked float32 windows)
+  * seed-compat wrappers — :mod:`repro.core.simulator`
+                           (``run_queue_sim`` / ``run_single_slot_sim``)
+  * Algorithm 1          — :mod:`repro.core.adaptive` (single and batched
+                           multi-δ learners on the engine)
+
+New scenarios plug in as policy kernels + arrival processes: an engine
+kernel is ~10 lines (see ``ThreePhaseKernel``), and everything downstream
+(sweeps, Algorithm 1, benchmarks) is generic over it.
 """
 from repro.core.arrivals import (
     ArrivalProcess,
@@ -19,7 +31,10 @@ from repro.core.arrivals import (
     Uniform,
     prob_A_le_S,
 )
-from repro.core.adaptive import adaptive_admission_control
+from repro.core.adaptive import (
+    adaptive_admission_control,
+    adaptive_admission_control_batched,
+)
 from repro.core.analytic import (
     mm1n_pi,
     theorem2_cost,
@@ -28,7 +43,21 @@ from repro.core.analytic import (
     theorem5_delta,
 )
 from repro.core.cost import cost_lower_bound, pi0_from_cost, theorem1_cost
-from repro.core.policies import SingleSlotPolicy, ThreePhasePolicy
+from repro.core.engine import (
+    EngineState,
+    PolicyKernel,
+    WindowStats,
+    run_sim,
+    run_sweep,
+    summarize,
+)
+from repro.core.policies import (
+    SingleSlotKernel,
+    SingleSlotPolicy,
+    ThreePhaseKernel,
+    ThreePhasePolicy,
+    three_phase_admit_prob,
+)
 from repro.core.simulator import run_queue_sim, run_single_slot_sim
 from repro.core.waittime import (
     DeterministicWait,
@@ -43,11 +72,14 @@ from repro.core.waittime import (
 
 __all__ = [
     "ArrivalProcess", "BathtubGCP", "Deterministic", "Exponential", "Gamma",
-    "Uniform", "prob_A_le_S", "adaptive_admission_control", "mm1n_pi",
-    "theorem2_cost", "theorem2_delta_max", "theorem5_cost", "theorem5_delta",
-    "cost_lower_bound", "pi0_from_cost", "theorem1_cost", "SingleSlotPolicy",
-    "ThreePhasePolicy", "run_queue_sim", "run_single_slot_sim",
-    "DeterministicWait", "ExponentialWait", "InfiniteWait", "TwoPointWait",
-    "laplace_target", "optimal_deterministic", "optimal_exp_rate",
-    "optimal_two_point",
+    "Uniform", "prob_A_le_S", "adaptive_admission_control",
+    "adaptive_admission_control_batched", "mm1n_pi", "theorem2_cost",
+    "theorem2_delta_max", "theorem5_cost", "theorem5_delta",
+    "cost_lower_bound", "pi0_from_cost", "theorem1_cost", "EngineState",
+    "PolicyKernel", "WindowStats", "run_sim", "run_sweep", "summarize",
+    "SingleSlotKernel", "SingleSlotPolicy", "ThreePhaseKernel",
+    "ThreePhasePolicy", "three_phase_admit_prob", "run_queue_sim",
+    "run_single_slot_sim", "DeterministicWait", "ExponentialWait",
+    "InfiniteWait", "TwoPointWait", "laplace_target",
+    "optimal_deterministic", "optimal_exp_rate", "optimal_two_point",
 ]

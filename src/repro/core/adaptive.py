@@ -1,4 +1,4 @@
-"""Algorithm 1 — Adaptive Admission Control Policy — as one jit'd scan.
+"""Algorithm 1 — Adaptive Admission Control — on the sweep engine.
 
 The learner runs the Theorem-4 three-phase policy at the current knob ``r``,
 measures the empirical average delay d(r) over a window of events, and takes
@@ -7,15 +7,23 @@ a projected gradient step on the slack penalty L(r) = ½(d(r) − δ)²:
     r ← clip(r − η·(d(r) − δ), 0, r_max)
 
 exactly as the paper's Algorithm 1 (the sign of ∂d/∂r is absorbed into η > 0
-since d(r) is increasing in r).  The outer window loop and the inner event
-loop are both ``lax.scan``s, so the full learning trajectory is one XLA
-program: deterministic given a PRNG key and cheap enough to run *on-device*
-next to a training loop.
+since d(r) is increasing in r).  The event window is the engine's
+:func:`repro.core.engine.run_window` with the shared
+:class:`repro.core.policies.ThreePhaseKernel` — the same kernel the offline
+sweeps and the cluster orchestrator use — and the outer window loop is a
+``lax.scan``, so the full learning trajectory is one XLA program:
+deterministic given a PRNG key and cheap enough to run *on-device* next to a
+training loop.
+
+:func:`adaptive_admission_control_batched` vmaps the whole learner over
+arrays of (δ, η, η-decay, r₀, r_max, k): a fleet of learners — e.g. one per
+delay target, or the paper's two far-apart initializations — advances in ONE
+jitted scan instead of one Python call per learner.
 
 Beyond-paper (recorded in EXPERIMENTS.md): an optional 1/√n step-size decay
 (``eta_decay``) suppresses the stationary oscillation of constant-η SGD; and
-the window statistic optionally includes immediate on-demand dispatches
-(delay 0) exactly as the paper's d(r) does.
+the window statistic includes immediate on-demand dispatches (delay 0)
+exactly as the paper's d(r) does.
 """
 from __future__ import annotations
 
@@ -27,11 +35,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
-from repro.core.simulator import (
-    WindowStats,
-    init_queue_carry,
-    run_queue_window,
-)
+from repro.core.engine import init_engine_state, run_window
+from repro.core.policies import ThreePhaseKernel
+
+_THREE_PHASE = ThreePhaseKernel()
 
 
 class AdaptiveTrace(NamedTuple):
@@ -50,21 +57,15 @@ class AdaptiveTrace(NamedTuple):
     spot_found_empty: jax.Array
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "job", "spot", "k_cost", "rmax", "window_events", "n_windows",
-    ),
-)
-def _adaptive_jit(job, spot, k_cost, rmax, window_events, n_windows,
-                  delta, eta, eta_decay, r0, r_max, key):
-    carry0 = init_queue_carry(key, job, spot, rmax)
+def _adaptive_core(job, spot, rmax, window_events, n_windows, k_cost, delta,
+                   eta, eta_decay, r0, r_max, key):
+    """One learner's full trajectory (vmap-able over every traced arg)."""
+    state0 = init_engine_state(key, job, spot, rmax)
 
-    def outer(state, idx):
-        carry, r = state
-        carry, s = run_queue_window(
-            job, spot, k_cost, rmax, carry, r, window_events
-        )
+    def outer(sc, idx):
+        state, r = sc
+        state, s = run_window(job, spot, _THREE_PHASE, rmax, state,
+                              {"r": r}, k_cost, window_events)
         completed = jnp.maximum(s.jobs_completed, 1).astype(jnp.float32)
         d = s.delay_sum / completed
         c = s.cost_sum / completed
@@ -83,12 +84,72 @@ def _adaptive_jit(job, spot, k_cost, rmax, window_events, n_windows,
             spot_arrivals=s.spot_arrivals,
             spot_found_empty=s.spot_found_empty,
         )
-        return (carry, r_new), trace
+        return (state, r_new), trace
 
-    (carry, r_final), traces = jax.lax.scan(
-        outer, (carry0, jnp.float32(r0)), jnp.arange(n_windows)
+    (_, r_final), traces = jax.lax.scan(
+        outer, (state0, jnp.float32(r0)), jnp.arange(n_windows)
     )
     return r_final, traces
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("job", "spot", "rmax", "window_events", "n_windows"),
+)
+def _adaptive_jit(job, spot, rmax, window_events, n_windows, k_cost, delta,
+                  eta, eta_decay, r0, r_max, key):
+    return _adaptive_core(job, spot, rmax, window_events, n_windows, k_cost,
+                          delta, eta, eta_decay, r0, r_max, key)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("job", "spot", "rmax", "window_events", "n_windows"),
+)
+def _adaptive_batched_jit(job, spot, rmax, window_events, n_windows, k_cost,
+                          delta, eta, eta_decay, r0, r_max, keys):
+    one = functools.partial(_adaptive_core, job, spot, rmax, window_events,
+                            n_windows)
+    return jax.vmap(one)(k_cost, delta, eta, eta_decay, r0, r_max, keys)
+
+
+def _assemble(tr, r_final) -> dict:
+    """Host-side float64 running averages from a (stacked) trace.
+
+    Works for a single learner (arrays shaped ``(n_windows,)``) and a batch
+    (arrays ``(batch, n_windows)``): the window axis is the last one.
+    """
+    t = jax.tree.map(lambda x: np.asarray(x, np.float64), tr)
+    cum_completed = np.maximum(np.cumsum(t.completed, axis=-1), 1.0)
+    running_cost = np.cumsum(t.cost_sum, axis=-1) / cum_completed
+    running_delay = np.cumsum(t.delay_sum, axis=-1) / cum_completed
+    spot_arr = np.maximum(np.cumsum(t.spot_arrivals, axis=-1), 1.0)
+    pi0_spot = np.cumsum(t.spot_found_empty, axis=-1) / spot_arr
+    r_star = np.asarray(r_final, np.float64)
+    return {
+        "r": t.r,
+        "r_star": r_star if r_star.ndim else float(r_star),
+        "window_delay": t.window_delay,
+        "window_cost": t.window_cost,
+        "running_cost": running_cost,
+        "running_delay": running_delay,
+        "pi0_spot": pi0_spot,
+        "final_cost": _last(running_cost),
+        "final_delay": _last(running_delay),
+        "final_pi0": _last(pi0_spot),
+        "jobs_total": _reduce(np.sum, t.jobs),
+        "time_total": _reduce(np.sum, t.time),
+    }
+
+
+def _last(x: np.ndarray):
+    v = x[..., -1]
+    return float(v) if v.ndim == 0 else v
+
+
+def _reduce(fn, x: np.ndarray):
+    v = fn(x, axis=-1)
+    return float(v) if v.ndim == 0 else v
 
 
 def adaptive_admission_control(
@@ -114,27 +175,54 @@ def adaptive_admission_control(
     final knob ``r_star`` and Theorem-1 cross-check fields.
     """
     r_final, tr = _adaptive_jit(
-        job, spot, float(k), rmax_slots, window_events, n_windows,
+        job, spot, rmax_slots, window_events, n_windows, jnp.float32(k),
         jnp.float32(delta), jnp.float32(eta), jnp.float32(eta_decay),
         jnp.float32(r0), jnp.float32(r_max), key,
     )
-    t = jax.tree.map(lambda x: np.asarray(x, np.float64), tr)
-    cum_completed = np.maximum(np.cumsum(t.completed), 1.0)
-    running_cost = np.cumsum(t.cost_sum) / cum_completed
-    running_delay = np.cumsum(t.delay_sum) / cum_completed
-    spot_arr = np.maximum(np.cumsum(t.spot_arrivals), 1.0)
-    pi0_spot = np.cumsum(t.spot_found_empty) / spot_arr
-    return {
-        "r": t.r,
-        "r_star": float(r_final),
-        "window_delay": t.window_delay,
-        "window_cost": t.window_cost,
-        "running_cost": running_cost,
-        "running_delay": running_delay,
-        "pi0_spot": pi0_spot,
-        "final_cost": float(running_cost[-1]),
-        "final_delay": float(running_delay[-1]),
-        "final_pi0": float(pi0_spot[-1]),
-        "jobs_total": float(np.sum(t.jobs)),
-        "time_total": float(np.sum(t.time)),
-    }
+    return _assemble(tr, r_final)
+
+
+def adaptive_admission_control_batched(
+    job: ArrivalProcess,
+    spot: ArrivalProcess,
+    *,
+    k: float = 10.0,
+    delta,
+    eta=0.05,
+    eta_decay=0.0,
+    r0=0.0,
+    r_max=16.0,
+    window_events: int = 2048,
+    n_windows: int = 400,
+    rmax_slots: int = 64,
+    key: jax.Array,
+    independent_keys: bool = False,
+) -> dict:
+    """Run a fleet of Algorithm-1 learners in ONE jitted scan.
+
+    ``delta``/``eta``/``eta_decay``/``r0``/``r_max``/``k`` broadcast to a
+    common 1-D batch shape — e.g. ``delta=jnp.linspace(2, 30, 16)`` trains 16
+    multi-δ learners at once, or ``r0=jnp.array([0.05, 4.0])`` reproduces the
+    paper's two-initialization convergence plots in a single call.  By
+    default every learner sees the same event stream (common random numbers,
+    so trajectories differ only through the policy); pass
+    ``independent_keys=True`` to fold a per-learner offset into the key.
+
+    Returns the same dict as :func:`adaptive_admission_control` with a
+    leading batch axis on every array (and on the ``final_*``/``r_star``
+    scalars).
+    """
+    args = [jnp.asarray(x, jnp.float32)
+            for x in (k, delta, eta, eta_decay, r0, r_max)]
+    batch = jnp.broadcast_shapes(*(a.shape for a in args), (1,))
+    n = int(np.prod(batch))
+    args = [jnp.broadcast_to(a, batch).reshape(-1) for a in args]
+    keys = (jax.random.split(key, n) if independent_keys
+            else jnp.repeat(key[None], n, axis=0))
+    r_final, tr = _adaptive_batched_jit(
+        job, spot, rmax_slots, window_events, n_windows, *args, keys,
+    )
+    # restore multi-dimensional batch shapes (e.g. a delta × r0 meshgrid)
+    r_final = r_final.reshape(batch)
+    tr = jax.tree.map(lambda x: x.reshape(batch + x.shape[1:]), tr)
+    return _assemble(tr, r_final)

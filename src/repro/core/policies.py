@@ -1,4 +1,4 @@
-"""Scheduling policies from the paper, as composable descriptors.
+"""Scheduling policies from the paper: one admission law, two engine kernels.
 
 The central object is the Theorem-4 **three-phase policy** parameterized by a
 single continuous knob ``r = N̂ + q`` (eq. 12):
@@ -7,8 +7,19 @@ single continuous knob ``r = N̂ + q`` (eq. 12):
   * queue length == N̂ : admit with probability q = r − N̂    [phase 2]
   * queue length  > N̂ : dispatch straight to on-demand      [phase 3]
 
-``SingleSlotPolicy`` is the strong-delay-regime specialization (Theorems 2/3):
-queue capped at one with an explicit maximal-wait distribution.
+:func:`three_phase_admit_prob` is the single source of that admission math —
+shared by the traced engine kernel, the host-side policy descriptor, and the
+cluster orchestrator (the seed carried three copies).
+
+The engine kernels (see :mod:`repro.core.engine` for the protocol):
+
+  * :class:`ThreePhaseKernel` — Theorem 4; params ``{"r": f32}``; admitted
+    jobs wait indefinitely.
+  * :class:`SingleSlotKernel` — Theorems 2/3; queue capped at one, each
+    admitted job stamped with a sampled maximal wait X (budget) and defecting
+    to on-demand when it expires.  Wait-time parameters may be traced via
+    ``params["wait"]`` (see :meth:`repro.core.waittime.WaitTime.params`) so a
+    wait-time family can be swept inside one compiled program.
 """
 from __future__ import annotations
 
@@ -20,10 +31,63 @@ import jax.numpy as jnp
 
 from repro.core.waittime import WaitTime, InfiniteWait
 
+_INF = jnp.float32(3e38)
+
+
+def three_phase_admit_prob(qlen, r):
+    """P(admit | queue length) under the Theorem-4 three-phase law.
+
+    The one admission formula in the codebase.  Two numeric backends: host
+    scalars take a pure-Python path (the cluster orchestrator calls this
+    once per live event; an un-jitted jnp round-trip costs ~1 ms per call),
+    traced JAX inputs take the jnp path the engine kernel scans over.
+    """
+    if not (isinstance(qlen, jax.Array) or isinstance(r, jax.Array)):
+        n_hat = math.floor(r)
+        if qlen < n_hat:
+            return 1.0
+        return r - n_hat if qlen == n_hat else 0.0
+    n_hat = jnp.floor(r)
+    frac = r - n_hat
+    qf = jnp.asarray(qlen, jnp.float32)
+    return jnp.where(qf < n_hat, 1.0, jnp.where(qf == n_hat, frac, 0.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class ThreePhaseKernel:
+    """Theorem-4 engine kernel; params ``{"r": f32}``."""
+
+    def init_params(self, r: float) -> dict:
+        return {"r": jnp.float32(r)}
+
+    def admit(self, params, qlen, key):
+        p = three_phase_admit_prob(qlen, params["r"])
+        return jax.random.uniform(key) < p, _INF
+
+
+@dataclasses.dataclass(frozen=True)
+class SingleSlotKernel:
+    """Theorems-2/3 engine kernel: queue ≤ 1 with maximal wait X.
+
+    A job joins only if the queue is empty and its sampled wait budget is
+    positive (X = 0 means "go on-demand immediately", as in Corollary 1's
+    two-point optimum); otherwise it dispatches to on-demand at once.
+    """
+
+    wait: WaitTime = InfiniteWait()
+
+    def init_params(self, traced_wait: bool = False) -> dict:
+        return {"wait": self.wait.params()} if traced_wait else {}
+
+    def admit(self, params, qlen, key):
+        wp = params.get("wait") if isinstance(params, dict) else None
+        x = (self.wait.sample_from(wp, key) if wp else self.wait.sample(key))
+        return (qlen == 0) & (x > 0.0), x
+
 
 @dataclasses.dataclass(frozen=True)
 class ThreePhasePolicy:
-    """Theorem-4 greedy policy with fractional admission knob ``r``."""
+    """Host-side descriptor of the Theorem-4 policy at fixed ``r``."""
 
     r: float
 
@@ -36,16 +100,13 @@ class ThreePhasePolicy:
         return self.r - math.floor(self.r)
 
     def admit_prob(self, qlen: int) -> float:
-        if qlen < self.n_hat:
-            return 1.0
-        if qlen == self.n_hat:
-            return self.q
-        return 0.0
+        return three_phase_admit_prob(qlen, self.r)
 
-    def admit_prob_traced(self, qlen: jax.Array, r: jax.Array) -> jax.Array:
-        n_hat = jnp.floor(r)
-        qf = qlen.astype(jnp.float32)
-        return jnp.where(qf < n_hat, 1.0, jnp.where(qf == n_hat, r - n_hat, 0.0))
+    def kernel(self) -> ThreePhaseKernel:
+        return ThreePhaseKernel()
+
+    def kernel_params(self) -> dict:
+        return {"r": jnp.float32(self.r)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +117,12 @@ class SingleSlotPolicy:
 
     def admit_prob(self, qlen: int) -> float:
         return 1.0 if qlen == 0 else 0.0
+
+    def kernel(self) -> SingleSlotKernel:
+        return SingleSlotKernel(wait=self.wait)
+
+    def kernel_params(self) -> dict:
+        return {}
 
 
 def phase_boundaries(r: float) -> tuple[int, float]:

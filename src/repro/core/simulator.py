@@ -1,176 +1,49 @@
-"""Event-driven G/G/1+spot queue simulators, fully jit-compiled.
+"""Seed-compatible simulator entry points, now thin wrappers over the engine.
 
-Two simulators, both written as ``lax.scan`` over *merged renewal events* so
-an entire multi-million-event trajectory compiles once and runs on any JAX
-backend:
+The two event loops this module used to carry (a multi-slot queue loop and a
+single-slot maximal-wait loop, near-duplicates of each other) live on as two
+policy kernels plugged into :mod:`repro.core.engine`'s single merged-renewal
+event loop:
 
-  * :func:`run_queue_sim` — the multi-slot queue driven by the paper's
-    three-phase policy (Theorem 4) with fractional admission ``r = N̂ + q``
-    (eq. 12). Jobs that join wait indefinitely (X = ∞) as Theorem 4 requires.
-
+  * :func:`run_queue_sim` — Theorem-4 three-phase policy at fixed ``r``
+    (:class:`repro.core.policies.ThreePhaseKernel`); admitted jobs wait
+    indefinitely.
   * :func:`run_single_slot_sim` — the queue-length-≤-1 system of Theorems 2/3
-    where the waiting job has a sampled *maximal wait time* X and defects to
-    an on-demand instance when X expires.
+    (:class:`repro.core.policies.SingleSlotKernel`) where the waiting job
+    defects to on-demand when its sampled maximal wait X expires.
 
-Numerical design: instead of absolute event times (which overflow float32
-precision over long horizons) each queued job carries an *age* that is
-incremented by the inter-event gap ``dt``; waits therefore stay ~O(mean
-inter-arrival) in magnitude.  Per-window sums stay small; long-run averages
-are assembled in float64 on the host from the per-window outputs.
+Both reproduce the seed simulators bit-for-bit per seed (the engine uses the
+same per-event PRNG split layout and float32 accumulation order; verified in
+tests/test_core_engine.py against frozen copies of the seed event bodies) —
+with one documented exception: event-time *ties* now resolve spot-first
+(the seed's single-slot priority) where the seed queue loop resolved them
+job-first.  Ties are measure-zero for every continuous inter-arrival family;
+only simultaneous ``Deterministic`` job/spot processes can observe the
+difference.
+Compiled entry points are cached at module scope in the engine — the seed's
+``burn_in`` path re-wrapped its window function in a fresh ``jax.jit`` on
+every call.
 
-Cost accounting (paper §II): a spot service costs 1, an on-demand dispatch
-costs k.  Delay of a job is its total time in system: 0 for an immediate
-on-demand dispatch, its queue wait for a spot-served job, and its (expired)
-wait for a job that defects to on-demand.
-
-π₀ is tracked the way Theorem 1's proof uses it — the long-run fraction of
-*spot arrivals* that find the queue empty — alongside the time-averaged
-empty-queue fraction.
+For parameter grids, use :func:`repro.core.engine.run_sweep` instead of
+looping over these wrappers: it runs the whole (grid × seeds) fleet as one
+jitted program.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
-
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
+from repro.core.engine import (  # noqa: F401  (re-exported for compat)
+    EngineState,
+    WindowStats,
+    run_sim,
+    run_sweep,
+    summarize,
+)
+from repro.core.policies import SingleSlotKernel, ThreePhaseKernel
 from repro.core.waittime import WaitTime
 
-_INF = jnp.float32(3e38)
-
-
-class WindowStats(NamedTuple):
-    """Per-window accumulators (float32 sums / int32 counts)."""
-
-    jobs_arrived: jax.Array
-    jobs_completed: jax.Array
-    spot_served: jax.Array
-    ondemand: jax.Array
-    cost_sum: jax.Array
-    delay_sum: jax.Array
-    time_elapsed: jax.Array
-    empty_time: jax.Array
-    spot_arrivals: jax.Array
-    spot_found_empty: jax.Array
-
-    @staticmethod
-    def zeros() -> "WindowStats":
-        z = jnp.zeros((), jnp.float32)
-        zi = jnp.zeros((), jnp.int32)
-        return WindowStats(zi, zi, zi, zi, z, z, z, z, zi, zi)
-
-
-class QueueCarry(NamedTuple):
-    key: jax.Array
-    next_job: jax.Array  # time until next job arrival
-    next_spot: jax.Array  # time until next spot arrival
-    ages: jax.Array  # (rmax,) ages of queued jobs (ring buffer)
-    head: jax.Array  # int32 ring head
-    qlen: jax.Array  # int32 queue length
-
-
-def _admit_prob_three_phase(qlen: jax.Array, r: jax.Array) -> jax.Array:
-    """Theorem-4 three-phase admission: P(admit | queue length)."""
-    n_hat = jnp.floor(r)
-    frac = r - n_hat
-    qf = qlen.astype(jnp.float32)
-    return jnp.where(qf < n_hat, 1.0, jnp.where(qf == n_hat, frac, 0.0))
-
-
-def init_queue_carry(key: jax.Array, job: ArrivalProcess, spot: ArrivalProcess,
-                     rmax: int) -> QueueCarry:
-    kj, ks, kc = jax.random.split(key, 3)
-    return QueueCarry(
-        key=kc,
-        next_job=job.sample(kj),
-        next_spot=spot.sample(ks),
-        ages=jnp.zeros((rmax,), jnp.float32),
-        head=jnp.zeros((), jnp.int32),
-        qlen=jnp.zeros((), jnp.int32),
-    )
-
-
-def _queue_event(job: ArrivalProcess, spot: ArrivalProcess, k_cost: float,
-                 rmax: int, carry: QueueCarry, stats: WindowStats,
-                 r: jax.Array) -> tuple[QueueCarry, WindowStats]:
-    """Process one merged event (job arrival or spot arrival)."""
-    key, k_job, k_spot, k_adm = jax.random.split(carry.key, 4)
-    is_job = carry.next_job <= carry.next_spot
-    dt = jnp.minimum(carry.next_job, carry.next_spot)
-
-    ages = carry.ages + dt
-
-    # ---- job-arrival branch quantities ----
-    p_admit = _admit_prob_three_phase(carry.qlen, r)
-    admit = (jax.random.uniform(k_adm) < p_admit) & (carry.qlen < rmax)
-    tail = (carry.head + carry.qlen) % rmax
-    ages_job = jnp.where(
-        admit, ages.at[tail].set(0.0), ages
-    )
-    qlen_job = carry.qlen + jnp.where(admit, 1, 0)
-    # not admitted -> immediate on-demand dispatch (cost k, delay 0)
-    od_inc = jnp.where(admit, 0, 1)
-
-    # ---- spot-arrival branch quantities ----
-    has_job = carry.qlen > 0
-    wait = ages[carry.head]
-    head_spot = jnp.where(has_job, (carry.head + 1) % rmax, carry.head)
-    qlen_spot = carry.qlen - jnp.where(has_job, 1, 0)
-
-    # ---- merge ----
-    new_carry = QueueCarry(
-        key=key,
-        next_job=jnp.where(is_job, job.sample(k_job), carry.next_job - dt),
-        next_spot=jnp.where(is_job, carry.next_spot - dt, spot.sample(k_spot)),
-        ages=jnp.where(is_job, ages_job, ages),
-        head=jnp.where(is_job, carry.head, head_spot),
-        qlen=jnp.where(is_job, qlen_job, qlen_spot),
-    )
-    served = (~is_job) & has_job
-    new_stats = WindowStats(
-        jobs_arrived=stats.jobs_arrived + jnp.where(is_job, 1, 0),
-        jobs_completed=stats.jobs_completed
-        + jnp.where(is_job, od_inc, jnp.where(served, 1, 0)),
-        spot_served=stats.spot_served + jnp.where(served, 1, 0),
-        ondemand=stats.ondemand + jnp.where(is_job, od_inc, 0),
-        cost_sum=stats.cost_sum
-        + jnp.where(is_job, od_inc.astype(jnp.float32) * k_cost, 0.0)
-        + jnp.where(served, 1.0, 0.0),
-        delay_sum=stats.delay_sum + jnp.where(served, wait, 0.0),
-        time_elapsed=stats.time_elapsed + dt,
-        empty_time=stats.empty_time + jnp.where(carry.qlen == 0, dt, 0.0),
-        spot_arrivals=stats.spot_arrivals + jnp.where(is_job, 0, 1),
-        spot_found_empty=stats.spot_found_empty
-        + jnp.where((~is_job) & (~has_job), 1, 0),
-    )
-    return new_carry, new_stats
-
-
-def run_queue_window(job: ArrivalProcess, spot: ArrivalProcess, k_cost: float,
-                     rmax: int, carry: QueueCarry, r: jax.Array,
-                     n_events: int) -> tuple[QueueCarry, WindowStats]:
-    """Run ``n_events`` merged events under fixed admission knob ``r``."""
-
-    def body(state, _):
-        c, s = state
-        c, s = _queue_event(job, spot, k_cost, rmax, c, s, r)
-        return (c, s), None
-
-    (carry, stats), _ = jax.lax.scan(
-        body, (carry, WindowStats.zeros()), None, length=n_events
-    )
-    return carry, stats
-
-
-@functools.partial(
-    jax.jit, static_argnames=("job", "spot", "k_cost", "rmax", "n_events")
-)
-def _run_queue_sim_jit(job, spot, k_cost, rmax, n_events, r, key):
-    carry = init_queue_carry(key, job, spot, rmax)
-    return run_queue_window(job, spot, k_cost, rmax, carry, r, n_events)
+_THREE_PHASE = ThreePhaseKernel()
 
 
 def run_queue_sim(
@@ -183,134 +56,14 @@ def run_queue_sim(
     key: jax.Array,
     rmax: int = 64,
     burn_in: int = 0,
+    chunk_events: int | None = None,
 ) -> dict:
     """Simulate the Theorem-4 policy at fixed ``r``; return long-run stats."""
-    if burn_in:
-        carry = init_queue_carry(key, job, spot, rmax)
-        carry, _ = jax.jit(
-            run_queue_window, static_argnames=("job", "spot", "k_cost", "rmax",
-                                               "n_events"),
-        )(job, spot, float(k), rmax, carry, jnp.float32(r), burn_in)
-        carry, stats = jax.jit(
-            run_queue_window, static_argnames=("job", "spot", "k_cost", "rmax",
-                                               "n_events"),
-        )(job, spot, float(k), rmax, carry, jnp.float32(r), n_events)
-    else:
-        _, stats = _run_queue_sim_jit(
-            job, spot, float(k), rmax, n_events, jnp.float32(r), key
-        )
-    return _summarize(stats)
-
-
-def _summarize(stats: WindowStats) -> dict:
-    s = jax.tree.map(lambda x: np.asarray(x, np.float64), stats)
-    completed = max(s.jobs_completed, 1.0)
-    arrived = max(s.jobs_arrived, 1.0)
-    return {
-        "jobs_arrived": float(s.jobs_arrived),
-        "jobs_completed": float(s.jobs_completed),
-        "spot_served": float(s.spot_served),
-        "ondemand": float(s.ondemand),
-        "avg_cost": float(s.cost_sum / completed),
-        "avg_delay": float(s.delay_sum / completed),
-        "time": float(s.time_elapsed),
-        "pi0_time": float(s.empty_time / max(s.time_elapsed, 1e-12)),
-        "pi0_spot": float(
-            s.spot_found_empty / max(s.spot_arrivals, 1.0)
-        ),
-        "spot_utilization": float(
-            (s.spot_arrivals - s.spot_found_empty) / max(s.spot_arrivals, 1.0)
-        ),
-        "arrival_rate": float(arrived / max(s.time_elapsed, 1e-12)),
-    }
-
-
-# ---------------------------------------------------------------------------
-# Single-slot system with maximal wait time X (Theorems 2/3, Corollaries 1-4)
-# ---------------------------------------------------------------------------
-
-
-class SingleSlotCarry(NamedTuple):
-    key: jax.Array
-    next_job: jax.Array
-    next_spot: jax.Array
-    occupied: jax.Array  # bool
-    age: jax.Array  # current job's wait so far
-    x_left: jax.Array  # remaining wait budget of current job
-
-
-def _single_slot_event(job: ArrivalProcess, spot: ArrivalProcess,
-                       wait: WaitTime, k_cost: float,
-                       carry: SingleSlotCarry,
-                       stats: WindowStats) -> tuple[SingleSlotCarry, WindowStats]:
-    key, k_job, k_spot, k_x = jax.random.split(carry.key, 4)
-    deadline = jnp.where(carry.occupied, carry.x_left, _INF)
-    dt = jnp.minimum(jnp.minimum(carry.next_job, carry.next_spot), deadline)
-    # Event priority on ties: spot > deadline > job (measure-zero for
-    # continuous distributions; deterministic X makes spot-at-deadline serve).
-    is_spot = carry.next_spot <= jnp.minimum(carry.next_job, deadline)
-    is_deadline = (~is_spot) & (deadline <= carry.next_job)
-    is_job = (~is_spot) & (~is_deadline)
-
-    age = carry.age + dt
-    served = is_spot & carry.occupied
-    defected = is_deadline  # only fires when occupied
-    x_new = wait.sample(k_x)
-    joins = is_job & (~carry.occupied) & (x_new > 0.0)
-    od_now = is_job & (carry.occupied | (x_new <= 0.0))
-
-    new_carry = SingleSlotCarry(
-        key=key,
-        next_job=jnp.where(is_job, job.sample(k_job), carry.next_job - dt),
-        next_spot=jnp.where(is_spot, spot.sample(k_spot), carry.next_spot - dt),
-        occupied=jnp.where(served | defected, False,
-                           jnp.where(joins, True, carry.occupied)),
-        age=jnp.where(joins, 0.0, age),
-        x_left=jnp.where(joins, x_new,
-                         jnp.where(carry.occupied, carry.x_left - dt, _INF)),
+    return run_sim(
+        job, spot, _THREE_PHASE, _THREE_PHASE.init_params(r), k=k,
+        n_events=n_events, key=key, rmax=rmax, burn_in=burn_in,
+        chunk_events=chunk_events,
     )
-    completed_inc = (served | defected | od_now).astype(jnp.int32)
-    new_stats = WindowStats(
-        jobs_arrived=stats.jobs_arrived + is_job.astype(jnp.int32),
-        jobs_completed=stats.jobs_completed + completed_inc,
-        spot_served=stats.spot_served + served.astype(jnp.int32),
-        ondemand=stats.ondemand + (defected | od_now).astype(jnp.int32),
-        cost_sum=stats.cost_sum
-        + jnp.where(served, 1.0, 0.0)
-        + jnp.where(defected | od_now, k_cost, 0.0),
-        delay_sum=stats.delay_sum + jnp.where(served | defected, age, 0.0),
-        time_elapsed=stats.time_elapsed + dt,
-        empty_time=stats.empty_time + jnp.where(carry.occupied, 0.0, dt),
-        spot_arrivals=stats.spot_arrivals + is_spot.astype(jnp.int32),
-        spot_found_empty=stats.spot_found_empty
-        + (is_spot & (~carry.occupied)).astype(jnp.int32),
-    )
-    return new_carry, new_stats
-
-
-@functools.partial(
-    jax.jit, static_argnames=("job", "spot", "wait", "k_cost", "n_events")
-)
-def _run_single_slot_jit(job, spot, wait, k_cost, n_events, key):
-    kj, ks, kc = jax.random.split(key, 3)
-    carry = SingleSlotCarry(
-        key=kc,
-        next_job=job.sample(kj),
-        next_spot=spot.sample(ks),
-        occupied=jnp.zeros((), jnp.bool_),
-        age=jnp.zeros((), jnp.float32),
-        x_left=_INF,
-    )
-
-    def body(state, _):
-        c, s = state
-        c, s = _single_slot_event(job, spot, wait, k_cost, c, s)
-        return (c, s), None
-
-    (carry, stats), _ = jax.lax.scan(
-        body, (carry, WindowStats.zeros()), None, length=n_events
-    )
-    return carry, stats
 
 
 def run_single_slot_sim(
@@ -321,7 +74,10 @@ def run_single_slot_sim(
     k: float = 10.0,
     n_events: int,
     key: jax.Array,
+    chunk_events: int | None = None,
 ) -> dict:
     """Simulate the single-slot (queue ≤ 1) policy with maximal wait X."""
-    _, stats = _run_single_slot_jit(job, spot, wait, float(k), n_events, key)
-    return _summarize(stats)
+    return run_sim(
+        job, spot, SingleSlotKernel(wait=wait), {}, k=k, n_events=n_events,
+        key=key, rmax=1, chunk_events=chunk_events,
+    )

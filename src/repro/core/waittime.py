@@ -25,10 +25,25 @@ _INF = 3e38
 
 @dataclasses.dataclass(frozen=True)
 class WaitTime:
-    """Static descriptor of the maximal-wait distribution X (traceable)."""
+    """Static descriptor of the maximal-wait distribution X (traceable).
+
+    Two sampling entry points: :meth:`sample` bakes this instance's fields in
+    as trace-time constants, while :meth:`sample_from` reads them from a
+    traced ``params`` dict (as produced by :meth:`params`) so a wait-time
+    *family* can be swept/vmapped inside one compiled program — the
+    distribution's shape is static, only its parameters are traced.
+    """
+
+    def params(self) -> dict:
+        """Traced-parameter pytree for :meth:`sample_from`."""
+        return {}
+
+    def sample_from(self, params: dict, key: jax.Array) -> jax.Array:
+        """Draw X with this family's shape but parameters from ``params``."""
+        raise NotImplementedError
 
     def sample(self, key: jax.Array) -> jax.Array:
-        raise NotImplementedError
+        return self.sample_from(self.params(), key)
 
     def mean(self) -> float:
         raise NotImplementedError
@@ -42,8 +57,8 @@ class WaitTime:
 class InfiniteWait(WaitTime):
     """X = ∞ — wait indefinitely for a spot slot (Theorem 4 phases 1-2)."""
 
-    def sample(self, key):
-        del key
+    def sample_from(self, params, key):
+        del params, key
         return jnp.asarray(_INF, jnp.float32)
 
     def mean(self):
@@ -60,9 +75,12 @@ class TwoPointWait(WaitTime):
     p: float
     value: float
 
-    def sample(self, key):
-        take = jax.random.uniform(key) < self.p
-        return jnp.where(take, jnp.float32(self.value), jnp.float32(0.0))
+    def params(self):
+        return {"p": jnp.float32(self.p), "value": jnp.float32(self.value)}
+
+    def sample_from(self, params, key):
+        take = jax.random.uniform(key) < params["p"]
+        return jnp.where(take, params["value"], jnp.float32(0.0))
 
     def mean(self):
         return self.p * self.value
@@ -75,8 +93,11 @@ class TwoPointWait(WaitTime):
 class ExponentialWait(WaitTime):
     rate_: float
 
-    def sample(self, key):
-        return jax.random.exponential(key, dtype=jnp.float32) / self.rate_
+    def params(self):
+        return {"rate": jnp.float32(self.rate_)}
+
+    def sample_from(self, params, key):
+        return jax.random.exponential(key, dtype=jnp.float32) / params["rate"]
 
     def mean(self):
         return 1.0 / self.rate_
@@ -89,9 +110,12 @@ class ExponentialWait(WaitTime):
 class DeterministicWait(WaitTime):
     value: float
 
-    def sample(self, key):
+    def params(self):
+        return {"value": jnp.float32(self.value)}
+
+    def sample_from(self, params, key):
         del key
-        return jnp.asarray(self.value, jnp.float32)
+        return params["value"]
 
     def mean(self):
         return self.value

@@ -1,0 +1,71 @@
+"""Minimal property-test fallback for environments without ``hypothesis``.
+
+Provides just enough of the ``hypothesis`` surface the suite uses —
+``given``, ``settings``, ``strategies.floats/integers`` with ``.filter`` —
+so tier-1 collection and a deterministic smoke-level version of each
+property test run on a bare interpreter.  When ``hypothesis`` is installed
+(see requirements-dev.txt) the real shrinking/fuzzing engine is used
+instead; this fallback checks each property on a fixed diagonal of
+boundary/interior points.
+"""
+from __future__ import annotations
+
+
+class _Strategy:
+    def __init__(self, draws):
+        self.draws = list(draws)
+
+    def filter(self, pred):
+        return _Strategy(v for v in self.draws if pred(v))
+
+
+class strategies:
+    @staticmethod
+    def floats(min_value, max_value, **_):
+        lo, hi = float(min_value), float(max_value)
+        return _Strategy([lo, hi, 0.5 * (lo + hi), lo + 0.1 * (hi - lo),
+                          lo + 0.9 * (hi - lo)])
+
+    @staticmethod
+    def integers(min_value, max_value):
+        lo, hi = int(min_value), int(max_value)
+        return _Strategy(sorted({lo, hi, (lo + hi) // 2,
+                                 min(lo + 1, hi), max(hi - 1, lo)}))
+
+    @staticmethod
+    def sampled_from(elements):
+        return _Strategy(elements)
+
+    @staticmethod
+    def booleans():
+        return _Strategy([False, True])
+
+
+def given(**strats):
+    names = list(strats)
+    n_examples = max(len(strats[n].draws) for n in names)
+
+    def deco(fn):
+        # NOTE: deliberately no functools.wraps — pytest would follow
+        # __wrapped__ to the original signature and demand the strategy
+        # parameters as fixtures.  The wrapper takes no arguments.
+        def wrapper():
+            for i in range(n_examples):
+                draw = {n: strats[n].draws[i % len(strats[n].draws)]
+                        for n in names}
+                fn(**draw)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco
+
+
+def settings(**_kwargs):
+    """No-op stand-in for ``hypothesis.settings``."""
+    return lambda fn: fn
+
+
+# `from _propcheck import strategies as st` mirrors the hypothesis import
+st = strategies

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare interpreter: deterministic fallback (see
+    from _propcheck import given, settings, st  # requirements-dev.txt)
 
 from repro.core.arrivals import (
     BathtubGCP,

@@ -1,7 +1,11 @@
 """LP-oracle tests: knapsack structure (eqs. 9-11) and the Theorem-3 LP."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare interpreter: deterministic fallback (see
+    from _propcheck import given, settings, st  # requirements-dev.txt)
 
 from repro.core import Exponential, Uniform
 from repro.core.lp import knapsack_lp, waittime_lp, waittime_lp_cost

@@ -6,7 +6,11 @@ the paper is checked against the jit-compiled G/G/1+spot simulator.
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare interpreter: deterministic fallback (see
+    from _propcheck import given, settings, st  # requirements-dev.txt)
 
 from repro.core import (
     Exponential,
