@@ -1,0 +1,136 @@
+"""Multi-pool market sweep throughput vs the single-pool engine.
+
+Times two sweeps at equal total events:
+
+  * ``single`` — the PR-1 engine (:func:`repro.core.run_sweep`): one spot
+    clock, no preemption, the same (r × seeds) grid;
+  * ``market`` — the spot-market engine (:func:`repro.core.run_market_sweep`)
+    on a 4-pool heterogeneous market with preemption-with-notice: per-pool
+    ``next_spot``/``next_preempt`` clock vectors, pool-tagged queue slots,
+    and the notice-aware kernel — the whole (≥16-point grid × seeds) batch
+    as ONE jitted nested-vmap program.
+
+The ratio is the price of the market machinery per event (wider clock
+minima, pool-eligibility masks, preemption branch).  Writes
+BENCH_market.json next to the repo root (smoke runs write a separate
+gitignored BENCH_market_smoke.json); compile time is excluded for both
+paths (identical-shape warmup calls).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    Exponential,
+    NoticeAwareKernel,
+    SpotMarket,
+    SpotPool,
+    ThreePhaseKernel,
+    run_market_sweep,
+    run_sweep,
+)
+
+LAM, MU, K = 1 / 12, 1 / 24, 10.0
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+_SCALE = 1.0
+
+
+def set_scale(scale: float) -> None:
+    global _SCALE
+    _SCALE = scale
+
+
+def _bench_json_path() -> str:
+    name = "BENCH_market.json" if _SCALE == 1.0 else "BENCH_market_smoke.json"
+    return os.path.join(_REPO_ROOT, name)
+
+
+def bench_market() -> SpotMarket:
+    """The reference 4-pool market: total slot rate = the paper's μ, split
+    across pools with heterogeneous prices and hazards."""
+    return SpotMarket(pools=(
+        SpotPool(Exponential(MU / 4), price=0.5, hazard=0.02, notice=0.5),
+        SpotPool(Exponential(MU / 4), price=0.3, hazard=0.05, notice=0.01),
+        SpotPool(Exponential(MU / 4), price=0.2, hazard=0.0),
+        SpotPool(Exponential(MU / 4), price=0.1, hazard=0.10, notice=2.0),
+    ))
+
+
+def measure_market_throughput(n_r: int = 16, n_seeds: int = 4,
+                              n_events: int | None = None,
+                              rmax: int = 64) -> dict:
+    """Time both engines on the same grid; return a result dict (also
+    JSON-dumped)."""
+    if n_events is None:
+        n_events = max(2_000, int(50_000 * _SCALE))
+    job = Exponential(LAM)
+    spot = Exponential(MU)
+    market = bench_market()
+    rs = jnp.linspace(0.25, 4.0, n_r)
+    key = jax.random.key(0)
+    kern = NoticeAwareKernel(checkpoint_time=0.05)
+
+    common = dict(k=K, n_events=n_events, key=key, n_seeds=n_seeds,
+                  rmax=rmax)
+    # warm both compiled paths with identical shapes
+    run_sweep(job, spot, ThreePhaseKernel(), {"r": rs}, **common)
+    run_market_sweep(job, market, kern, {"r": rs}, **common)
+
+    t0 = time.perf_counter()
+    run_sweep(job, spot, ThreePhaseKernel(), {"r": rs}, **common)
+    t_single = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    out = run_market_sweep(job, market, kern, {"r": rs}, **common)
+    t_market = time.perf_counter() - t0
+
+    grid_points = n_r * n_seeds
+    total_events = grid_points * n_events
+    result = {
+        "grid_points": grid_points,
+        "n_r": n_r,
+        "n_seeds": n_seeds,
+        "n_pools": market.n_pools,
+        "n_events_per_point": n_events,
+        "total_events": total_events,
+        "rmax": rmax,
+        "one_jit": True,  # the whole market grid is one compiled program
+        "t_market_s": t_market,
+        "t_single_s": t_single,
+        "market_events_per_s": total_events / t_market,
+        "single_events_per_s": total_events / t_single,
+        "market_overhead_x": t_market / t_single,
+        "preemptions_total": float(np.asarray(out["preemptions"]).sum()),
+        "resumed_total": float(np.asarray(out["resumed"]).sum()),
+        "backend": jax.default_backend(),
+    }
+    with open(_bench_json_path(), "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def bench_market_engine():
+    """Benchmark-harness entry: rows + headline (market events/s)."""
+    res = measure_market_throughput()
+    rows = [{
+        "name": (f"market/{res['n_pools']}pool_"
+                 f"{res['grid_points']}pt_grid"),
+        "us_per_call": res["t_market_s"] * 1e6,
+        "derived": (
+            f"{res['n_pools']} pools × {res['grid_points']} points × "
+            f"{res['n_events_per_point']} ev (one jit): "
+            f"market={res['t_market_s']:.2f}s "
+            f"single={res['t_single_s']:.2f}s "
+            f"overhead={res['market_overhead_x']:.2f}x "
+            f"({res['market_events_per_s']/1e6:.2f}M ev/s; "
+            f"{res['preemptions_total']:.0f} preemptions)"
+        ),
+    }]
+    return rows, res["market_events_per_s"]

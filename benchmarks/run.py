@@ -26,6 +26,7 @@ def main() -> None:
                     help="run only benches whose name contains SUBSTR")
     args = ap.parse_args()
 
+    from benchmarks import market_bench
     from benchmarks import paper_benches as pb
     from benchmarks import sweep_bench
     from benchmarks.roofline import bench_engine_roofline, bench_roofline
@@ -33,6 +34,7 @@ def main() -> None:
     if args.smoke:
         pb.set_scale(0.05)
         sweep_bench.set_scale(0.1)
+        market_bench.set_scale(0.1)
 
     benches = [
         pb.bench_theorem1_cost_law,
@@ -43,6 +45,7 @@ def main() -> None:
         pb.bench_theorem5_table,
         pb.bench_waittime_optimality,
         sweep_bench.bench_sweep_engine,  # writes BENCH_sweep.json
+        market_bench.bench_market_engine,  # writes BENCH_market.json
         bench_engine_roofline,  # reads it back
         bench_roofline,
     ]

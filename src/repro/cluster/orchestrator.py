@@ -5,31 +5,42 @@ legs / batch-inference requests) arrives at a cluster whose cheap capacity
 is spot pods (stochastic availability, advance-notice preemption) and whose
 guaranteed capacity is on-demand pods at cost ``k``.
 
+Since PR 2 the host path is a **thin consumer of the on-device spot-market
+subsystem** (:mod:`repro.core.market`): the cluster's capacity model is a
+:class:`~repro.core.market.SpotMarket` — P heterogeneous pools with
+per-pool prices, slot processes, and Poisson preemption hazards — and the
+live event loop mirrors the engine's merged clock vector (per-pool
+``next_slot``/``next_preempt`` + the job clock).  Every law is shared with
+the traced kernels: admission goes through
+:func:`repro.core.policies.three_phase_admit_prob`, preemption recovery
+through :func:`repro.core.market.checkpoint_within_notice` + re-admission
+(exactly :class:`repro.core.market.NoticeAwareKernel`), and
+:meth:`SpotCluster.what_if_sweep` hands the live controller state to
+:func:`repro.core.engine.run_market_sweep` for on-device what-if grids
+against the *same* market the host is serving.
+
 Components:
   * :class:`OnlineAdmissionController` — Algorithm 1 running *online* on the
     live event stream (the jit'd scan in repro.core.adaptive is the
-    offline/on-device twin; this one consumes real callbacks).  Admission
-    decisions go through :func:`repro.core.policies.three_phase_admit_prob`
-    — the same admission law the engine kernels trace — and
-    :meth:`OnlineAdmissionController.kernel` hands the current knob to
-    :func:`repro.core.engine.run_sweep`/``run_sim`` for on-device what-if
-    sweeps against the live controller state.
-  * :class:`SpotCluster` — discrete-event cluster: job arrivals, spot-slot
-    arrivals, preemptions with notice.  Jobs admitted to the spot queue wait
-    (Theorem 4: X = ∞ below the knob); rejected jobs run on-demand
-    immediately.  Preempted jobs checkpoint within the notice window and
-    re-enter admission — the paper's policy doubles as the recovery policy.
+    offline/on-device twin; this one consumes real callbacks), plus the
+    pool-choice hook (cheapest-price, the engine kernels' default rule).
+  * :class:`SpotCluster` — discrete-event cluster: job arrivals, per-pool
+    spot slots, hazard-clock preemptions with notice, and the legacy
+    Bernoulli preemption-at-service model (``preemption_prob``).  Jobs
+    admitted to the spot queue are tagged with a pool and wait (Theorem 4:
+    X = ∞ below the knob); rejected jobs run on-demand immediately.
+    Preempted jobs checkpoint within the notice window and re-enter
+    admission — the paper's policy doubles as the recovery policy.
   * Straggler mitigation: per-pod EWMA of step time; a pod flagged at
     >``straggler_factor``× the median is treated as preempted-with-notice.
 
 The event loop is host-side Python (it orchestrates real JAX work — see
-examples/elastic_spot_training.py); all statistics mirror
-repro.core.simulator so Theorem-1 cost accounting applies unchanged.
+examples/elastic_spot_training.py); all statistics mirror the engine's
+market accounting so Theorem-1 cost laws apply unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import math
 from collections import deque
 from typing import Callable, Optional
@@ -37,6 +48,11 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
+from repro.core.market import (
+    NoticeAwareKernel,
+    SpotMarket,
+    checkpoint_within_notice,
+)
 from repro.core.policies import (
     ThreePhaseKernel,
     ThreePhasePolicy,
@@ -73,6 +89,12 @@ class OnlineAdmissionController:
     def admit(self, queue_len: int, rng: np.random.Generator) -> bool:
         return rng.random() < three_phase_admit_prob(queue_len, self.r)
 
+    def choose_pool(self, market: SpotMarket,
+                    qlen_pool: list[int]) -> int:
+        """Pool-choice hook — cheapest price, the engine kernels' default."""
+        del qlen_pool
+        return int(np.argmin(market.prices()))
+
     def on_job_complete(self, delay: float) -> None:
         self._delays.append(delay)
         if len(self._delays) >= self.window_jobs:
@@ -89,6 +111,7 @@ class Job:
     job_id: int
     arrival_time: float
     work_steps: int  # training steps this job needs
+    pool: int = 0  # spot pool the job is placed on
 
 
 @dataclasses.dataclass
@@ -102,6 +125,7 @@ class ClusterStats:
     restores: int = 0
     total_cost: float = 0.0
     total_delay: float = 0.0
+    spot_cost: float = 0.0  # spend on spot pools incl. partial legs
 
     @property
     def avg_cost(self) -> float:
@@ -113,24 +137,39 @@ class ClusterStats:
 
 
 class SpotCluster:
-    """Discrete-event spot/on-demand cluster with admission control."""
+    """Discrete-event spot/on-demand cluster with admission control.
+
+    Capacity is described by a :class:`SpotMarket`; the classic single-pool
+    constructor (``spot_process=...``) builds the degenerate one-pool market
+    and behaves exactly as before.  Pool preemption hazards fire host-side
+    clocks that mirror the engine's ``next_preempt`` vector; the legacy
+    ``preemption_prob`` Bernoulli-at-service model is kept for callers that
+    want revocation without hazard clocks.
+    """
 
     def __init__(self, *, job_process: ArrivalProcess,
-                 spot_process: ArrivalProcess, k_cost: float = 10.0,
+                 spot_process: Optional[ArrivalProcess] = None,
+                 market: Optional[SpotMarket] = None, k_cost: float = 10.0,
                  controller: OnlineAdmissionController,
                  preemption_prob: float = 0.0,
                  notice_hours: float = 0.05,
+                 checkpoint_hours: float = 0.0,
                  straggler_factor: float = 1.5,
                  on_spot_run: Optional[Callable] = None,
                  on_ondemand_run: Optional[Callable] = None,
                  on_preempt: Optional[Callable] = None,
                  seed: int = 0):
+        if (market is None) == (spot_process is None):
+            raise ValueError("pass exactly one of spot_process / market")
+        if market is None:
+            market = SpotMarket.single(spot_process, notice=notice_hours)
+        self.market = market
         self.jobs = job_process
-        self.spots = spot_process
         self.k = k_cost
         self.ctl = controller
         self.preemption_prob = preemption_prob
         self.notice = notice_hours
+        self.checkpoint_hours = checkpoint_hours
         self.straggler_factor = straggler_factor
         self.on_spot_run = on_spot_run
         self.on_ondemand_run = on_ondemand_run
@@ -138,6 +177,7 @@ class SpotCluster:
         self.rng = np.random.default_rng(seed)
         self.queue: deque[Job] = deque()
         self.stats = ClusterStats()
+        self.pool_served = [0] * market.n_pools
         self._t = 0.0
         self._job_counter = 0
         self._step_times: dict[int, float] = {}  # pod EWMA
@@ -149,44 +189,88 @@ class SpotCluster:
         key = jax.random.key(int(self.rng.integers(2**31)))
         return float(proc.sample(key))
 
+    def _sample_preempt(self, hazard: float) -> float:
+        if hazard <= 0.0:
+            return math.inf
+        return float(self.rng.exponential(1.0 / hazard))
+
     def run(self, n_events: int, *, work_steps: int = 1) -> ClusterStats:
+        """Run the merged per-pool clock loop (job-first on exact ties,
+        the host's historical order; ties are measure-zero for continuous
+        samplers)."""
+        pools = self.market.pools
         next_job = self._sample(self.jobs)
-        next_spot = self._sample(self.spots)
+        next_slot = [self._sample(p.arrival) for p in pools]
+        next_pre = [self._sample_preempt(p.hazard) for p in pools]
         for _ in range(n_events):
-            if next_job <= next_spot:
-                self._t += next_job
-                next_spot -= next_job
+            p_slot = int(np.argmin(next_slot))
+            m_slot = next_slot[p_slot]
+            p_pre = int(np.argmin(next_pre))
+            m_pre = next_pre[p_pre]
+            dt = min(next_job, m_slot, m_pre)
+            self._t += dt
+            next_job -= dt
+            for p in range(len(pools)):
+                next_slot[p] -= dt
+                if math.isfinite(next_pre[p]):
+                    next_pre[p] -= dt
+            if next_job <= 0.0:
                 next_job = self._sample(self.jobs)
                 self._job_arrival(work_steps)
+            elif next_slot[p_slot] <= 0.0:
+                next_slot[p_slot] = self._sample(pools[p_slot].arrival)
+                self._spot_arrival(p_slot)
             else:
-                self._t += next_spot
-                next_job -= next_spot
-                next_spot = self._sample(self.spots)
-                self._spot_arrival()
+                next_pre[p_pre] = self._sample_preempt(pools[p_pre].hazard)
+                self._preempt_event(p_pre)
         return self.stats
+
+    def _qlen_pool(self) -> list[int]:
+        counts = [0] * self.market.n_pools
+        for job in self.queue:
+            counts[job.pool] += 1
+        return counts
 
     def _job_arrival(self, work_steps: int) -> None:
         self._job_counter += 1
-        job = Job(self._job_counter, self._t, work_steps)
+        pool = self.ctl.choose_pool(self.market, self._qlen_pool())
+        job = Job(self._job_counter, self._t, work_steps, pool=pool)
         if self.ctl.admit(len(self.queue), self.rng):
             self.queue.append(job)  # Theorem 4: wait indefinitely
         else:
             self._run_ondemand(job)
 
-    def _spot_arrival(self) -> None:
-        if not self.queue:
+    def _pop_oldest(self, pool: int) -> Optional[Job]:
+        for i, job in enumerate(self.queue):  # FIFO-oldest on this pool
+            if job.pool == pool:
+                del self.queue[i]
+                return job
+        return None
+
+    def _spot_arrival(self, pool_idx: int) -> None:
+        job = self._pop_oldest(pool_idx)
+        if job is None:
             return
-        job = self.queue.popleft()
+        price = self.market.pools[pool_idx].price
         delay = self._t - job.arrival_time
         preempted = self.rng.random() < self.preemption_prob
         if preempted:
-            # advance notice → checkpoint → re-admission (recovery = policy)
+            # legacy Bernoulli-at-service revocation: checkpoint within the
+            # notice -> re-admission (recovery = policy).  The same notice
+            # law as the hazard-clock path gates the checkpoint; the
+            # default checkpoint_hours=0.0 always fits (historical
+            # behaviour).
             self.stats.preemptions += 1
-            self.stats.checkpoints += 1
             if self.on_preempt is not None:
                 self.on_preempt(job)
-            self.stats.total_cost += 1.0  # the partial spot leg was paid
-            if self.ctl.admit(len(self.queue), self.rng):
+            self.stats.total_cost += price  # the partial spot leg was paid
+            self.stats.spot_cost += price
+            pool = self.market.pools[pool_idx]
+            within = checkpoint_within_notice(self.checkpoint_hours,
+                                              pool.notice)
+            if within:
+                self.stats.checkpoints += 1
+            if within and self.ctl.admit(len(self.queue), self.rng):
                 self.stats.restores += 1
                 self.queue.append(dataclasses.replace(
                     job, arrival_time=self._t))
@@ -201,9 +285,41 @@ class SpotCluster:
             self.on_spot_run(job)
         self.stats.jobs_completed += 1
         self.stats.spot_served += 1
-        self.stats.total_cost += 1.0
+        self.pool_served[pool_idx] += 1
+        self.stats.total_cost += price
+        self.stats.spot_cost += price
         self.stats.total_delay += delay
         self.ctl.on_job_complete(delay)
+
+    def _preempt_event(self, pool_idx: int) -> None:
+        """Hazard-clock revocation: the engine's preempt event, host-side.
+
+        The FIFO-oldest pool job loses its instance; the partial leg is
+        paid; the job checkpoints iff it fits the notice window
+        (:func:`checkpoint_within_notice`) AND re-admission accepts it —
+        else it defects to on-demand.  Mirrors NoticeAwareKernel exactly.
+        """
+        job = self._pop_oldest(pool_idx)
+        if job is None:
+            return  # the revoked instance was idle
+        pool = self.market.pools[pool_idx]
+        delay = self._t - job.arrival_time
+        self.stats.preemptions += 1
+        if self.on_preempt is not None:
+            self.on_preempt(job)
+        self.stats.total_cost += pool.price
+        self.stats.spot_cost += pool.price
+        within = checkpoint_within_notice(self.checkpoint_hours, pool.notice)
+        if within:
+            self.stats.checkpoints += 1
+        if within and self.ctl.admit(len(self.queue), self.rng):
+            self.stats.restores += 1
+            self.queue.append(dataclasses.replace(job, arrival_time=self._t))
+            self.stats.total_delay += delay
+            self.stats.jobs_completed += 1  # leg accounting
+            self.ctl.on_job_complete(delay)
+        else:
+            self._run_ondemand(job, extra_delay=delay)
 
     def _run_ondemand(self, job: Job, extra_delay: float = 0.0) -> None:
         if self.on_ondemand_run is not None:
@@ -213,6 +329,31 @@ class SpotCluster:
         self.stats.total_cost += self.k
         self.stats.total_delay += extra_delay
         self.ctl.on_job_complete(extra_delay)
+
+    # ---------------------------------------------------- on-device what-if
+    def what_if_sweep(self, rs, *, n_events: int = 20_000, n_seeds: int = 2,
+                      k=None, key=None) -> dict:
+        """Sweep admission knobs against THIS cluster's market, on-device.
+
+        Runs :func:`repro.core.engine.run_market_sweep` with the cluster's
+        market and recovery parameters — the host is a thin consumer: the
+        what-if grid for "where should the controller's r sit" is one
+        compiled program, not a host loop.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.engine import run_market_sweep
+
+        if key is None:
+            key = jax.random.key(int(self.rng.integers(2**31)))
+        kern = NoticeAwareKernel(checkpoint_time=self.checkpoint_hours)
+        return run_market_sweep(
+            self.jobs, self.market, kern,
+            {"r": jnp.asarray(rs, jnp.float32)},
+            k=self.k if k is None else k, n_events=n_events, key=key,
+            n_seeds=n_seeds,
+        )
 
     # ----------------------------------------------------------- stragglers
     def observe_step_time(self, pod_id: int, seconds: float) -> bool:

@@ -13,14 +13,22 @@ Architecture (post-engine-refactor):
                            merged-renewal event loop; ``run_sweep`` runs a
                            whole policy grid × seed fleet as one jitted
                            program with chunked float32 windows)
+  * spot market          — :mod:`repro.core.market` (P heterogeneous pools
+                           with per-pool prices and preemption-with-notice;
+                           ``run_market_sweep`` batches params × k ×
+                           pools-config × seeds in one jit; a degenerate
+                           1-pool zero-hazard market IS the PR-1 engine,
+                           bit-for-bit)
   * seed-compat wrappers — :mod:`repro.core.simulator`
                            (``run_queue_sim`` / ``run_single_slot_sim``)
   * Algorithm 1          — :mod:`repro.core.adaptive` (single and batched
-                           multi-δ learners on the engine)
+                           multi-δ learners on the market engine)
 
 New scenarios plug in as policy kernels + arrival processes: an engine
 kernel is ~10 lines (see ``ThreePhaseKernel``), and everything downstream
-(sweeps, Algorithm 1, benchmarks) is generic over it.
+(sweeps, Algorithm 1, benchmarks) is generic over it.  Market-aware kernels
+add a pool-choice hook (``admit_market``) and a preemption-recovery hook
+(``on_preempt``); see :class:`repro.core.market.NoticeAwareKernel`.
 """
 from repro.core.arrivals import (
     ArrivalProcess,
@@ -42,14 +50,37 @@ from repro.core.analytic import (
     theorem5_cost,
     theorem5_delta,
 )
-from repro.core.cost import cost_lower_bound, pi0_from_cost, theorem1_cost
+from repro.core.cost import (
+    cost_lower_bound,
+    market_cost_lower_bound,
+    pi0_from_cost,
+    theorem1_cost,
+    theorem1_market_cost,
+)
 from repro.core.engine import (
     EngineState,
+    MarketState,
+    MarketWindowStats,
     PolicyKernel,
     WindowStats,
+    run_market_sim,
+    run_market_sweep,
     run_sim,
     run_sweep,
     summarize,
+    summarize_market,
+)
+from repro.core.lp import knapsack_lp, market_knapsack_lp, waittime_lp
+from repro.core.market import (
+    MarketPolicyKernel,
+    NoticeAwareKernel,
+    PoolChoiceKernel,
+    PoolState,
+    SpotMarket,
+    SpotPool,
+    as_market,
+    checkpoint_within_notice,
+    choose_pool,
 )
 from repro.core.policies import (
     SingleSlotKernel,
@@ -75,11 +106,17 @@ __all__ = [
     "Uniform", "prob_A_le_S", "adaptive_admission_control",
     "adaptive_admission_control_batched", "mm1n_pi", "theorem2_cost",
     "theorem2_delta_max", "theorem5_cost", "theorem5_delta",
-    "cost_lower_bound", "pi0_from_cost", "theorem1_cost", "EngineState",
-    "PolicyKernel", "WindowStats", "run_sim", "run_sweep", "summarize",
-    "SingleSlotKernel", "SingleSlotPolicy", "ThreePhaseKernel",
-    "ThreePhasePolicy", "three_phase_admit_prob", "run_queue_sim",
-    "run_single_slot_sim", "DeterministicWait", "ExponentialWait",
-    "InfiniteWait", "TwoPointWait", "laplace_target",
-    "optimal_deterministic", "optimal_exp_rate", "optimal_two_point",
+    "cost_lower_bound", "market_cost_lower_bound", "pi0_from_cost",
+    "theorem1_cost", "theorem1_market_cost", "EngineState", "MarketState",
+    "MarketWindowStats", "PolicyKernel", "WindowStats", "run_market_sim",
+    "run_market_sweep", "run_sim", "run_sweep", "summarize",
+    "summarize_market", "knapsack_lp", "market_knapsack_lp", "waittime_lp",
+    "MarketPolicyKernel", "NoticeAwareKernel", "PoolChoiceKernel",
+    "PoolState", "SpotMarket", "SpotPool", "as_market",
+    "checkpoint_within_notice", "choose_pool", "SingleSlotKernel",
+    "SingleSlotPolicy", "ThreePhaseKernel", "ThreePhasePolicy",
+    "three_phase_admit_prob", "run_queue_sim", "run_single_slot_sim",
+    "DeterministicWait", "ExponentialWait", "InfiniteWait", "TwoPointWait",
+    "laplace_target", "optimal_deterministic", "optimal_exp_rate",
+    "optimal_two_point",
 ]

@@ -1,4 +1,4 @@
-"""Algorithm 1 — Adaptive Admission Control — on the sweep engine.
+"""Algorithm 1 — Adaptive Admission Control — on the market sweep engine.
 
 The learner runs the Theorem-4 three-phase policy at the current knob ``r``,
 measures the empirical average delay d(r) over a window of events, and takes
@@ -8,12 +8,13 @@ a projected gradient step on the slack penalty L(r) = ½(d(r) − δ)²:
 
 exactly as the paper's Algorithm 1 (the sign of ∂d/∂r is absorbed into η > 0
 since d(r) is increasing in r).  The event window is the engine's
-:func:`repro.core.engine.run_window` with the shared
-:class:`repro.core.policies.ThreePhaseKernel` — the same kernel the offline
-sweeps and the cluster orchestrator use — and the outer window loop is a
-``lax.scan``, so the full learning trajectory is one XLA program:
-deterministic given a PRNG key and cheap enough to run *on-device* next to a
-training loop.
+:func:`repro.core.engine.run_market_window`: since PR 2 the learner runs on
+the **spot-market subsystem** (heterogeneous pools, preemption with notice —
+:mod:`repro.core.market`), so fleets can be trained against revocation-prone
+multi-pool markets on-device.  A plain :class:`~repro.core.arrivals
+.ArrivalProcess` is wrapped as the degenerate one-pool market, which
+reproduces the PR-1 engine bit-for-bit — pre-market learner trajectories
+are unchanged.
 
 :func:`adaptive_admission_control_batched` vmaps the whole learner over
 arrays of (δ, η, η-decay, r₀, r_max, k): a fleet of learners — e.g. one per
@@ -23,7 +24,9 @@ jitted scan instead of one Python call per learner.
 Beyond-paper (recorded in EXPERIMENTS.md): an optional 1/√n step-size decay
 (``eta_decay``) suppresses the stationary oscillation of constant-η SGD; and
 the window statistic includes immediate on-demand dispatches (delay 0)
-exactly as the paper's d(r) does.
+exactly as the paper's d(r) does.  Under preemption the window delay d(r)
+averages *legs* (a checkpointed job contributes its pre-revocation wait as
+one leg) — the same accounting as the host orchestrator.
 """
 from __future__ import annotations
 
@@ -35,10 +38,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
-from repro.core.engine import init_engine_state, run_window
+from repro.core.engine import init_market_state, run_market_window
+from repro.core.market import NoticeAwareKernel, SpotMarket, as_market
 from repro.core.policies import ThreePhaseKernel
 
 _THREE_PHASE = ThreePhaseKernel()
+
+
+def _default_kernel(market: SpotMarket):
+    """Legacy kernel on the degenerate market (bit-for-bit with PR 1);
+    notice-aware three-phase everywhere else."""
+    if market.n_pools == 1 and not market.preemptible:
+        return _THREE_PHASE
+    return NoticeAwareKernel()
 
 
 class AdaptiveTrace(NamedTuple):
@@ -55,17 +67,22 @@ class AdaptiveTrace(NamedTuple):
     time: jax.Array
     spot_arrivals: jax.Array
     spot_found_empty: jax.Array
+    preemptions: jax.Array
+    resumed: jax.Array
 
 
-def _adaptive_core(job, spot, rmax, window_events, n_windows, k_cost, delta,
-                   eta, eta_decay, r0, r_max, key):
+def _adaptive_core(job, market, kernel, rmax, window_events, n_windows,
+                   k_cost, delta, eta, eta_decay, r0, r_max, key):
     """One learner's full trajectory (vmap-able over every traced arg)."""
-    state0 = init_engine_state(key, job, spot, rmax)
+    mp = market.params()
+    preempt_on = market.preemptible
+    state0 = init_market_state(key, job, market, rmax, mp, preempt_on)
 
     def outer(sc, idx):
         state, r = sc
-        state, s = run_window(job, spot, _THREE_PHASE, rmax, state,
-                              {"r": r}, k_cost, window_events)
+        state, s = run_market_window(job, market, kernel, rmax, preempt_on,
+                                     state, {"r": r}, mp, k_cost,
+                                     window_events)
         completed = jnp.maximum(s.jobs_completed, 1).astype(jnp.float32)
         d = s.delay_sum / completed
         c = s.cost_sum / completed
@@ -83,6 +100,8 @@ def _adaptive_core(job, spot, rmax, window_events, n_windows, k_cost, delta,
             time=s.time_elapsed,
             spot_arrivals=s.spot_arrivals,
             spot_found_empty=s.spot_found_empty,
+            preemptions=jnp.sum(s.pool_preempted),
+            resumed=s.resumed,
         )
         return (state, r_new), trace
 
@@ -94,22 +113,26 @@ def _adaptive_core(job, spot, rmax, window_events, n_windows, k_cost, delta,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("job", "spot", "rmax", "window_events", "n_windows"),
+    static_argnames=("job", "market", "kernel", "rmax", "window_events",
+                     "n_windows"),
 )
-def _adaptive_jit(job, spot, rmax, window_events, n_windows, k_cost, delta,
-                  eta, eta_decay, r0, r_max, key):
-    return _adaptive_core(job, spot, rmax, window_events, n_windows, k_cost,
-                          delta, eta, eta_decay, r0, r_max, key)
+def _adaptive_jit(job, market, kernel, rmax, window_events, n_windows,
+                  k_cost, delta, eta, eta_decay, r0, r_max, key):
+    return _adaptive_core(job, market, kernel, rmax, window_events,
+                          n_windows, k_cost, delta, eta, eta_decay, r0,
+                          r_max, key)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("job", "spot", "rmax", "window_events", "n_windows"),
+    static_argnames=("job", "market", "kernel", "rmax", "window_events",
+                     "n_windows"),
 )
-def _adaptive_batched_jit(job, spot, rmax, window_events, n_windows, k_cost,
-                          delta, eta, eta_decay, r0, r_max, keys):
-    one = functools.partial(_adaptive_core, job, spot, rmax, window_events,
-                            n_windows)
+def _adaptive_batched_jit(job, market, kernel, rmax, window_events,
+                          n_windows, k_cost, delta, eta, eta_decay, r0,
+                          r_max, keys):
+    one = functools.partial(_adaptive_core, job, market, kernel, rmax,
+                            window_events, n_windows)
     return jax.vmap(one)(k_cost, delta, eta, eta_decay, r0, r_max, keys)
 
 
@@ -139,6 +162,8 @@ def _assemble(tr, r_final) -> dict:
         "final_pi0": _last(pi0_spot),
         "jobs_total": _reduce(np.sum, t.jobs),
         "time_total": _reduce(np.sum, t.time),
+        "preemptions_total": _reduce(np.sum, t.preemptions),
+        "resumed_total": _reduce(np.sum, t.resumed),
     }
 
 
@@ -154,7 +179,7 @@ def _reduce(fn, x: np.ndarray):
 
 def adaptive_admission_control(
     job: ArrivalProcess,
-    spot: ArrivalProcess,
+    spot,
     *,
     k: float = 10.0,
     delta: float,
@@ -166,25 +191,35 @@ def adaptive_admission_control(
     n_windows: int = 400,
     rmax_slots: int = 64,
     key: jax.Array,
+    kernel=None,
 ) -> dict:
     """Run Algorithm 1; return the trajectory and running averages (float64).
+
+    ``spot`` may be a plain :class:`ArrivalProcess` (degenerate one-pool
+    market — PR-1 behaviour, bit-for-bit) or a :class:`SpotMarket` to train
+    the learner against heterogeneous pools and preemption-with-notice.
+    ``kernel`` overrides the policy kernel (default: shared three-phase on a
+    degenerate market, :class:`NoticeAwareKernel` otherwise); it must read
+    the knob from ``params["r"]``.
 
     Returns a dict with per-window arrays: ``r`` (knob), ``window_delay``,
     ``window_cost``, and running averages ``running_cost`` / ``running_delay``
     (cumulative, matching the paper's C(r(n)) and d(r(n)) plots), plus the
     final knob ``r_star`` and Theorem-1 cross-check fields.
     """
+    market = as_market(spot)
+    kernel = _default_kernel(market) if kernel is None else kernel
     r_final, tr = _adaptive_jit(
-        job, spot, rmax_slots, window_events, n_windows, jnp.float32(k),
-        jnp.float32(delta), jnp.float32(eta), jnp.float32(eta_decay),
-        jnp.float32(r0), jnp.float32(r_max), key,
+        job, market, kernel, rmax_slots, window_events, n_windows,
+        jnp.float32(k), jnp.float32(delta), jnp.float32(eta),
+        jnp.float32(eta_decay), jnp.float32(r0), jnp.float32(r_max), key,
     )
     return _assemble(tr, r_final)
 
 
 def adaptive_admission_control_batched(
     job: ArrivalProcess,
-    spot: ArrivalProcess,
+    spot,
     *,
     k: float = 10.0,
     delta,
@@ -197,6 +232,7 @@ def adaptive_admission_control_batched(
     rmax_slots: int = 64,
     key: jax.Array,
     independent_keys: bool = False,
+    kernel=None,
 ) -> dict:
     """Run a fleet of Algorithm-1 learners in ONE jitted scan.
 
@@ -207,11 +243,16 @@ def adaptive_admission_control_batched(
     default every learner sees the same event stream (common random numbers,
     so trajectories differ only through the policy); pass
     ``independent_keys=True`` to fold a per-learner offset into the key.
+    ``spot`` may be a :class:`SpotMarket` (see
+    :func:`adaptive_admission_control`) to train the fleet on a preemptible
+    multi-pool market.
 
     Returns the same dict as :func:`adaptive_admission_control` with a
     leading batch axis on every array (and on the ``final_*``/``r_star``
     scalars).
     """
+    market = as_market(spot)
+    kernel = _default_kernel(market) if kernel is None else kernel
     args = [jnp.asarray(x, jnp.float32)
             for x in (k, delta, eta, eta_decay, r0, r_max)]
     batch = jnp.broadcast_shapes(*(a.shape for a in args), (1,))
@@ -220,7 +261,8 @@ def adaptive_admission_control_batched(
     keys = (jax.random.split(key, n) if independent_keys
             else jnp.repeat(key[None], n, axis=0))
     r_final, tr = _adaptive_batched_jit(
-        job, spot, rmax_slots, window_events, n_windows, *args, keys,
+        job, market, kernel, rmax_slots, window_events, n_windows, *args,
+        keys,
     )
     # restore multi-dimensional batch shapes (e.g. a delta × r0 meshgrid)
     r_final = r_final.reshape(batch)

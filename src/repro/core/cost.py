@@ -34,3 +34,42 @@ def spot_utilization_bound(lam: float, mu: float, delta: float) -> float:
 def cost_lower_bound(k: float, lam: float, mu: float, delta: float) -> float:
     """Policy-independent lower bound on E[C] from Theorem 1 + the LP bound."""
     return k - (k - 1.0) * (mu / lam) * spot_utilization_bound(lam, mu, delta)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous-pool market generalization (see repro.core.market)
+# ---------------------------------------------------------------------------
+
+
+def theorem1_market_cost(k: float, lam: float, rates, prices, utils) -> float:
+    """Market Theorem 1: E[C] from per-pool slot utilizations.
+
+    With pool slot rates μ_p, prices c_p, and utilizations
+    u_p = P(a pool-p slot finds an eligible job) — the per-pool 1 − π₀ the
+    engine reports as ``pool_utilization`` — the fraction of jobs served by
+    pool p is (μ_p/λ)·u_p, so
+
+        E[C] = k − Σ_p (k − c_p) (μ_p/λ) u_p.
+
+    Preemption-free identity: revoked legs pay extra spot cost on top (the
+    engine's ``spot_cost`` tracks it), so under preemption this is the cost
+    of the *completed-leg* flow only.  One unit-price pool recovers
+    :func:`theorem1_cost` exactly.
+    """
+    import numpy as np
+
+    rates = np.asarray(rates, np.float64)
+    prices = np.asarray(prices, np.float64)
+    utils = np.asarray(utils, np.float64)
+    return float(k - np.sum((k - prices) * rates / lam * utils))
+
+
+def market_cost_lower_bound(k: float, lam: float, delta: float, market, *,
+                            include_preemption: bool = False) -> float:
+    """Policy-independent market bound: Theorem 1 + the multi-pool LP
+    (:func:`repro.core.lp.market_knapsack_lp`)."""
+    from repro.core.lp import market_knapsack_lp
+
+    return market_knapsack_lp(k, lam, delta, market,
+                              include_preemption=include_preemption)[
+                                  "objective"]

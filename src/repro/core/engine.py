@@ -66,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
+from repro.core.market import PoolState, SpotMarket, as_market
 
 INF = jnp.float32(3e38)
 _ORDER_MAX = jnp.int32(2**31 - 1)
@@ -215,21 +216,49 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
     return new_carry, new_stats
 
 
+def _scan_window(step, zeros, state, n_events: int):
+    """Scan ``step`` for ``n_events`` events from fresh window accumulators.
+
+    Generic over the (state, stats) pytree pair — the PR-1 single-spot loop
+    and the market loop share this scanner (and :func:`_scan_chunked`), so
+    the chunked float32-window numerics are identical across both paths.
+    """
+
+    def body(sc, _):
+        c, s = step(sc[0], sc[1])
+        return (c, s), None
+
+    (state, stats), _ = jax.lax.scan(body, (state, zeros), None,
+                                     length=n_events)
+    return state, stats
+
+
+def _scan_chunked(step, zeros, state, n_events: int, chunk_events: int):
+    """Run exactly ``n_events`` events as stacked float32 chunk windows."""
+    n_chunks, rem = divmod(n_events, chunk_events)
+
+    def chunk(c, _):
+        return _scan_window(step, zeros, c, chunk_events)
+
+    state, stats = jax.lax.scan(chunk, state, None, length=n_chunks)
+    if rem:
+        state, tail = _scan_window(step, zeros, state, rem)
+        stats = jax.tree.map(
+            lambda s, t: jnp.concatenate([s, t[None]]), stats,
+            jax.tree.map(jnp.asarray, tail),
+        )
+    return state, stats
+
+
 def run_window(job: ArrivalProcess, spot: ArrivalProcess,
                kernel: PolicyKernel, rmax: int, state: EngineState, params,
                k_cost: jax.Array,
                n_events: int) -> tuple[EngineState, WindowStats]:
     """Run ``n_events`` merged events; return state + one window of sums."""
-
-    def body(sc, _):
-        c, s = sc
-        c, s = _engine_event(job, spot, kernel, rmax, c, s, params, k_cost)
-        return (c, s), None
-
-    (state, stats), _ = jax.lax.scan(
-        body, (state, WindowStats.zeros()), None, length=n_events
-    )
-    return state, stats
+    step = functools.partial(_engine_event, job, spot, kernel, rmax,
+                             params=params, k_cost=k_cost)
+    return _scan_window(lambda c, s: step(c, s), WindowStats.zeros(), state,
+                        n_events)
 
 
 def run_chunked(job: ArrivalProcess, spot: ArrivalProcess,
@@ -241,22 +270,10 @@ def run_chunked(job: ArrivalProcess, spot: ArrivalProcess,
     Returns stats with a leading chunk axis; :func:`summarize` reduces it in
     float64 so long horizons do not hit float32 sum saturation.
     """
-    n_chunks, rem = divmod(n_events, chunk_events)
-
-    def chunk(c, _):
-        c, s = run_window(job, spot, kernel, rmax, c, params, k_cost,
-                          chunk_events)
-        return c, s
-
-    state, stats = jax.lax.scan(chunk, state, None, length=n_chunks)
-    if rem:
-        state, tail = run_window(job, spot, kernel, rmax, state, params,
-                                 k_cost, rem)
-        stats = jax.tree.map(
-            lambda s, t: jnp.concatenate([s, t[None]]), stats,
-            jax.tree.map(jnp.asarray, tail),
-        )
-    return state, stats
+    step = functools.partial(_engine_event, job, spot, kernel, rmax,
+                             params=params, k_cost=k_cost)
+    return _scan_chunked(lambda c, s: step(c, s), WindowStats.zeros(), state,
+                         n_events, chunk_events)
 
 
 @functools.partial(
@@ -391,3 +408,530 @@ def run_sweep(
     out = summarize(stats)  # values shaped (grid_points, n_seeds)
     return {name: v.reshape(grid_shape + (n_seeds,)) for name, v in
             out.items()}
+
+
+# ===========================================================================
+# SpotMarket: P heterogeneous pools + preemption-with-notice
+# ===========================================================================
+#
+# The market event loop is the PR-1 loop with the scalar ``next_spot`` clock
+# widened to per-pool vectors ``next_spot``/``next_preempt`` (see
+# repro.core.market for the descriptors and model semantics).  Event-time
+# ties resolve spot > preempt > deadline > job; ties *between* pools resolve
+# by position (argmin), measure-zero for continuous samplers.
+#
+# With a degenerate market (1 pool, zero hazard, unit price) every branch
+# below reduces bitwise to the PR-1 expressions: the preemption machinery is
+# statically removed (4-way key split, untouched INF preempt clock), the
+# single-pool min/argmin are exact identities, and the extra stat terms add
+# literal +0.0 to non-negative float32 sums.  tests/test_core_market.py
+# freezes that contract against run_sim/run_sweep.
+
+
+class MarketWindowStats(NamedTuple):
+    """Per-window accumulators for the market loop.
+
+    The first ten fields mirror :class:`WindowStats` exactly (same order,
+    same accumulation semantics); the tail adds preemption and per-pool
+    counters.  Under preemption, completions count *legs* — a checkpointed
+    job contributes one completed leg at revocation and another when it
+    finally finishes, matching the host orchestrator's accounting.
+    """
+
+    jobs_arrived: jax.Array
+    jobs_completed: jax.Array
+    spot_served: jax.Array
+    ondemand: jax.Array
+    cost_sum: jax.Array
+    delay_sum: jax.Array
+    time_elapsed: jax.Array
+    empty_time: jax.Array
+    spot_arrivals: jax.Array
+    spot_found_empty: jax.Array
+    resumed: jax.Array  # i32: preempted legs that checkpointed + re-queued
+    spot_cost: jax.Array  # f32: cost paid to spot pools (incl. partial legs)
+    pool_served: jax.Array  # (P,) i32 completions per pool
+    pool_spot_arrivals: jax.Array  # (P,) i32 slot arrivals per pool
+    pool_preempted: jax.Array  # (P,) i32 preemption hits per pool
+
+    @staticmethod
+    def zeros(n_pools: int) -> "MarketWindowStats":
+        z = jnp.zeros((), jnp.float32)
+        zi = jnp.zeros((), jnp.int32)
+        zp = jnp.zeros((n_pools,), jnp.int32)
+        return MarketWindowStats(zi, zi, zi, zi, z, z, z, z, zi, zi,
+                                 zi, z, zp, zp, zp)
+
+
+_POOL_FIELDS = frozenset({"pool_served", "pool_spot_arrivals",
+                          "pool_preempted"})
+
+
+class MarketState(NamedTuple):
+    key: jax.Array
+    next_job: jax.Array  # time until next job arrival
+    next_spot: jax.Array  # (P,) per-pool spot-slot clocks
+    next_preempt: jax.Array  # (P,) per-pool preemption clocks (INF = never)
+    ages: jax.Array  # (rmax,)
+    budgets: jax.Array  # (rmax,)
+    occ: jax.Array  # (rmax,) bool
+    pool: jax.Array  # (rmax,) int32 pool tag of each queued job
+    order: jax.Array  # (rmax,) int32 join sequence number
+    next_seq: jax.Array
+    qlen: jax.Array
+
+
+def _pool_spot_keys(market: SpotMarket, k_spot: jax.Array) -> list:
+    """Per-pool sampling keys, label-independent via fold_in(pool.tag).
+
+    The 1-pool market uses ``k_spot`` directly — the PR-1 key layout — so
+    the degenerate engine is bit-for-bit the PR-1 engine.
+    """
+    if market.n_pools == 1:
+        return [k_spot]
+    return [jax.random.fold_in(k_spot, p.tag) for p in market.pools]
+
+
+def _sample_spot_clocks(market: SpotMarket, k_spot: jax.Array,
+                        mp: dict) -> jax.Array:
+    samples = [p.arrival.sample(k)
+               for p, k in zip(market.pools, _pool_spot_keys(market, k_spot))]
+    return jnp.stack(samples) * mp["spot_scale"]
+
+
+def _sample_preempt_clocks(market: SpotMarket, k_pre: jax.Array,
+                           mp: dict) -> jax.Array:
+    """Exponential(h_p) revocation clocks; h_p = 0 never fires (INF)."""
+    u = jnp.stack([
+        jax.random.exponential(jax.random.fold_in(k_pre, p.tag),
+                               dtype=jnp.float32)
+        for p in market.pools
+    ])
+    h = mp["hazard"]
+    return jnp.where(h > 0.0, u / jnp.maximum(h, jnp.float32(1e-30)), INF)
+
+
+def init_market_state(key: jax.Array, job: ArrivalProcess,
+                      market: SpotMarket, rmax: int, mp: dict,
+                      preempt_on: bool) -> MarketState:
+    kj, ks, kc = jax.random.split(key, 3)
+    n = market.n_pools
+    if preempt_on:
+        next_preempt = _sample_preempt_clocks(
+            market, jax.random.fold_in(ks, 2**31 - 1), mp)
+    else:
+        next_preempt = jnp.full((n,), INF, jnp.float32)
+    return MarketState(
+        key=kc,
+        next_job=job.sample(kj),
+        next_spot=_sample_spot_clocks(market, ks, mp),
+        next_preempt=next_preempt,
+        ages=jnp.zeros((rmax,), jnp.float32),
+        budgets=jnp.full((rmax,), INF, jnp.float32),
+        occ=jnp.zeros((rmax,), jnp.bool_),
+        pool=jnp.zeros((rmax,), jnp.int32),
+        order=jnp.zeros((rmax,), jnp.int32),
+        next_seq=jnp.zeros((), jnp.int32),
+        qlen=jnp.zeros((), jnp.int32),
+    )
+
+
+def _kernel_admit(kernel, params, qlen, pool_state, key):
+    """Route market-aware kernels to admit_market; legacy kernels to pool 0
+    with the PR-1 key layout (degenerate bit-for-bit)."""
+    if hasattr(kernel, "admit_market"):
+        admit, budget, pool = kernel.admit_market(params, qlen, pool_state,
+                                                  key)
+        return admit, budget, jnp.asarray(pool, jnp.int32)
+    admit, budget = kernel.admit(params, qlen, key)
+    return admit, budget, jnp.zeros((), jnp.int32)
+
+
+def _kernel_on_preempt(kernel, params, age, notice, qlen, key):
+    if hasattr(kernel, "on_preempt"):
+        return kernel.on_preempt(params, age, notice, qlen, key)
+    return jnp.zeros((), jnp.bool_)  # legacy kernels defect on revocation
+
+
+def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
+                  preempt_on: bool, carry: MarketState,
+                  stats: MarketWindowStats, params, mp: dict,
+                  k_cost: jax.Array) -> tuple[MarketState, MarketWindowStats]:
+    """One merged event: job arrival / pool spot slot / pool preemption /
+    wait deadline.  Same dense one-hot-select style as :func:`_engine_event`
+    (see the note there on scatter vs select under vmap)."""
+    n_pools = market.n_pools
+    if preempt_on:
+        key, k_job, k_spot, k_pol, k_pre = jax.random.split(carry.key, 5)
+    else:
+        key, k_job, k_spot, k_pol = jax.random.split(carry.key, 4)
+    iota = jax.lax.iota(jnp.int32, rmax)
+    iota_p = jax.lax.iota(jnp.int32, n_pools)
+
+    budgets_masked = jnp.where(carry.occ, carry.budgets, INF)
+    deadline = jnp.min(budgets_masked)
+    defect_slot = jnp.argmin(budgets_masked)
+
+    min_spot = jnp.min(carry.next_spot)
+    spot_pool = jnp.argmin(carry.next_spot).astype(jnp.int32)
+    if preempt_on:
+        min_pre = jnp.min(carry.next_preempt)
+        pre_pool = jnp.argmin(carry.next_preempt).astype(jnp.int32)
+        dt = jnp.minimum(jnp.minimum(carry.next_job, min_spot),
+                         jnp.minimum(deadline, min_pre))
+        is_spot = min_spot <= jnp.minimum(carry.next_job,
+                                          jnp.minimum(deadline, min_pre))
+        is_pre = (~is_spot) & (min_pre <= jnp.minimum(carry.next_job,
+                                                      deadline))
+        is_deadline = (~is_spot) & (~is_pre) & (deadline <= carry.next_job)
+        is_job = (~is_spot) & (~is_pre) & (~is_deadline)
+    else:
+        pre_pool = jnp.zeros((), jnp.int32)
+        dt = jnp.minimum(jnp.minimum(carry.next_job, min_spot), deadline)
+        is_spot = min_spot <= jnp.minimum(carry.next_job, deadline)
+        is_pre = jnp.zeros((), jnp.bool_)
+        is_deadline = (~is_spot) & (deadline <= carry.next_job)
+        is_job = (~is_spot) & (~is_deadline)
+
+    ages = carry.ages + dt
+    budgets = jnp.where(carry.occ, carry.budgets - dt, INF)
+
+    # ---- job arrival: ask the policy kernel (admission + pool choice) ----
+    qlen_pool = jnp.sum(
+        (carry.occ[:, None] & (carry.pool[:, None] == iota_p[None, :]))
+        .astype(jnp.int32), axis=0)
+    rates = jnp.asarray(market.rates(), jnp.float32) / mp["spot_scale"]
+    pool_state = PoolState(price=mp["price"], hazard=mp["hazard"],
+                           notice=mp["notice"], rate=rates,
+                           qlen_pool=qlen_pool)
+    admit_raw, budget, pool_choice = _kernel_admit(kernel, params,
+                                                   carry.qlen, pool_state,
+                                                   k_pol)
+    admit = is_job & admit_raw & (carry.qlen < rmax)
+    od_now = is_job & (~admit)
+    join_slot = jnp.argmin(carry.occ.astype(jnp.int32))
+
+    # ---- pool spot slot: serve the FIFO-oldest job tagged to that pool ----
+    eligible_s = carry.occ & (carry.pool == spot_pool)
+    serve_slot = jnp.argmin(jnp.where(eligible_s, carry.order, _ORDER_MAX))
+    has_elig = jnp.any(eligible_s)
+    served = is_spot & has_elig
+    wait_served = jnp.sum(jnp.where(iota == serve_slot, ages, 0.0))
+    price_s = mp["price"][spot_pool]
+
+    # ---- pool preemption: revoke the FIFO-oldest job on that pool ----
+    if preempt_on:
+        eligible_p = carry.occ & (carry.pool == pre_pool)
+        pre_slot = jnp.argmin(jnp.where(eligible_p, carry.order, _ORDER_MAX))
+        pre_hit = is_pre & jnp.any(eligible_p)
+        age_pre = jnp.sum(jnp.where(iota == pre_slot, ages, 0.0))
+        # re-admission sees the queue WITHOUT the revoked job (the host
+        # orchestrator pops it before consulting the admission law)
+        qlen_wo = jnp.maximum(carry.qlen - 1, 0)
+        resume_raw = _kernel_on_preempt(kernel, params, age_pre,
+                                        mp["notice"][pre_pool], qlen_wo,
+                                        k_pre)
+        resume = pre_hit & resume_raw
+        defect_pre = pre_hit & (~resume)
+        price_p = mp["price"][pre_pool]
+    else:
+        pre_slot = jnp.zeros((), jnp.int32)
+        pre_hit = jnp.zeros((), jnp.bool_)
+        age_pre = jnp.zeros((), jnp.float32)
+        resume = jnp.zeros((), jnp.bool_)
+        defect_pre = jnp.zeros((), jnp.bool_)
+        price_p = jnp.zeros((), jnp.float32)
+
+    # ---- deadline: the minimal-budget job defects to on-demand ----
+    defected = is_deadline
+    age_defect = jnp.sum(jnp.where(iota == defect_slot, ages, 0.0))
+
+    leave = served | defected | defect_pre
+    leave_slot = jnp.where(served, serve_slot,
+                           jnp.where(defected, defect_slot, pre_slot))
+
+    join_mask = admit & (iota == join_slot)
+    leave_mask = leave & (iota == leave_slot)
+    resume_mask = resume & (iota == pre_slot)
+    ages = jnp.where(join_mask | resume_mask, 0.0, ages)
+    budgets = jnp.where(join_mask, budget,
+                        jnp.where(resume_mask, INF, budgets))
+    occ = (carry.occ | join_mask) & (~leave_mask)
+    pool = jnp.where(join_mask, pool_choice, carry.pool)
+    order = jnp.where(join_mask | resume_mask, carry.next_seq, carry.order)
+
+    fire_s = is_spot & (iota_p == spot_pool)
+    next_spot = jnp.where(fire_s, _sample_spot_clocks(market, k_spot, mp),
+                          carry.next_spot - dt)
+    if preempt_on:
+        fire_p = is_pre & (iota_p == pre_pool)
+        next_preempt = jnp.where(
+            fire_p, _sample_preempt_clocks(market, k_pre, mp),
+            carry.next_preempt - dt)
+    else:
+        next_preempt = carry.next_preempt
+
+    new_carry = MarketState(
+        key=key,
+        next_job=jnp.where(is_job, job.sample(k_job), carry.next_job - dt),
+        next_spot=next_spot,
+        next_preempt=next_preempt,
+        ages=ages,
+        budgets=budgets,
+        occ=occ,
+        pool=pool,
+        order=order,
+        next_seq=carry.next_seq + jnp.where(admit | resume, 1, 0),
+        qlen=carry.qlen + jnp.where(admit, 1, 0) - jnp.where(leave, 1, 0),
+    )
+    completed = od_now | served | defected | defect_pre | resume
+    new_stats = MarketWindowStats(
+        jobs_arrived=stats.jobs_arrived + is_job.astype(jnp.int32),
+        jobs_completed=stats.jobs_completed + completed.astype(jnp.int32),
+        spot_served=stats.spot_served + served.astype(jnp.int32),
+        ondemand=stats.ondemand
+        + (od_now | defected | defect_pre).astype(jnp.int32),
+        cost_sum=stats.cost_sum
+        + jnp.where(served, price_s, 0.0)
+        + jnp.where(od_now | defected | defect_pre, k_cost, 0.0)
+        + jnp.where(pre_hit, price_p, 0.0),
+        delay_sum=stats.delay_sum
+        + jnp.where(served, wait_served, 0.0)
+        + jnp.where(defected, age_defect, 0.0)
+        + jnp.where(pre_hit, age_pre, 0.0),
+        time_elapsed=stats.time_elapsed + dt,
+        empty_time=stats.empty_time + jnp.where(carry.qlen == 0, dt, 0.0),
+        spot_arrivals=stats.spot_arrivals + is_spot.astype(jnp.int32),
+        spot_found_empty=stats.spot_found_empty
+        + (is_spot & (~has_elig)).astype(jnp.int32),
+        resumed=stats.resumed + resume.astype(jnp.int32),
+        spot_cost=stats.spot_cost
+        + jnp.where(served, price_s, 0.0)
+        + jnp.where(pre_hit, price_p, 0.0),
+        pool_served=stats.pool_served
+        + (fire_s & served).astype(jnp.int32),
+        pool_spot_arrivals=stats.pool_spot_arrivals
+        + fire_s.astype(jnp.int32),
+        pool_preempted=stats.pool_preempted
+        + (pre_hit & (iota_p == pre_pool)).astype(jnp.int32),
+    )
+    return new_carry, new_stats
+
+
+def run_market_window(job: ArrivalProcess, market: SpotMarket, kernel,
+                      rmax: int, preempt_on: bool, state: MarketState,
+                      params, mp: dict, k_cost: jax.Array,
+                      n_events: int) -> tuple[MarketState, MarketWindowStats]:
+    """Run ``n_events`` merged market events; one window of float32 sums."""
+    step = functools.partial(_market_event, job, market, kernel, rmax,
+                             preempt_on, params=params, mp=mp, k_cost=k_cost)
+    return _scan_window(step, MarketWindowStats.zeros(market.n_pools), state,
+                        n_events)
+
+
+def run_market_chunked(job: ArrivalProcess, market: SpotMarket, kernel,
+                       rmax: int, preempt_on: bool, state: MarketState,
+                       params, mp: dict, k_cost: jax.Array, n_events: int,
+                       chunk_events: int
+                       ) -> tuple[MarketState, MarketWindowStats]:
+    step = functools.partial(_market_event, job, market, kernel, rmax,
+                             preempt_on, params=params, mp=mp, k_cost=k_cost)
+    return _scan_chunked(step, MarketWindowStats.zeros(market.n_pools),
+                         state, n_events, chunk_events)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("job", "market", "kernel", "rmax", "preempt_on",
+                     "n_events", "chunk_events", "burn_in"),
+)
+def _run_market_sim_jit(job, market, kernel, rmax, preempt_on, n_events,
+                        chunk_events, burn_in, params, mp, k_cost, key):
+    state = init_market_state(key, job, market, rmax, mp, preempt_on)
+    if burn_in:
+        state, _ = run_market_window(job, market, kernel, rmax, preempt_on,
+                                     state, params, mp, k_cost, burn_in)
+    return run_market_chunked(job, market, kernel, rmax, preempt_on, state,
+                              params, mp, k_cost, n_events, chunk_events)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("job", "market", "kernel", "rmax", "preempt_on",
+                     "n_events", "chunk_events", "burn_in"),
+)
+def _run_market_sweep_jit(job, market, kernel, rmax, preempt_on, n_events,
+                          chunk_events, burn_in, params, mp, k_cost, keys):
+    """(grid × pools-config × seeds) fleet as one nested-vmap XLA program."""
+
+    def one(p, m, kc, key):
+        state = init_market_state(key, job, market, rmax, m, preempt_on)
+        if burn_in:
+            state, _ = run_market_window(job, market, kernel, rmax,
+                                         preempt_on, state, p, m, kc,
+                                         burn_in)
+        _, stats = run_market_chunked(job, market, kernel, rmax, preempt_on,
+                                      state, p, m, kc, n_events,
+                                      chunk_events)
+        return stats
+
+    per_seeds = jax.vmap(one, in_axes=(None, None, None, 0))
+    return jax.vmap(per_seeds, in_axes=(0, 0, 0, None))(params, mp, k_cost,
+                                                        keys)
+
+
+def summarize_market(stats: MarketWindowStats) -> dict:
+    """Float64 chunk reduction + market-specific derived statistics.
+
+    Extends :func:`summarize`'s dict with preemption counters, spot spend,
+    and per-pool served/arrival/utilization arrays (trailing pool axis).
+    The chunk axis is the last axis for scalar accumulators and the
+    second-to-last for per-pool vectors.
+    """
+    n_common = len(WindowStats._fields)
+    out = summarize(WindowStats(*stats[:n_common]))
+
+    def _red(name):
+        x = getattr(stats, name)
+        axis = -2 if name in _POOL_FIELDS else -1
+        return np.asarray(x, np.float64).sum(axis=axis)
+
+    resumed = _red("resumed")
+    spot_cost = _red("spot_cost")
+    pool_served = _red("pool_served")
+    pool_arrivals = _red("pool_spot_arrivals")
+    pool_preempted = _red("pool_preempted")
+    # per-JOB statistics: jobs_completed counts *legs* under preemption (a
+    # checkpointed revocation closes one leg; the retry completes later),
+    # which is the right window statistic for Algorithm 1 but not the
+    # paper's E[C].  Jobs leave the system only via spot service or
+    # on-demand, so dividing the same cost/delay totals by final
+    # completions gives true per-job averages (identical when resumed = 0).
+    cost_sum = _red("cost_sum")
+    delay_sum = _red("delay_sum")
+    final = np.maximum(_red("spot_served") + _red("ondemand"), 1.0)
+    out.update({
+        "preemptions": pool_preempted.sum(axis=-1),
+        "resumed": resumed,
+        "spot_cost": spot_cost,
+        "avg_cost_job": cost_sum / final,
+        "avg_delay_job": delay_sum / final,
+        "pool_served": pool_served,
+        "pool_spot_arrivals": pool_arrivals,
+        "pool_preempted": pool_preempted,
+        "pool_utilization": pool_served / np.maximum(pool_arrivals, 1.0),
+    })
+    return out
+
+
+def _broadcast_market_params(market: SpotMarket, mp_overrides: dict,
+                             grid_shape: tuple) -> dict:
+    """Merge pools-config overrides into the market's traced params.
+
+    Each override broadcasts to ``grid_shape + (P,)``: scalars fill every
+    pool, ``(P,)`` vectors fix a config, ``grid_shape + (P,)`` arrays sweep
+    the pool configuration itself.
+    """
+    n = market.n_pools
+    mp = market.params()
+    for name, val in mp_overrides.items():
+        if val is None:
+            continue
+        v = jnp.asarray(val, jnp.float32)
+        if v.ndim == 0:
+            v = jnp.broadcast_to(v, (n,))
+        mp[name] = v
+    return {name: jnp.broadcast_to(v, grid_shape + (n,))
+            .reshape((-1, n)) for name, v in mp.items()}
+
+
+def run_market_sim(
+    job: ArrivalProcess,
+    market: SpotMarket,
+    kernel,
+    params=None,
+    *,
+    k: float = 10.0,
+    n_events: int,
+    key: jax.Array,
+    rmax: int = 64,
+    burn_in: int = 0,
+    chunk_events: int | None = None,
+) -> dict:
+    """Run one market policy at one parameter point; scalar long-run stats.
+
+    A degenerate market (:meth:`SpotMarket.is_degenerate`) with a legacy
+    kernel reproduces :func:`run_sim` bit-for-bit per seed.
+    """
+    market = as_market(market)
+    params = {} if params is None else params
+    mp = market.params()
+    chunk = n_events if chunk_events is None else min(chunk_events, n_events)
+    _, stats = _run_market_sim_jit(job, market, kernel, rmax,
+                                   market.preemptible, n_events, chunk,
+                                   burn_in, params, mp, jnp.float32(k), key)
+    return {name: (float(v) if np.ndim(v) == 0 else np.asarray(v))
+            for name, v in summarize_market(stats).items()}
+
+
+def run_market_sweep(
+    job: ArrivalProcess,
+    market: SpotMarket,
+    kernel,
+    params=None,
+    *,
+    k: float | np.ndarray | jax.Array = 10.0,
+    prices=None,
+    hazards=None,
+    notices=None,
+    spot_scales=None,
+    n_events: int,
+    key: jax.Array,
+    n_seeds: int = 1,
+    rmax: int = 64,
+    burn_in: int = 0,
+    chunk_events: int | None = 1 << 16,
+) -> dict:
+    """Run a (params × k × pools-config × seeds) grid as ONE jitted call.
+
+    ``params`` leaves and ``k`` broadcast to a common grid shape exactly as
+    in :func:`run_sweep`.  ``prices``/``hazards``/``notices``/``spot_scales``
+    optionally override the market's static pool configuration per grid
+    point: a scalar applies to every pool, a ``(P,)`` vector fixes one
+    config, and a ``grid_shape + (P,)`` array sweeps the pool configuration
+    inside the same compiled program (the pools-config axis of the grid).
+
+    Returns :func:`summarize_market`'s dict; scalar statistics are shaped
+    ``grid_shape + (n_seeds,)`` and per-pool statistics
+    ``grid_shape + (n_seeds, P)``.
+    """
+    market = as_market(market)
+    n = market.n_pools
+    params = {} if params is None else params
+    params = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params)
+    k = jnp.asarray(k, jnp.float32)
+    overrides = {"price": prices, "hazard": hazards, "notice": notices,
+                 "spot_scale": spot_scales}
+    override_shapes = [jnp.asarray(v).shape[:-1]
+                       for v in overrides.values()
+                       if v is not None and jnp.asarray(v).ndim > 1]
+    grid_shape = jnp.broadcast_shapes(
+        k.shape, *(x.shape for x in jax.tree.leaves(params)),
+        *override_shapes,
+    )
+    flat = lambda x: jnp.broadcast_to(x, grid_shape).reshape(-1)
+    params_flat = jax.tree.map(flat, params)
+    k_flat = flat(k)
+    mp_flat = _broadcast_market_params(market, overrides, grid_shape)
+    preempt_on = market.preemptible or hazards is not None
+    keys = jax.random.split(key, n_seeds)
+    chunk = n_events if chunk_events is None else min(chunk_events, n_events)
+    stats = _run_market_sweep_jit(job, market, kernel, rmax, preempt_on,
+                                  n_events, chunk, burn_in, params_flat,
+                                  mp_flat, k_flat, keys)
+    out = summarize_market(stats)
+    per_pool = _POOL_FIELDS | {"pool_utilization"}
+    return {name: v.reshape(grid_shape
+                            + ((n_seeds, n) if name in per_pool
+                               else (n_seeds,)))
+            for name, v in out.items()}

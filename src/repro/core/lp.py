@@ -1,4 +1,4 @@
-"""LP oracles for the paper's two optimization problems.
+"""LP oracles for the paper's two optimization problems (+ market extension).
 
 1. :func:`knapsack_lp` — the abstract steady-state LP (eqs. 9-11):
        max Σ π_n   s.t.  Σ n·π_n ≤ λδ,  Σ π_n ≤ 1,  π ≥ 0.
@@ -12,6 +12,25 @@
    with H(w) = ∫₀ʷ G_μ.  An LP with two equality constraints has a basic
    optimal solution supported on ≤ 2 grid points, so exact enumeration over
    support pairs is the (scipy-free) solver.
+
+3. :func:`market_knapsack_lp` — the heterogeneous-pool generalization.
+   With pool utilizations u_p = P(a pool-p slot finds an eligible job)
+   (per-pool 1 − π₀), the market Theorem-1 identity gives
+
+       E[C] = k − Σ_p (k − c_p) (μ_p/λ) u_p,
+
+   the per-pool occupancy bound u_p = P(N_p ≥ 1) ≤ E[N_p] plus Little's
+   law Σ_p E[N_p] ≤ λδ gives Σ_p u_p ≤ λδ, and u_p ≤ 1.  Relaxing the
+   shared-queue coupling (a relaxation only loosens a lower bound) leaves a
+   fractional knapsack,
+
+       max Σ_p s_p u_p,  s_p = (k − c_p)(μ_p/λ),  Σ u_p ≤ λδ,  0 ≤ u_p ≤ 1,
+
+   whose greedy best-savings-first fill is exactly optimal.  With one unit
+   pool this is the paper's min(1, λδ) bound.  ``include_preemption``
+   prices in revocation: a pool with hazard h_p completes a leg with
+   probability μ_p/(μ_p+h_p), so each completion pays for (μ_p+h_p)/μ_p
+   legs — effective price c_p (1 + h_p/μ_p).
 """
 from __future__ import annotations
 
@@ -43,6 +62,41 @@ def knapsack_lp(lam: float, delta: float, n_max: int = 64) -> dict:
         "objective": greedy_obj,
         "analytic_objective": analytic_obj,
         "support": np.nonzero(pis)[0].tolist(),
+    }
+
+
+def market_knapsack_lp(k: float, lam: float, delta: float, market, *,
+                       include_preemption: bool = False) -> dict:
+    """Greedy-optimal fractional knapsack over heterogeneous spot pools.
+
+    ``market`` is any object with ``rates()``/``prices()``/``hazards()``
+    (a :class:`repro.core.market.SpotMarket`).  Returns per-pool
+    utilizations ``u`` (bound on per-pool 1−π₀), job fractions ``sigma``
+    (= (μ_p/λ)·u_p), the implied cost lower bound ``objective``, the fill
+    order, and the effective prices used.
+    """
+    rates = np.asarray(market.rates(), np.float64)
+    prices = np.asarray(market.prices(), np.float64)
+    hazards = np.asarray(market.hazards(), np.float64)
+    eff = prices * (1.0 + hazards / rates) if include_preemption else prices
+    savings = (k - eff) * rates / lam  # objective coefficient of u_p
+    budget = lam * delta
+    u = np.zeros_like(rates)
+    order = np.argsort(-savings, kind="stable")
+    support = []
+    for p in order:
+        if savings[p] <= 0.0 or budget <= 1e-15:
+            break  # a pool pricier than on-demand is never worth filling
+        u[p] = min(1.0, budget)
+        budget -= u[p]
+        support.append(int(p))
+    sigma = rates / lam * u
+    return {
+        "u": u,
+        "sigma": sigma,
+        "objective": float(k - np.sum(savings * u)),
+        "support": support,
+        "effective_prices": eff,
     }
 
 

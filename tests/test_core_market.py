@@ -1,0 +1,448 @@
+"""Spot-market subsystem tests.
+
+The acceptance contract of the market engine (repro.core.market +
+repro.core.engine's market loop):
+
+  * a **degenerate** market (1 pool, zero hazard, unit price) with a legacy
+    kernel reproduces the PR-1 engine **bit-for-bit** per seed — run_sim /
+    run_sweep and run_market_sim / run_market_sweep are indistinguishable;
+  * merged per-pool clocks preserve the event ordering and tie rules
+    (spot > preempt > deadline > job; pools tie by position) — property
+    test against a host-side float32 reference merge;
+  * π₀ and the cost accounting are exactly invariant under pool
+    *relabeling* (permuting pools with their tags) — per-pool PRNG streams
+    are keyed by pool tag, not position;
+  * preemption-with-notice: partial legs are paid, checkpoint-within-notice
+    re-queues (leg accounting), defects go on-demand — cost conservation
+    identities hold to float32 accumulation error;
+  * the multi-pool knapsack LP reduces to the paper's min(1, λδ) bound for
+    one unit-price pool and respects its caps.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare interpreter: deterministic fallback (see
+    from _propcheck import given, settings, st  # requirements-dev.txt)
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    Deterministic,
+    Exponential,
+    Gamma,
+    NoticeAwareKernel,
+    PoolChoiceKernel,
+    SingleSlotKernel,
+    SpotMarket,
+    SpotPool,
+    ThreePhaseKernel,
+    Uniform,
+    adaptive_admission_control_batched,
+    checkpoint_within_notice,
+    cost_lower_bound,
+    market_cost_lower_bound,
+    market_knapsack_lp,
+    run_market_sim,
+    run_market_sweep,
+    run_sim,
+    run_sweep,
+    theorem1_market_cost,
+)
+from repro.core.waittime import DeterministicWait
+
+LAM, MU, K = 1 / 12, 1 / 24, 10.0
+
+
+def _hetero_market(hazard_scale: float = 1.0) -> SpotMarket:
+    return SpotMarket(pools=(
+        SpotPool(Exponential(1 / 30.0), price=0.5, hazard=0.02 * hazard_scale,
+                 notice=0.5),
+        SpotPool(Exponential(1 / 40.0), price=0.3, hazard=0.05 * hazard_scale,
+                 notice=0.01),
+        SpotPool(Exponential(1 / 60.0), price=0.2, hazard=0.0),
+        SpotPool(Exponential(1 / 90.0), price=0.1, hazard=0.10 * hazard_scale,
+                 notice=2.0),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# Degenerate market == PR-1 engine, bit for bit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "job,spot,r",
+    [
+        (Exponential(LAM), Exponential(MU), 1.5),
+        (Gamma(12.0, 1.0), Exponential(MU), 3.0),
+        (Exponential(LAM), Uniform(0.0, 48.0), 2.5),
+        (Exponential(LAM), Exponential(MU), 0.0),
+    ],
+    ids=["mm", "gm", "mu", "r0"],
+)
+def test_degenerate_market_bit_for_bit(job, spot, r):
+    key = jax.random.key(7)
+    kernel = ThreePhaseKernel()
+    ref = run_sim(job, spot, kernel, {"r": jnp.float32(r)}, k=K,
+                  n_events=30_000, key=key)
+    new = run_market_sim(job, SpotMarket.single(spot), kernel,
+                         {"r": jnp.float32(r)}, k=K, n_events=30_000,
+                         key=key)
+    for name, v in ref.items():
+        assert new[name] == v, name  # identical to the last bit
+    assert new["preemptions"] == 0.0 and new["resumed"] == 0.0
+    assert new["spot_cost"] == new["spot_served"]  # unit price
+    # without preemption, per-leg and per-job statistics coincide
+    assert new["avg_cost_job"] == new["avg_cost"]
+    assert new["avg_delay_job"] == new["avg_delay"]
+
+
+def test_degenerate_market_bit_for_bit_single_slot_and_chunked():
+    job, spot = Exponential(LAM), Exponential(MU)
+    kernel = SingleSlotKernel(wait=DeterministicWait(5.0))
+    key = jax.random.key(3)
+    ref = run_sim(job, spot, kernel, {}, k=K, n_events=30_000, key=key,
+                  rmax=1, chunk_events=4096)
+    new = run_market_sim(job, SpotMarket.single(spot), kernel, {}, k=K,
+                         n_events=30_000, key=key, rmax=1,
+                         chunk_events=4096)
+    for name, v in ref.items():
+        assert new[name] == v, name
+
+
+def test_degenerate_market_sweep_bit_for_bit():
+    job, spot = Exponential(LAM), Exponential(MU)
+    rs = jnp.linspace(0.25, 4.0, 8)
+    key = jax.random.key(0)
+    ref = run_sweep(job, spot, ThreePhaseKernel(), {"r": rs}, k=K,
+                    n_events=10_000, key=key, n_seeds=3)
+    new = run_market_sweep(job, SpotMarket.single(spot), ThreePhaseKernel(),
+                           {"r": rs}, k=K, n_events=10_000, key=key,
+                           n_seeds=3)
+    for name, v in ref.items():
+        np.testing.assert_array_equal(np.asarray(new[name]), np.asarray(v),
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Property: merged pool clocks preserve event ordering and ties
+# ---------------------------------------------------------------------------
+def _host_merge_reference(job_period, pool_periods, n_events):
+    """Float32 host replay of the engine's clock merge (no queue effects:
+    r=0 rejects every job so deadlines never arm)."""
+    nj = np.float32(job_period)
+    ns = np.array(pool_periods, np.float32)
+    pool_counts = np.zeros(len(pool_periods), np.int64)
+    jobs = 0
+    for _ in range(n_events):
+        p = int(np.argmin(ns))  # pools tie by position
+        m = ns[p]
+        is_spot = m <= nj  # tie order: spot > job
+        dt = m if is_spot else nj
+        ns = (ns - dt).astype(np.float32)
+        nj = np.float32(nj - dt)
+        if is_spot:
+            pool_counts[p] += 1
+            ns[p] = np.float32(pool_periods[p])
+        else:
+            jobs += 1
+            nj = np.float32(job_period)
+    return jobs, pool_counts
+
+
+@settings(max_examples=10, deadline=None)
+@given(base=st.floats(min_value=0.7, max_value=3.1))
+def test_merged_pool_clocks_match_host_reference(base):
+    job_period = 1.9 * base
+    pool_periods = [base, 1.37 * base, 0.73 * base]
+    market = SpotMarket(pools=tuple(
+        SpotPool(Deterministic(p)) for p in pool_periods))
+    n_events = 2_000
+    res = run_market_sim(Deterministic(job_period), market,
+                         ThreePhaseKernel(),
+                         {"r": jnp.float32(0.0)},  # reject all: pure clocks
+                         k=K, n_events=n_events, key=jax.random.key(1))
+    jobs, pool_counts = _host_merge_reference(job_period, pool_periods,
+                                              n_events)
+    assert res["jobs_arrived"] == jobs
+    np.testing.assert_array_equal(np.asarray(res["pool_spot_arrivals"]),
+                                  pool_counts)
+
+
+def test_tie_order_spot_beats_job():
+    """Exact job/spot ties: the slot fires first, so the job admitted in
+    the same instant waits one full period — avg delay 1, not 0."""
+    market = SpotMarket.single(Deterministic(1.0))
+    res = run_market_sim(Deterministic(1.0), market, ThreePhaseKernel(),
+                         {"r": jnp.float32(4.0)}, k=K, n_events=4_000,
+                         key=jax.random.key(2))
+    np.testing.assert_allclose(res["avg_delay"], 1.0, rtol=1e-5)
+    # the very first slot (t=1) fires into an empty queue; every later slot
+    # serves the job admitted in the same instant one period earlier
+    slots = np.asarray(res["pool_spot_arrivals"]).sum()
+    np.testing.assert_allclose(res["pi0_spot"] * slots, 1.0, rtol=1e-9)
+
+
+def test_tie_between_pools_resolves_by_position():
+    market = SpotMarket(pools=(SpotPool(Deterministic(1.0)),
+                               SpotPool(Deterministic(1.0))))
+    res = run_market_sim(Deterministic(10.0), market, ThreePhaseKernel(),
+                         {"r": jnp.float32(0.0)}, k=K, n_events=1_000,
+                         key=jax.random.key(3))
+    counts = np.asarray(res["pool_spot_arrivals"])
+    # both fire every period (the tied pool fires on a dt=0 follow-up
+    # event), alternating pool 0 first
+    assert abs(counts[0] - counts[1]) <= 1
+    assert counts.sum() + res["jobs_arrived"] == 1_000
+
+
+# ---------------------------------------------------------------------------
+# Property: π₀ / cost accounting exactly invariant under pool relabeling
+# ---------------------------------------------------------------------------
+_SCALAR_INVARIANTS = ("avg_cost", "avg_delay", "pi0_time", "pi0_spot",
+                      "spot_utilization", "jobs_arrived", "spot_served",
+                      "ondemand", "preemptions", "resumed", "spot_cost",
+                      "time")
+
+
+@settings(max_examples=6, deadline=None)
+@given(perm=st.sampled_from([(1, 0, 2, 3), (3, 2, 1, 0), (2, 3, 0, 1),
+                             (1, 2, 3, 0)]),
+       r=st.floats(min_value=0.5, max_value=4.0))
+def test_pool_relabeling_invariance(perm, r):
+    market = _hetero_market()
+    kernel = NoticeAwareKernel(checkpoint_time=0.05)
+    kw = dict(k=K, n_events=15_000, key=jax.random.key(11),
+              chunk_events=4096)
+    res = run_market_sim(Exponential(LAM), market, kernel,
+                         {"r": jnp.float32(r)}, **kw)
+    res_p = run_market_sim(Exponential(LAM), market.relabel(list(perm)),
+                           kernel, {"r": jnp.float32(r)}, **kw)
+    for name in _SCALAR_INVARIANTS:
+        assert res[name] == res_p[name], name  # exact, not approximate
+    inv = [list(perm).index(i) for i in range(4)]
+    for name in ("pool_served", "pool_spot_arrivals", "pool_preempted"):
+        np.testing.assert_array_equal(np.asarray(res[name]),
+                                      np.asarray(res_p[name])[inv],
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Preemption-with-notice semantics + cost conservation
+# ---------------------------------------------------------------------------
+def test_preemption_accounting_identities():
+    market = _hetero_market()
+    kernel = NoticeAwareKernel(checkpoint_time=0.05)
+    res = run_market_sim(Exponential(LAM), market, kernel,
+                         kernel.init_params(3.0), k=K, n_events=60_000,
+                         key=jax.random.key(0), chunk_events=4096)
+    assert res["preemptions"] > 0 and res["resumed"] > 0
+    # every completed leg is a spot service, an on-demand dispatch, or a
+    # checkpointed (resumed) preemption leg
+    assert res["jobs_completed"] == (res["spot_served"] + res["ondemand"]
+                                     + res["resumed"])
+    # cost conservation: spot legs (complete + partial) at pool prices,
+    # on-demand at k
+    prices = market.prices()
+    spot_spend = (prices * (np.asarray(res["pool_served"])
+                            + np.asarray(res["pool_preempted"]))).sum()
+    np.testing.assert_allclose(res["spot_cost"], spot_spend, rtol=2e-5)
+    cost_sum = res["avg_cost"] * res["jobs_completed"]
+    np.testing.assert_allclose(cost_sum,
+                               spot_spend + K * res["ondemand"], rtol=2e-5)
+    # per-job stats divide the same totals by FINAL completions only
+    final = res["spot_served"] + res["ondemand"]
+    np.testing.assert_allclose(res["avg_cost_job"] * final, cost_sum,
+                               rtol=1e-9)
+    assert res["avg_cost_job"] > res["avg_cost"]  # resumed legs dilute
+    # the per-job cost respects the preemption-priced LP floor
+    lp = market_knapsack_lp(K, LAM, res["avg_delay_job"], market,
+                            include_preemption=True)
+    assert res["avg_cost_job"] > lp["objective"] - 0.3
+
+
+def test_notice_window_gates_checkpointing():
+    # one preemptible pool; notice shorter than the checkpoint -> all
+    # revocations defect; notice longer -> revocations resume (r large
+    # keeps re-admission open)
+    def run(notice):
+        market = SpotMarket.single(Exponential(1 / 40.0), hazard=0.05,
+                                   notice=notice)
+        kernel = NoticeAwareKernel(checkpoint_time=0.1)
+        return run_market_sim(Exponential(LAM), market, kernel,
+                              kernel.init_params(8.0), k=K,
+                              n_events=30_000, key=jax.random.key(5))
+
+    tight = run(notice=0.01)
+    roomy = run(notice=1.0)
+    assert tight["preemptions"] > 0 and tight["resumed"] == 0
+    assert roomy["resumed"] > 0
+    # host/traced notice law agree
+    assert not checkpoint_within_notice(0.1, 0.01)
+    assert checkpoint_within_notice(0.1, 1.0)
+    assert bool(checkpoint_within_notice(jnp.float32(0.1),
+                                         jnp.float32(1.0)))
+
+
+def test_preempt_readmission_excludes_revoked_job():
+    """Re-admission after revocation sees the queue WITHOUT the revoked job
+    (the host orchestrator pops it first).  At r=1 a queue holding only the
+    revoked job re-admits with probability 1 — every hit must resume."""
+    market = SpotMarket.single(Exponential(1 / 40.0), hazard=0.05,
+                               notice=10.0)
+    kernel = NoticeAwareKernel(checkpoint_time=0.1)
+    res = run_market_sim(Exponential(LAM), market, kernel,
+                         kernel.init_params(1.0), k=K, n_events=30_000,
+                         key=jax.random.key(7), rmax=1)
+    assert res["preemptions"] > 0
+    # rmax=1 caps the queue at the revoked job itself, so post-pop qlen is
+    # always 0: phase 1 of the three-phase law, admit with certainty
+    assert res["resumed"] == res["preemptions"]
+
+
+def test_legacy_kernel_defects_on_preemption():
+    """Two-tuple kernels have no on_preempt hook: every revocation goes
+    on-demand, none resume."""
+    market = SpotMarket.single(Exponential(1 / 40.0), hazard=0.05,
+                               notice=10.0)
+    res = run_market_sim(Exponential(LAM), market, ThreePhaseKernel(),
+                         {"r": jnp.float32(8.0)}, k=K, n_events=30_000,
+                         key=jax.random.key(6))
+    assert res["preemptions"] > 0
+    assert res["resumed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Pool choice
+# ---------------------------------------------------------------------------
+def test_pool_choice_rules():
+    market = _hetero_market(hazard_scale=0.0)
+    job = Exponential(LAM)
+    kw = dict(k=K, n_events=20_000, key=jax.random.key(8))
+    cheapest = run_market_sim(job, market,
+                              PoolChoiceKernel(ThreePhaseKernel(),
+                                               choice="cheapest"),
+                              {"r": jnp.float32(3.0)}, **kw)
+    assert np.asarray(cheapest["pool_served"])[:3].sum() == 0  # all pool 3
+    uniform = run_market_sim(job, market,
+                             PoolChoiceKernel(ThreePhaseKernel(),
+                                              choice="uniform"),
+                             {"r": jnp.float32(3.0)}, **kw)
+    assert (np.asarray(uniform["pool_served"]) > 0).all()
+    weighted = run_market_sim(
+        job, market, PoolChoiceKernel(ThreePhaseKernel(), choice="weighted"),
+        {"r": jnp.float32(3.0),
+         "pool_logits": jnp.array([-9.0, -9.0, 9.0, -9.0])}, **kw)
+    served = np.asarray(weighted["pool_served"])
+    assert served[2] > 0 and served[[0, 1, 3]].sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# Batched market sweeps: one jit over (params × k × pools-config × seeds)
+# ---------------------------------------------------------------------------
+def test_market_sweep_matches_per_point_calls():
+    market = _hetero_market()
+    kernel = NoticeAwareKernel(checkpoint_time=0.05)
+    rs = jnp.linspace(0.5, 4.0, 6)
+    key = jax.random.key(0)
+    out = run_market_sweep(Exponential(LAM), market, kernel, {"r": rs}, k=K,
+                           n_events=10_000, key=key, n_seeds=2)
+    assert out["avg_cost"].shape == (6, 2)
+    assert out["pool_served"].shape == (6, 2, 4)
+    seed_keys = jax.random.split(key, 2)
+    for i in (0, 5):
+        for s in range(2):
+            pt = run_market_sim(Exponential(LAM), market, kernel,
+                                {"r": rs[i]}, k=K, n_events=10_000,
+                                key=seed_keys[s])
+            assert pt["jobs_arrived"] == out["jobs_arrived"][i, s]
+            np.testing.assert_allclose(out["avg_cost"][i, s],
+                                       pt["avg_cost"], rtol=1e-6)
+            np.testing.assert_array_equal(np.asarray(pt["pool_served"]),
+                                          np.asarray(out["pool_served"])[i, s])
+
+
+def test_market_sweep_pools_config_axis():
+    """The pool configuration itself is a grid axis of one compiled call."""
+    market = _hetero_market()
+    kernel = NoticeAwareKernel(checkpoint_time=0.05)
+    scale = np.linspace(0.5, 2.0, 5)
+    price_grid = market.prices()[None, :] * scale[:, None]  # (5, P)
+    out = run_market_sweep(Exponential(LAM), market, kernel,
+                           {"r": jnp.float32(3.0)}, k=K, prices=price_grid,
+                           n_events=10_000, key=jax.random.key(4),
+                           n_seeds=2)
+    assert out["avg_cost"].shape == (5, 2)
+    cost = out["avg_cost"].mean(-1)
+    assert cost[0] < cost[-1]  # pricier pools -> pricier jobs
+    # hazard override on a statically hazard-free market arms preemption
+    out2 = run_market_sweep(Exponential(LAM), _hetero_market(0.0), kernel,
+                            {"r": jnp.float32(3.0)}, k=K, hazards=0.05,
+                            n_events=10_000, key=jax.random.key(4),
+                            n_seeds=1)
+    assert (out2["preemptions"] > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Market LP + Theorem-1 generalization
+# ---------------------------------------------------------------------------
+def test_market_lp_degenerate_matches_paper_bound():
+    market = SpotMarket.single(Exponential(MU))
+    for delta in (3.0, 27.0):
+        out = market_knapsack_lp(K, LAM, delta, market)
+        np.testing.assert_allclose(out["objective"],
+                                   cost_lower_bound(K, LAM, MU, delta),
+                                   rtol=1e-12)
+        np.testing.assert_allclose(
+            market_cost_lower_bound(K, LAM, delta, market),
+            out["objective"])
+
+
+def test_market_lp_greedy_fill_and_caps():
+    market = _hetero_market()
+    out = market_knapsack_lp(K, LAM, 27.0, market)
+    # best-savings-first: savings rate (k - c_p) * mu_p decides the order
+    savings = (K - market.prices()) * market.rates() / LAM
+    assert out["support"] == sorted(range(4), key=lambda p: -savings[p])[
+        :len(out["support"])]
+    assert (out["u"] <= 1.0 + 1e-12).all()
+    assert out["u"].sum() <= LAM * 27.0 + 1e-12
+    # preemption-aware effective prices weaken the bound (cost goes up)
+    pre = market_knapsack_lp(K, LAM, 27.0, market, include_preemption=True)
+    assert pre["objective"] >= out["objective"]
+    assert (pre["effective_prices"] >= out["effective_prices"]).all()
+
+
+def test_theorem1_market_cost_identity_on_engine_run():
+    market = _hetero_market(hazard_scale=0.0)  # preemption-free identity
+    kernel = PoolChoiceKernel(ThreePhaseKernel(), choice="uniform")
+    res = run_market_sim(Exponential(LAM), market, kernel,
+                         {"r": jnp.float32(4.0)}, k=K, n_events=60_000,
+                         key=jax.random.key(9), chunk_events=4096)
+    # exact empirical identity: (k - avg_cost) * completed
+    #   == sum_p (k - c_p) * served_p
+    lhs = (K - res["avg_cost"]) * res["jobs_completed"]
+    rhs = ((K - market.prices()) * np.asarray(res["pool_served"])).sum()
+    np.testing.assert_allclose(lhs, rhs, rtol=2e-5)
+    # population form: empirical rates + utilizations plug into the law
+    lam_emp = res["arrival_rate"]
+    rates_emp = np.asarray(res["pool_spot_arrivals"]) / res["time"]
+    pred = theorem1_market_cost(K, lam_emp, rates_emp, market.prices(),
+                                np.asarray(res["pool_utilization"]))
+    np.testing.assert_allclose(pred, res["avg_cost"], rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm-1 fleets on a preemptible market
+# ---------------------------------------------------------------------------
+def test_batched_adaptive_on_market():
+    market = _hetero_market()
+    out = adaptive_admission_control_batched(
+        Exponential(LAM), market, k=K, delta=jnp.array([3.0, 27.0]),
+        eta=0.05, window_events=512, n_windows=30, key=jax.random.key(12))
+    assert out["r"].shape == (2, 30)
+    assert out["preemptions_total"].shape == (2,)
+    assert (out["preemptions_total"] > 0).all()
+    # looser delay target admits deeper queues
+    assert out["r_star"][0] < out["r_star"][1]
