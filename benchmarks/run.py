@@ -26,6 +26,7 @@ def main() -> None:
                     help="run only benches whose name contains SUBSTR")
     args = ap.parse_args()
 
+    from benchmarks import engine_kernel_bench
     from benchmarks import market_bench
     from benchmarks import paper_benches as pb
     from benchmarks import sweep_bench
@@ -35,6 +36,7 @@ def main() -> None:
         pb.set_scale(0.05)
         sweep_bench.set_scale(0.1)
         market_bench.set_scale(0.1)
+        engine_kernel_bench.set_scale(0.1)
 
     benches = [
         pb.bench_theorem1_cost_law,
@@ -46,7 +48,8 @@ def main() -> None:
         pb.bench_waittime_optimality,
         sweep_bench.bench_sweep_engine,  # writes BENCH_sweep.json
         market_bench.bench_market_engine,  # writes BENCH_market.json
-        bench_engine_roofline,  # reads it back
+        engine_kernel_bench.bench_engine_kernel,  # BENCH_engine_kernel.json
+        bench_engine_roofline,  # reads them back
         bench_roofline,
     ]
     if args.only:

@@ -12,7 +12,10 @@ Architecture (post-engine-refactor):
   * sweep engine         — :mod:`repro.core.engine` (the single
                            merged-renewal event loop; ``run_sweep`` runs a
                            whole policy grid × seed fleet as one jitted
-                           program with chunked float32 windows)
+                           program with chunked float32 windows, through
+                           either the XLA scan executor or the Pallas
+                           batched-event kernel — ``impl="pallas"``,
+                           :mod:`repro.kernels.sweep` — bit-for-bit)
   * spot market          — :mod:`repro.core.market` (P heterogeneous pools
                            with per-pool prices and preemption-with-notice;
                            ``run_market_sweep`` batches params × k ×
@@ -58,6 +61,7 @@ from repro.core.cost import (
     theorem1_market_cost,
 )
 from repro.core.engine import (
+    DEFAULT_CHUNK_EVENTS,
     EngineState,
     MarketState,
     MarketWindowStats,
@@ -107,7 +111,8 @@ __all__ = [
     "adaptive_admission_control_batched", "mm1n_pi", "theorem2_cost",
     "theorem2_delta_max", "theorem5_cost", "theorem5_delta",
     "cost_lower_bound", "market_cost_lower_bound", "pi0_from_cost",
-    "theorem1_cost", "theorem1_market_cost", "EngineState", "MarketState",
+    "theorem1_cost", "theorem1_market_cost", "DEFAULT_CHUNK_EVENTS",
+    "EngineState", "MarketState",
     "MarketWindowStats", "PolicyKernel", "WindowStats", "run_market_sim",
     "run_market_sweep", "run_sim", "run_sweep", "summarize",
     "summarize_market", "knapsack_lp", "market_knapsack_lp", "waittime_lp",

@@ -38,7 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
-from repro.core.engine import init_market_state, run_market_window
+from repro.core.engine import (_rebase_order, init_market_state,
+                               run_market_window)
 from repro.core.market import NoticeAwareKernel, SpotMarket, as_market
 from repro.core.policies import ThreePhaseKernel
 
@@ -83,6 +84,9 @@ def _adaptive_core(job, market, kernel, rmax, window_events, n_windows,
         state, s = run_market_window(job, market, kernel, rmax, preempt_on,
                                      state, {"r": r}, mp, k_cost,
                                      window_events)
+        # learner horizons are unbounded (windows × events); rebase the
+        # int32 join-sequence counters every window so they never wrap
+        state = _rebase_order(state)
         completed = jnp.maximum(s.jobs_completed, 1).astype(jnp.float32)
         d = s.delay_sum / completed
         c = s.cost_sum / completed

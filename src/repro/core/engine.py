@@ -30,7 +30,9 @@ A slot-mask ring: ``ages``/``budgets``/``order`` arrays of static size
 slot (min join ``order``); deadlines fire on the slot with the smallest
 remaining budget.  This is O(rmax) per event — the same as the seed's ring
 buffer — but supports out-of-order departures, which a head/tail ring cannot.
-``order`` is int32: the engine supports ~2×10⁹ admissions per run.
+``order``/``next_seq`` are int32, rebased to the oldest occupied sequence at
+every window boundary (:func:`_rebase_order`), so admission counts are
+unbounded.
 
 Event-time ties (measure-zero for continuous samplers) resolve
 spot > deadline > job, matching the seed's single-slot simulator.
@@ -55,6 +57,25 @@ per-point Python dispatch, no retracing.  Cost accounting (paper §II): spot
 service costs 1, an on-demand dispatch costs ``k``; π₀ is tracked both
 time-averaged and as the fraction of spot arrivals finding the queue empty
 (the quantity Theorem 1's proof uses).
+
+Executors (``impl=``)
+---------------------
+Every entry point dispatches between executors sharing the same traced
+event bodies: ``impl="xla"`` is the nested-vmap ``lax.scan`` program above;
+``impl="pallas"`` hands the fleet to the batched-event kernel in
+:mod:`repro.kernels.sweep` — engine state laid out as (tile, rmax) VMEM
+blocks (market clocks as (tile, n_pools)) resident across a whole float32
+window of events, with the clock merge, slot reductions, and one-hot
+updates fused into one kernel body instead of N width-``rmax`` HLO selects
+re-read from HBM per event; ``impl="ref"`` is the kernel's pure-JAX scan
+reference on the identical lane layout.  Bit-for-bit contract
+(tests/test_sweep_kernel.py): pallas == ref to the last bit on every
+config and tile size; against the ``"xla"`` executor, integer event
+accounting is bitwise identical and float32 window sums match to ~1 ulp
+(the XLA executor keeps a broadcast-nested batch layout that is ~2.5×
+faster on CPU but whose transcendental codegen can round an ulp apart —
+see EXPERIMENTS.md).  ``interpret=None`` auto-falls back to the Pallas
+interpreter off-TPU, so tier-1 stays green everywhere.
 """
 from __future__ import annotations
 
@@ -67,9 +88,24 @@ import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
 from repro.core.market import PoolState, SpotMarket, as_market
+from repro.kernels.sweep import (batched_events, batched_event_windows_ref,
+                                 default_interpret)
 
-INF = jnp.float32(3e38)
-_ORDER_MAX = jnp.int32(2**31 - 1)
+# numpy (not jnp) scalars: they inline as jaxpr literals, so the event
+# bodies stay capture-free inside the Pallas kernel trace (device-array
+# constants would be hoisted as consts, which pallas_call rejects)
+INF = np.float32(3e38)
+_ORDER_MAX = np.int32(2**31 - 1)
+
+#: One chunk_events default for every entry point (run_sim, run_sweep,
+#: run_market_sim, run_market_sweep): float32 window sums are re-zeroed
+#: every 2**16 events and assembled in float64 by :func:`summarize`, so the
+#: precision behavior of a horizon does not depend on which entry point ran
+#: it.  Horizons ≤ DEFAULT_CHUNK_EVENTS still accumulate in a single window
+#: (chunks are clamped to ``n_events``), which keeps the seed's bit-for-bit
+#: contract for short runs; pass ``chunk_events=None`` to force one window
+#: at any horizon.
+DEFAULT_CHUNK_EVENTS = 1 << 16
 
 
 @runtime_checkable
@@ -216,6 +252,26 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
     return new_carry, new_stats
 
 
+def _rebase_order(state):
+    """Rebase join sequence numbers to the oldest occupied slot.
+
+    ``order``/``next_seq`` are int32 and grow by one per admission; an
+    unbounded counter wraps after ~2.1e9 admissions (well inside a long
+    adaptive horizon), turning the FIFO ``argmin`` against ``_ORDER_MAX``
+    into newest-first.  Subtracting the minimum *occupied* sequence (or
+    ``next_seq`` itself when the queue is empty) at every window boundary
+    keeps the counter below window-events + rmax forever.  The shift is
+    uniform across occupied slots, so every order comparison — and therefore
+    every statistic — is bitwise unchanged; works on any state carrying
+    ``occ``/``order``/``next_seq`` (EngineState and MarketState).
+    """
+    base = jnp.min(jnp.where(state.occ, state.order, state.next_seq))
+    return state._replace(
+        order=jnp.where(state.occ, state.order - base, 0),
+        next_seq=state.next_seq - base,
+    )
+
+
 def _scan_window(step, zeros, state, n_events: int):
     """Scan ``step`` for ``n_events`` events from fresh window accumulators.
 
@@ -234,20 +290,44 @@ def _scan_window(step, zeros, state, n_events: int):
 
 
 def _scan_chunked(step, zeros, state, n_events: int, chunk_events: int):
-    """Run exactly ``n_events`` events as stacked float32 chunk windows."""
+    """Run exactly ``n_events`` events as stacked float32 chunk windows.
+
+    Every window boundary rebases the join-sequence counters
+    (:func:`_rebase_order`) so int32 ``order``/``next_seq`` never wrap on
+    long horizons; the Pallas kernel path applies the same epilogue, so the
+    two impls carry bitwise-identical state between windows.
+    """
     n_chunks, rem = divmod(n_events, chunk_events)
 
     def chunk(c, _):
-        return _scan_window(step, zeros, c, chunk_events)
+        c, s = _scan_window(step, zeros, c, chunk_events)
+        return _rebase_order(c), s
 
     state, stats = jax.lax.scan(chunk, state, None, length=n_chunks)
     if rem:
         state, tail = _scan_window(step, zeros, state, rem)
+        state = _rebase_order(state)
         stats = jax.tree.map(
             lambda s, t: jnp.concatenate([s, t[None]]), stats,
             jax.tree.map(jnp.asarray, tail),
         )
     return state, stats
+
+
+def _window_plan(n_events: int, chunk_events: int,
+                 burn_in: int) -> tuple[int, ...]:
+    """Static per-window event counts: [burn-in?] + full chunks + [tail?]."""
+    full, rem = divmod(n_events, chunk_events)
+    return (((burn_in,) if burn_in else ()) + (chunk_events,) * full
+            + ((rem,) if rem else ()))
+
+
+def _raw_keys(keys: jax.Array) -> jax.Array:
+    """Typed PRNG keys -> raw uint32 key data (Pallas refs carry raw words);
+    threefry on the raw words is bitwise the typed-key stream."""
+    if jnp.issubdtype(keys.dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(keys)
+    return keys
 
 
 def run_window(job: ArrivalProcess, spot: ArrivalProcess,
@@ -289,8 +369,33 @@ def _run_sim_jit(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
     if burn_in:
         state, _ = run_window(job, spot, kernel, rmax, state, params, k_cost,
                               burn_in)
+        state = _rebase_order(state)
     return run_chunked(job, spot, kernel, rmax, state, params, k_cost,
                        n_events, chunk_events)
+
+
+def _flat_lane_args(params_trees, k_cost, keys):
+    """Flatten a (grid × seeds) product to grid-major lanes (seed fastest).
+
+    The Pallas executor's lane layout: params/k repeat per seed, raw seed
+    keys tile per grid point — the kernel operates on materialized per-lane
+    state/params tiles.  The XLA executor deliberately does NOT share this
+    layout: its nested vmap with broadcast (``in_axes=None``) arguments
+    compiles ~2.5× faster on CPU than any materialized-lane variant (the
+    batching rules keep grid-constant operands symbolically unbatched).
+    Per-lane arithmetic is the same traced event body either way; see
+    EXPERIMENTS.md ("Engine kernel") for the ulp-level float caveat this
+    split implies on CPU.
+    """
+    g, s = k_cost.shape[0], keys.shape[0]
+    rep = lambda x: jnp.repeat(x, s, axis=0)
+    return ([jax.tree.map(rep, t) for t in params_trees], rep(k_cost),
+            jnp.tile(keys, (g, 1)))
+
+
+def _unflatten_lanes(stats, g: int, s: int):
+    """(lanes, windows, ...) stats leaves back to (grid, seeds, ...)."""
+    return jax.tree.map(lambda x: x.reshape((g, s) + x.shape[1:]), stats)
 
 
 @functools.partial(
@@ -300,19 +405,74 @@ def _run_sim_jit(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
 )
 def _run_sweep_jit(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
                    params, k_cost, keys):
-    """(grid × seeds) fleet as one nested-vmap XLA program."""
+    """(grid × seeds) fleet as one nested-vmap XLA program (broadcast
+    ``in_axes`` — see :func:`_flat_lane_args` for why not flat lanes)."""
 
     def one(p, kc, key):
         state = init_engine_state(key, job, spot, rmax)
         if burn_in:
             state, _ = run_window(job, spot, kernel, rmax, state, p, kc,
                                   burn_in)
+            state = _rebase_order(state)
         _, stats = run_chunked(job, spot, kernel, rmax, state, p, kc,
                                n_events, chunk_events)
         return stats
 
     per_seeds = jax.vmap(one, in_axes=(None, None, 0))
     return jax.vmap(per_seeds, in_axes=(0, 0, None))(params, k_cost, keys)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("job", "spot", "kernel", "rmax", "n_events",
+                     "chunk_events", "burn_in", "tile", "interpret",
+                     "executor"),
+)
+def _run_sweep_pallas_jit(job, spot, kernel, rmax, n_events, chunk_events,
+                          burn_in, tile, interpret, params, k_cost, keys,
+                          executor="pallas"):
+    """The (grid × seeds) fleet as ONE Pallas batched-event kernel call.
+
+    Lanes are grid-major (seed fastest; :func:`_flat_lane_args`); per-lane
+    arithmetic is the same traced :func:`_engine_event` the XLA executor
+    scans.  Burn-in runs as a leading window through the same kernel and
+    its stats row is dropped.  ``executor="ref"`` swaps the kernel for its
+    pure-JAX scan reference on the identical lane layout — the bit-for-bit
+    oracle the equivalence tests freeze the kernel against.
+    """
+    g, s = k_cost.shape[0], keys.shape[0]
+    (params_f,), k_f, keys_f = _flat_lane_args((params,), k_cost, keys)
+    params_b = {"params": params_f, "k": k_f}
+    state0 = jax.vmap(
+        lambda key: init_engine_state(key, job, spot, rmax))(keys_f)
+
+    def step(carry, stats, p):
+        return _engine_event(job, spot, kernel, rmax, carry, stats,
+                             p["params"], p["k"])
+
+    plan = _window_plan(n_events, chunk_events, burn_in)
+    if executor == "ref":
+        _, stats = batched_event_windows_ref(
+            step, state0, params_b, WindowStats.zeros(), plan,
+            epilogue=_rebase_order)
+    else:
+        _, stats = batched_events(
+            step, state0, params_b, WindowStats.zeros(), plan, tile=tile,
+            interpret=interpret, epilogue=_rebase_order)
+    if burn_in:
+        stats = jax.tree.map(lambda x: x[:, 1:], stats)
+    return _unflatten_lanes(stats, g, s)
+
+
+#: Statistics that count events (int32 window accumulators and their
+#: per-pool variants).  Event *decisions* never differ between executors,
+#: so these are bitwise identical across impl="xla"/"pallas"/"ref" on any
+#: config — the exact-comparison set used by the equivalence tests,
+#: benches, and examples (float sums get the ~ulp contract instead; see
+#: the module docstring).
+INT_STATS = ("jobs_arrived", "jobs_completed", "spot_served", "ondemand",
+             "preemptions", "resumed", "pool_served", "pool_spot_arrivals",
+             "pool_preempted")
 
 
 def summarize(stats: WindowStats) -> dict:
@@ -352,18 +512,36 @@ def run_sim(
     key: jax.Array,
     rmax: int = 64,
     burn_in: int = 0,
-    chunk_events: int | None = None,
+    chunk_events: int | None = DEFAULT_CHUNK_EVENTS,
+    impl: str = "xla",
+    tile: int = 256,
+    interpret: bool | None = None,
 ) -> dict:
     """Run one policy at one parameter point; return long-run scalar stats.
 
-    ``chunk_events=None`` accumulates the whole horizon in a single float32
-    window (the seed simulators' behaviour, kept as the bit-for-bit default
-    for short runs); pass e.g. ``1 << 16`` for multi-million-event horizons.
+    ``chunk_events`` defaults to :data:`DEFAULT_CHUNK_EVENTS` like the sweep
+    entry points (chunks clamp to ``n_events``, so horizons within one chunk
+    still accumulate in a single float32 window — the seed simulators'
+    bit-for-bit behaviour); ``None`` forces a single window at any horizon.
+    ``impl="pallas"`` runs the horizon as a one-lane batched-event kernel
+    call — bit-for-bit the ``"ref"`` scan oracle; see :func:`run_sweep`
+    and the module docstring for the cross-executor equality contract.
     """
     params = {} if params is None else params
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
-    _, stats = _run_sim_jit(job, spot, kernel, rmax, n_events, chunk,
-                            burn_in, params, jnp.float32(k), key)
+    if impl in ("pallas", "ref"):
+        stats = _run_sweep_pallas_jit(
+            job, spot, kernel, rmax, n_events, chunk, burn_in, tile,
+            default_interpret() if interpret is None else interpret,
+            jax.tree.map(lambda x: jnp.asarray(x)[None], params),
+            jnp.float32(k)[None], _raw_keys(key)[None], executor=impl)
+        stats = jax.tree.map(lambda x: x[0, 0], stats)
+    elif impl == "xla":
+        _, stats = _run_sim_jit(job, spot, kernel, rmax, n_events, chunk,
+                                burn_in, params, jnp.float32(k), key)
+    else:
+        raise ValueError(
+            f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
     return {name: float(v) for name, v in summarize(stats).items()}
 
 
@@ -379,7 +557,10 @@ def run_sweep(
     n_seeds: int = 1,
     rmax: int = 64,
     burn_in: int = 0,
-    chunk_events: int | None = 1 << 16,
+    chunk_events: int | None = DEFAULT_CHUNK_EVENTS,
+    impl: str = "xla",
+    tile: int = 256,
+    interpret: bool | None = None,
 ) -> dict:
     """Run a whole policy grid × seed fleet as ONE jitted call.
 
@@ -388,6 +569,16 @@ def run_sweep(
     meshgrid over ``r`` × ``k``).  Seeds use common random numbers across the
     grid (same ``n_seeds`` subkeys at every point), which cancels sampling
     noise out of cross-grid comparisons.
+
+    ``impl`` selects the executor: ``"xla"`` is the nested-vmap
+    ``lax.scan`` program; ``"pallas"`` runs the fleet through the batched
+    -event kernel (:mod:`repro.kernels.sweep`) — engine state resident in
+    VMEM as (tile, rmax) blocks for a whole float32 window of events;
+    ``"ref"`` is the kernel's pure-JAX scan reference (the bit-for-bit
+    oracle; see the module docstring for the exact cross-executor
+    equality contract).  ``tile`` is lanes per kernel instance;
+    ``interpret=None`` auto-selects compiled Mosaic on TPU and the Pallas
+    interpreter elsewhere (the CPU fallback).
 
     Returns :func:`summarize`'s dict with every value shaped
     ``grid_shape + (n_seeds,)``.
@@ -403,8 +594,17 @@ def run_sweep(
     k_flat = flat(k)
     keys = jax.random.split(key, n_seeds)
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
-    stats = _run_sweep_jit(job, spot, kernel, rmax, n_events, chunk, burn_in,
-                           params_flat, k_flat, keys)
+    if impl in ("pallas", "ref"):
+        stats = _run_sweep_pallas_jit(
+            job, spot, kernel, rmax, n_events, chunk, burn_in, tile,
+            default_interpret() if interpret is None else interpret,
+            params_flat, k_flat, _raw_keys(keys), executor=impl)
+    elif impl == "xla":
+        stats = _run_sweep_jit(job, spot, kernel, rmax, n_events, chunk,
+                               burn_in, params_flat, k_flat, keys)
+    else:
+        raise ValueError(
+            f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
     out = summarize(stats)  # values shaped (grid_points, n_seeds)
     return {name: v.reshape(grid_shape + (n_seeds,)) for name, v in
             out.items()}
@@ -600,7 +800,7 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
     qlen_pool = jnp.sum(
         (carry.occ[:, None] & (carry.pool[:, None] == iota_p[None, :]))
         .astype(jnp.int32), axis=0)
-    rates = jnp.asarray(market.rates(), jnp.float32) / mp["spot_scale"]
+    rates = mp["rate"] / mp["spot_scale"]
     pool_state = PoolState(price=mp["price"], hazard=mp["hazard"],
                            notice=mp["notice"], rate=rates,
                            qlen_pool=qlen_pool)
@@ -751,6 +951,7 @@ def _run_market_sim_jit(job, market, kernel, rmax, preempt_on, n_events,
     if burn_in:
         state, _ = run_market_window(job, market, kernel, rmax, preempt_on,
                                      state, params, mp, k_cost, burn_in)
+        state = _rebase_order(state)
     return run_market_chunked(job, market, kernel, rmax, preempt_on, state,
                               params, mp, k_cost, n_events, chunk_events)
 
@@ -762,7 +963,8 @@ def _run_market_sim_jit(job, market, kernel, rmax, preempt_on, n_events,
 )
 def _run_market_sweep_jit(job, market, kernel, rmax, preempt_on, n_events,
                           chunk_events, burn_in, params, mp, k_cost, keys):
-    """(grid × pools-config × seeds) fleet as one nested-vmap XLA program."""
+    """(grid × pools-config × seeds) fleet as one nested-vmap XLA program
+    (broadcast ``in_axes``; see :func:`_flat_lane_args`)."""
 
     def one(p, m, kc, key):
         state = init_market_state(key, job, market, rmax, m, preempt_on)
@@ -770,6 +972,7 @@ def _run_market_sweep_jit(job, market, kernel, rmax, preempt_on, n_events,
             state, _ = run_market_window(job, market, kernel, rmax,
                                          preempt_on, state, p, m, kc,
                                          burn_in)
+            state = _rebase_order(state)
         _, stats = run_market_chunked(job, market, kernel, rmax, preempt_on,
                                       state, p, m, kc, n_events,
                                       chunk_events)
@@ -778,6 +981,48 @@ def _run_market_sweep_jit(job, market, kernel, rmax, preempt_on, n_events,
     per_seeds = jax.vmap(one, in_axes=(None, None, None, 0))
     return jax.vmap(per_seeds, in_axes=(0, 0, 0, None))(params, mp, k_cost,
                                                         keys)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("job", "market", "kernel", "rmax", "preempt_on",
+                     "n_events", "chunk_events", "burn_in", "tile",
+                     "interpret", "executor"),
+)
+def _run_market_sweep_pallas_jit(job, market, kernel, rmax, preempt_on,
+                                 n_events, chunk_events, burn_in, tile,
+                                 interpret, params, mp, k_cost, keys,
+                                 executor="pallas"):
+    """The market fleet through the same batched-event kernel family: the
+    per-pool ``next_spot``/``next_preempt`` clock vectors become
+    (tile, n_pools) VMEM blocks and :func:`_market_event` is the vmap-ed
+    kernel body — bit-for-bit the ``executor="ref"`` scan oracle; integer
+    stats bitwise / float sums to ~ulp vs :func:`_run_market_sweep_jit`
+    (see the module docstring)."""
+    g, s = k_cost.shape[0], keys.shape[0]
+    (params_f, mp_f), k_f, keys_f = _flat_lane_args((params, mp), k_cost,
+                                                    keys)
+    params_b = {"params": params_f, "mp": mp_f, "k": k_f}
+    state0 = jax.vmap(
+        lambda key, m: init_market_state(key, job, market, rmax, m,
+                                         preempt_on))(keys_f, mp_f)
+
+    def step(carry, stats, p):
+        return _market_event(job, market, kernel, rmax, preempt_on, carry,
+                             stats, p["params"], p["mp"], p["k"])
+
+    plan = _window_plan(n_events, chunk_events, burn_in)
+    if executor == "ref":
+        _, stats = batched_event_windows_ref(
+            step, state0, params_b, MarketWindowStats.zeros(market.n_pools),
+            plan, epilogue=_rebase_order)
+    else:
+        _, stats = batched_events(
+            step, state0, params_b, MarketWindowStats.zeros(market.n_pools),
+            plan, tile=tile, interpret=interpret, epilogue=_rebase_order)
+    if burn_in:
+        stats = jax.tree.map(lambda x: x[:, 1:], stats)
+    return _unflatten_lanes(stats, g, s)
 
 
 def summarize_market(stats: MarketWindowStats) -> dict:
@@ -856,20 +1101,38 @@ def run_market_sim(
     key: jax.Array,
     rmax: int = 64,
     burn_in: int = 0,
-    chunk_events: int | None = None,
+    chunk_events: int | None = DEFAULT_CHUNK_EVENTS,
+    impl: str = "xla",
+    tile: int = 256,
+    interpret: bool | None = None,
 ) -> dict:
     """Run one market policy at one parameter point; scalar long-run stats.
 
     A degenerate market (:meth:`SpotMarket.is_degenerate`) with a legacy
-    kernel reproduces :func:`run_sim` bit-for-bit per seed.
+    kernel reproduces :func:`run_sim` bit-for-bit per seed.  ``chunk_events``
+    / ``impl`` behave exactly as in :func:`run_sim`.
     """
     market = as_market(market)
     params = {} if params is None else params
     mp = market.params()
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
-    _, stats = _run_market_sim_jit(job, market, kernel, rmax,
-                                   market.preemptible, n_events, chunk,
-                                   burn_in, params, mp, jnp.float32(k), key)
+    if impl in ("pallas", "ref"):
+        stats = _run_market_sweep_pallas_jit(
+            job, market, kernel, rmax, market.preemptible, n_events, chunk,
+            burn_in, tile,
+            default_interpret() if interpret is None else interpret,
+            jax.tree.map(lambda x: jnp.asarray(x)[None], params),
+            jax.tree.map(lambda x: jnp.asarray(x)[None], mp),
+            jnp.float32(k)[None], _raw_keys(key)[None], executor=impl)
+        stats = jax.tree.map(lambda x: x[0, 0], stats)
+    elif impl == "xla":
+        _, stats = _run_market_sim_jit(job, market, kernel, rmax,
+                                       market.preemptible, n_events, chunk,
+                                       burn_in, params, mp, jnp.float32(k),
+                                       key)
+    else:
+        raise ValueError(
+            f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
     return {name: (float(v) if np.ndim(v) == 0 else np.asarray(v))
             for name, v in summarize_market(stats).items()}
 
@@ -890,7 +1153,10 @@ def run_market_sweep(
     n_seeds: int = 1,
     rmax: int = 64,
     burn_in: int = 0,
-    chunk_events: int | None = 1 << 16,
+    chunk_events: int | None = DEFAULT_CHUNK_EVENTS,
+    impl: str = "xla",
+    tile: int = 256,
+    interpret: bool | None = None,
 ) -> dict:
     """Run a (params × k × pools-config × seeds) grid as ONE jitted call.
 
@@ -900,6 +1166,12 @@ def run_market_sweep(
     point: a scalar applies to every pool, a ``(P,)`` vector fixes one
     config, and a ``grid_shape + (P,)`` array sweeps the pool configuration
     inside the same compiled program (the pools-config axis of the grid).
+
+    ``impl``/``tile``/``interpret`` select the executor exactly as in
+    :func:`run_sweep`; the Pallas path widens the VMEM-resident state tile
+    with the (tile, n_pools) clock vectors — bit-for-bit the ``"ref"``
+    oracle, integer stats bitwise / float sums to ~ulp vs ``"xla"`` (see
+    the module docstring's executor contract).
 
     Returns :func:`summarize_market`'s dict; scalar statistics are shaped
     ``grid_shape + (n_seeds,)`` and per-pool statistics
@@ -926,9 +1198,18 @@ def run_market_sweep(
     preempt_on = market.preemptible or hazards is not None
     keys = jax.random.split(key, n_seeds)
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
-    stats = _run_market_sweep_jit(job, market, kernel, rmax, preempt_on,
-                                  n_events, chunk, burn_in, params_flat,
-                                  mp_flat, k_flat, keys)
+    if impl in ("pallas", "ref"):
+        stats = _run_market_sweep_pallas_jit(
+            job, market, kernel, rmax, preempt_on, n_events, chunk, burn_in,
+            tile, default_interpret() if interpret is None else interpret,
+            params_flat, mp_flat, k_flat, _raw_keys(keys), executor=impl)
+    elif impl == "xla":
+        stats = _run_market_sweep_jit(job, market, kernel, rmax, preempt_on,
+                                      n_events, chunk, burn_in, params_flat,
+                                      mp_flat, k_flat, keys)
+    else:
+        raise ValueError(
+            f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
     out = summarize_market(stats)
     per_pool = _POOL_FIELDS | {"pool_utilization"}
     return {name: v.reshape(grid_shape

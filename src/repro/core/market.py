@@ -59,7 +59,7 @@ import numpy as np
 from repro.core.arrivals import ArrivalProcess
 from repro.core.policies import three_phase_admit_prob
 
-_INF = jnp.float32(3e38)
+_INF = np.float32(3e38)  # np scalar: inlines as a literal in kernel traces
 
 
 # ---------------------------------------------------------------------------
@@ -142,13 +142,17 @@ class SpotMarket:
 
         ``spot_scale`` multiplies pool inter-arrival times (scale > 1 =
         scarcer slots) — a distribution-generic availability axis that a
-        sweep can trace without retracing the arrival family.
+        sweep can trace without retracing the arrival family.  ``rate`` is
+        the raw (unscaled) per-pool slot rate; it rides in the traced
+        params rather than being materialized inside the event body so the
+        body stays constant-capture-free under the Pallas kernel trace.
         """
         return {
             "price": jnp.asarray(self.prices(), jnp.float32),
             "hazard": jnp.asarray(self.hazards(), jnp.float32),
             "notice": jnp.asarray(self.notices(), jnp.float32),
             "spot_scale": jnp.ones((self.n_pools,), jnp.float32),
+            "rate": jnp.asarray(self.rates(), jnp.float32),
         }
 
     # ------------------------------------------------------------- utilities

@@ -28,10 +28,11 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.waittime import WaitTime, InfiniteWait
 
-_INF = jnp.float32(3e38)
+_INF = np.float32(3e38)  # np scalar: inlines as a literal in kernel traces
 
 
 def three_phase_admit_prob(qlen, r):

@@ -34,6 +34,7 @@ import jax
 
 from repro.core.arrivals import ArrivalProcess
 from repro.core.engine import (  # noqa: F401  (re-exported for compat)
+    DEFAULT_CHUNK_EVENTS,
     EngineState,
     WindowStats,
     run_sim,
@@ -56,9 +57,14 @@ def run_queue_sim(
     key: jax.Array,
     rmax: int = 64,
     burn_in: int = 0,
-    chunk_events: int | None = None,
+    chunk_events: int | None = DEFAULT_CHUNK_EVENTS,
 ) -> dict:
-    """Simulate the Theorem-4 policy at fixed ``r``; return long-run stats."""
+    """Simulate the Theorem-4 policy at fixed ``r``; return long-run stats.
+
+    ``chunk_events`` shares :data:`repro.core.engine.DEFAULT_CHUNK_EVENTS`
+    with every engine entry point; horizons within one chunk accumulate in
+    a single float32 window, which is the seed's bit-for-bit behaviour.
+    """
     return run_sim(
         job, spot, _THREE_PHASE, _THREE_PHASE.init_params(r), k=k,
         n_events=n_events, key=key, rmax=rmax, burn_in=burn_in,
@@ -74,7 +80,7 @@ def run_single_slot_sim(
     k: float = 10.0,
     n_events: int,
     key: jax.Array,
-    chunk_events: int | None = None,
+    chunk_events: int | None = DEFAULT_CHUNK_EVENTS,
 ) -> dict:
     """Simulate the single-slot (queue ≤ 1) policy with maximal wait X."""
     return run_sim(

@@ -1,3 +1,7 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# kernels/sweep: the Pallas batched-event kernel behind
+# repro.core.engine's impl="pallas" executor (the (grid × slot)
+# event-loop hot path named in ROADMAP.md).

@@ -1,0 +1,13 @@
+"""Batched-event Pallas kernel for the sweep engine's (grid × slot) hot loop.
+
+House layout (see flash_attention/ssd): ``sweep.py`` carries the kernel,
+``ops.py`` the public wrapper, ``ref.py`` the pure-JAX reference the kernel
+must match bit-for-bit.  Consumed by :mod:`repro.core.engine` via
+``run_sweep(..., impl="pallas")`` / ``run_market_sweep(..., impl="pallas")``.
+"""
+from repro.kernels.sweep.ops import batched_events, default_interpret
+from repro.kernels.sweep.ref import batched_event_windows_ref
+from repro.kernels.sweep.sweep import batched_event_windows
+
+__all__ = ["batched_events", "batched_event_windows",
+           "batched_event_windows_ref", "default_interpret"]

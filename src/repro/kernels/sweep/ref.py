@@ -1,0 +1,40 @@
+"""Pure-JAX reference for the batched-event sweep kernel.
+
+Same contract as :func:`repro.kernels.sweep.sweep.batched_event_windows`,
+built from the ops the engine's ``lax.scan`` path uses: a ``vmap``-ed event
+body inside a ``fori_loop`` per window, windows unrolled in Python.  The
+kernel must reproduce this reference **bit-for-bit** — the event body is the
+same traced function in both, so any divergence is a kernel layout bug, not
+numerics (tests/test_sweep_kernel.py asserts exact equality).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def batched_event_windows_ref(step, state, params, stats_zero,
+                              events_per_window, *, epilogue=None):
+    """Reference: ``(final_state, stats)`` with stats leaves (B, W, ...)."""
+    b = jax.tree.leaves(state)[0].shape[0]
+    vstep = jax.vmap(step)
+
+    def window(state, n_ev):
+        zeros = jax.tree.map(
+            lambda z: jnp.zeros((b,) + z.shape, z.dtype), stats_zero)
+
+        def event(_, carry):
+            st, acc = carry
+            return vstep(st, acc, params)
+
+        state, acc = jax.lax.fori_loop(0, n_ev, event, (state, zeros))
+        if epilogue is not None:
+            state = jax.vmap(epilogue)(state)
+        return state, acc
+
+    windows = []
+    for n_ev in events_per_window:
+        state, acc = window(state, n_ev)
+        windows.append(acc)
+    stats = jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *windows)
+    return state, stats

@@ -1,0 +1,168 @@
+"""Pallas batched-event kernel for the (grid × slot) sweep hot loop.
+
+The engine's event loop (:mod:`repro.core.engine`) is scalar control flow
+over small per-lane state: a handful of clocks plus (rmax,) slot arrays.
+Under the XLA ``vmap``-of-``scan`` schedule every one of the N width-``rmax``
+selects in the event body is a separate HLO op whose operands round-trip
+through HBM once per event.  This kernel flips the layout: a *tile* of
+simulation lanes is laid out as (tile, rmax) arrays resident in VMEM, and a
+whole float32 window of events (the chunk the engine already uses for
+precision) runs as ONE fused kernel body — clock min/argmin merge,
+FIFO-oldest/first-free slot reductions, and the one-hot join/leave updates
+all stay on-chip for the entire event block.
+
+Tiling: ``grid = (n_tiles, n_windows)`` with the window axis innermost.  The
+final-state *output* blocks have an index map that ignores the window axis,
+so each lane tile's state block stays resident in VMEM across all of its
+windows (the same revisiting schedule as the flash-attention accumulators,
+with the out refs themselves as the resident storage): window 0 seeds the
+state block from the initial-state inputs, every window reads/writes it
+in place, and it is flushed to HBM once per lane tile.  Per-window event
+counts arrive as an i32 vector (one entry per window — burn-in, full
+chunks, tail), so burn-in and the remainder window run through the same
+kernel body.
+
+Genericity: the kernel is parameterized by a per-lane ``step(state, stats,
+params) -> (state, stats)`` event body and arbitrary state/params/stats
+pytrees, so the single-pool engine and the spot-market engine (per-pool
+clock vectors, per-pool stat counters) share this one kernel family.  The
+body is ``jax.vmap``-ed across the tile inside the kernel, which keeps each
+lane's arithmetic — including its threefry PRNG stream — bit-for-bit
+identical to the ``lax.scan`` reference path (see ref.py and
+tests/test_sweep_kernel.py).
+
+``interpret=True`` (the CPU fallback) runs the same kernel body through the
+Pallas interpreter so tier-1 stays green on hosts without an accelerator;
+compiled Mosaic lowering targets TPU backends.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _resident_spec(shape: tuple, tile: int) -> pl.BlockSpec:
+    """(tile, *rest) block at lane-tile ``t``, resident across windows."""
+    rest = tuple(shape[1:])
+    return pl.BlockSpec((tile,) + rest,
+                        lambda t, w, _n=len(rest): (t,) + (0,) * _n)
+
+
+def _window_spec(shape: tuple, tile: int) -> pl.BlockSpec:
+    """(tile, 1, *rest) block at (lane-tile ``t``, window ``w``)."""
+    rest = tuple(shape[2:])
+    return pl.BlockSpec((tile, 1) + rest,
+                        lambda t, w, _n=len(rest): (t, w) + (0,) * _n)
+
+
+def _sweep_kernel(nev_ref, *refs, step, epilogue, n_state, n_params,
+                  state_tree, params_tree, stats_zero, tile):
+    """One (lane-tile, window) grid step: a full event block, fused.
+
+    nev_ref (1,) i32 — events in this window; refs order is
+    [state_in..., params...] then [state_out..., stats_out...].  state_out
+    doubles as the VMEM-resident engine state across the window axis.
+    """
+    wj = pl.program_id(1)
+    state_in = refs[:n_state]
+    params_in = refs[n_state:n_state + n_params]
+    state_out = refs[n_state + n_params:2 * n_state + n_params]
+    stats_out = refs[2 * n_state + n_params:]
+
+    @pl.when(wj == 0)
+    def _seed():
+        for dst, src in zip(state_out, state_in):
+            dst[...] = src[...]
+
+    state = jax.tree.unflatten(state_tree, [r[...] for r in state_out])
+    params = jax.tree.unflatten(params_tree, [r[...] for r in params_in])
+    # fresh float32/int32 window accumulators, re-zeroed every window — the
+    # engine's chunked-precision scheme, unchanged
+    stats = jax.tree.map(lambda z: jnp.zeros((tile,) + z.shape, z.dtype),
+                         stats_zero)
+    vstep = jax.vmap(step)
+
+    def event(_, carry):
+        st, acc = carry
+        return vstep(st, acc, params)
+
+    state, stats = jax.lax.fori_loop(0, nev_ref[0], event, (state, stats))
+    if epilogue is not None:
+        state = jax.vmap(epilogue)(state)
+    for dst, leaf in zip(state_out, jax.tree.leaves(state)):
+        dst[...] = leaf
+    for dst, leaf in zip(stats_out, jax.tree.leaves(stats)):
+        dst[...] = leaf[:, None]
+
+
+def batched_event_windows(step, state, params, stats_zero, events_per_window,
+                          *, tile: int = 256, interpret: bool = True,
+                          epilogue=None):
+    """Run stacked event windows for a batch of simulation lanes on-chip.
+
+    Args:
+      step: per-lane event body ``(state, stats, params) -> (state, stats)``
+        over unbatched pytrees (vmap-ed across the lane tile in-kernel).
+      state: pytree of ``(B, ...)`` arrays — per-lane initial engine state.
+      params: pytree of ``(B, ...)`` arrays — per-lane traced parameters.
+      stats_zero: pytree of *unbatched* zero accumulators defining the
+        per-window stats shapes/dtypes (e.g. ``WindowStats.zeros()``).
+      events_per_window: static-length sequence of per-window event counts.
+      tile: lanes per kernel instance (clamped to B; B is padded up to a
+        tile multiple with copies of lane 0, sliced off on return).
+      interpret: run through the Pallas interpreter (the CPU fallback).
+      epilogue: optional per-lane ``state -> state`` applied after each
+        window (the engine's order-rebase hook).
+
+    Returns ``(final_state, stats)`` where stats leaves are shaped
+    ``(B, n_windows, ...)`` — one float32 window of sums per entry of
+    ``events_per_window``, assembled in float64 downstream.
+    """
+    state_leaves, state_tree = jax.tree.flatten(state)
+    params_leaves, params_tree = jax.tree.flatten(params)
+    b = state_leaves[0].shape[0]
+    tile = max(1, min(tile, b))
+    pad = -b % tile
+    if pad:
+        def padlane(x):
+            fill = jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])
+            return jnp.concatenate([x, fill])
+
+        state_leaves = [padlane(x) for x in state_leaves]
+        params_leaves = [padlane(x) for x in params_leaves]
+    bp = b + pad
+    n_windows = len(events_per_window)
+    nev = jnp.asarray(events_per_window, jnp.int32)
+
+    stats_leaves = jax.tree.leaves(stats_zero)
+    state_structs = [jax.ShapeDtypeStruct((bp,) + x.shape[1:], x.dtype)
+                     for x in state_leaves]
+    stats_structs = [jax.ShapeDtypeStruct((bp, n_windows) + z.shape, z.dtype)
+                     for z in stats_leaves]
+    kernel = functools.partial(
+        _sweep_kernel, step=step, epilogue=epilogue,
+        n_state=len(state_leaves), n_params=len(params_leaves),
+        state_tree=state_tree, params_tree=params_tree,
+        stats_zero=stats_zero, tile=tile,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bp // tile, n_windows),
+        in_specs=[pl.BlockSpec((1,), lambda t, w: (w,))]
+        + [_resident_spec(x.shape, tile) for x in state_leaves]
+        + [_resident_spec(x.shape, tile) for x in params_leaves],
+        out_specs=[_resident_spec(s.shape, tile) for s in state_structs]
+        + [_window_spec(s.shape, tile) for s in stats_structs],
+        out_shape=state_structs + stats_structs,
+        interpret=interpret,
+    )(nev, *state_leaves, *params_leaves)
+    n_state = len(state_leaves)
+    unpad = (lambda x: x[:b]) if pad else (lambda x: x)
+    final_state = jax.tree.unflatten(state_tree,
+                                     [unpad(x) for x in out[:n_state]])
+    _, stats_tree = jax.tree.flatten(stats_zero)
+    stats = jax.tree.unflatten(stats_tree, [unpad(x) for x in out[n_state:]])
+    return final_state, stats
