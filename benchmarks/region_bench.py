@@ -1,0 +1,151 @@
+"""Multi-region routing sweep throughput vs the single-queue engine.
+
+Times two sweeps at equal total events:
+
+  * ``single`` — the PR-1 engine (:func:`repro.core.run_sweep`): one job
+    clock, one spot clock, one queue, the same (r × seeds) grid;
+  * ``region`` — the multi-region engine
+    (:func:`repro.core.run_region_sweep`) on a 4-region heterogeneous
+    topology with routing at admission: per-region job/spot/preempt clock
+    vectors, the packed (sum rmax_r) slot partition, and a least-loaded
+    :class:`repro.core.regions.RoutingKernel` over the notice-aware base —
+    the whole (params × k × regions-config × seeds) batch as ONE jitted
+    nested-vmap program.
+
+The ratio is the price of the region machinery per event (R-wide clock
+minima over demand AND supply, partition masks, the routing hook).  The
+topology splits the paper's λ and μ across regions, so both engines push
+the same total demand against the same total supply.  Writes
+BENCH_region.json next to the repo root (smoke runs write a separate
+gitignored BENCH_region_smoke.json); compile time is excluded for both
+paths (identical-shape warmup calls).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    Exponential,
+    NoticeAwareKernel,
+    Region,
+    RegionTopology,
+    RoutingKernel,
+    ThreePhaseKernel,
+    run_region_sweep,
+    run_sweep,
+)
+
+LAM, MU, K = 1 / 12, 1 / 24, 10.0
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+_SCALE = 1.0
+
+
+def set_scale(scale: float) -> None:
+    global _SCALE
+    _SCALE = scale
+
+
+def _bench_json_path() -> str:
+    name = "BENCH_region.json" if _SCALE == 1.0 else "BENCH_region_smoke.json"
+    return os.path.join(_REPO_ROOT, name)
+
+
+def bench_topology(rmax: int) -> RegionTopology:
+    """The reference 4-region topology: total demand λ and supply μ equal
+    the paper's single-queue rates, split across heterogeneous regions."""
+    return RegionTopology(regions=(
+        Region(Exponential(LAM / 4), Exponential(MU / 4), price=0.5,
+               hazard=0.02, notice=0.5, rmax=rmax),
+        Region(Exponential(LAM / 2), Exponential(MU / 4), price=0.3,
+               hazard=0.05, notice=0.01, rmax=rmax),
+        Region(Exponential(LAM / 8), Exponential(MU / 4), price=0.2,
+               rmax=rmax),
+        Region(Exponential(LAM / 8), Exponential(MU / 4), price=0.1,
+               hazard=0.10, notice=2.0, rmax=rmax),
+    ))
+
+
+def measure_region_throughput(n_r: int = 16, n_seeds: int = 4,
+                              n_events: int | None = None,
+                              rmax: int = 16) -> dict:
+    """Time both engines on the same grid; return a result dict (also
+    JSON-dumped).  ``rmax`` is PER REGION: the region engine carries a
+    4×rmax packed slot array vs the single engine's (4·rmax,) queue, so
+    per-event state is matched, not just total events."""
+    if n_events is None:
+        n_events = max(2_000, int(50_000 * _SCALE))
+    topo = bench_topology(rmax)
+    job = Exponential(LAM)
+    spot = Exponential(MU)
+    rs = jnp.linspace(0.25, 4.0, n_r)
+    key = jax.random.key(0)
+    kern = RoutingKernel(NoticeAwareKernel(checkpoint_time=0.05),
+                         choice="least_loaded")
+
+    common = dict(k=K, n_events=n_events, key=key, n_seeds=n_seeds)
+    # warm both compiled paths with identical shapes
+    run_sweep(job, spot, ThreePhaseKernel(), {"r": rs},
+              rmax=4 * rmax, **common)
+    run_region_sweep(topo, kern, {"r": rs}, **common)
+
+    t0 = time.perf_counter()
+    run_sweep(job, spot, ThreePhaseKernel(), {"r": rs}, rmax=4 * rmax,
+              **common)
+    t_single = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    out = run_region_sweep(topo, kern, {"r": rs}, **common)
+    t_region = time.perf_counter() - t0
+
+    grid_points = n_r * n_seeds
+    total_events = grid_points * n_events
+    result = {
+        "grid_points": grid_points,
+        "n_r": n_r,
+        "n_seeds": n_seeds,
+        "n_regions": topo.n_regions,
+        "n_events_per_point": n_events,
+        "total_events": total_events,
+        "rmax_per_region": rmax,
+        "one_jit": True,  # the whole region grid is one compiled program
+        "t_region_s": t_region,
+        "t_single_s": t_single,
+        "region_events_per_s": total_events / t_region,
+        "single_events_per_s": total_events / t_single,
+        "region_overhead_x": t_region / t_single,
+        "cross_region_frac": float(
+            np.asarray(out["cross_region_frac"]).mean()),
+        "preemptions_total": float(np.asarray(out["preemptions"]).sum()),
+        "backend": jax.default_backend(),
+    }
+    with open(_bench_json_path(), "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def bench_region_engine():
+    """Benchmark-harness entry: rows + headline (region events/s)."""
+    res = measure_region_throughput()
+    rows = [{
+        "name": (f"region/{res['n_regions']}region_"
+                 f"{res['grid_points']}pt_grid"),
+        "us_per_call": res["t_region_s"] * 1e6,
+        "derived": (
+            f"{res['n_regions']} regions × {res['grid_points']} points × "
+            f"{res['n_events_per_point']} ev (one jit): "
+            f"region={res['t_region_s']:.2f}s "
+            f"single={res['t_single_s']:.2f}s "
+            f"overhead={res['region_overhead_x']:.2f}x "
+            f"({res['region_events_per_s']/1e6:.2f}M ev/s; "
+            f"cross-region {res['cross_region_frac']:.0%}; "
+            f"{res['preemptions_total']:.0f} preemptions)"
+        ),
+    }]
+    return rows, res["region_events_per_s"]

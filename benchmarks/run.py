@@ -29,6 +29,7 @@ def main() -> None:
     from benchmarks import engine_kernel_bench
     from benchmarks import market_bench
     from benchmarks import paper_benches as pb
+    from benchmarks import region_bench
     from benchmarks import sweep_bench
     from benchmarks.roofline import bench_engine_roofline, bench_roofline
 
@@ -37,6 +38,7 @@ def main() -> None:
         sweep_bench.set_scale(0.1)
         market_bench.set_scale(0.1)
         engine_kernel_bench.set_scale(0.1)
+        region_bench.set_scale(0.1)
 
     benches = [
         pb.bench_theorem1_cost_law,
@@ -49,6 +51,7 @@ def main() -> None:
         sweep_bench.bench_sweep_engine,  # writes BENCH_sweep.json
         market_bench.bench_market_engine,  # writes BENCH_market.json
         engine_kernel_bench.bench_engine_kernel,  # BENCH_engine_kernel.json
+        region_bench.bench_region_engine,  # writes BENCH_region.json
         bench_engine_roofline,  # reads them back
         bench_roofline,
     ]

@@ -58,6 +58,7 @@ from repro.core.policies import (
     ThreePhasePolicy,
     three_phase_admit_prob,
 )
+from repro.core.regions import RegionTopology, host_route
 
 
 class OnlineAdmissionController:
@@ -95,6 +96,15 @@ class OnlineAdmissionController:
         del qlen_pool
         return int(np.argmin(market.prices()))
 
+    def choose_region(self, topology: RegionTopology,
+                      qlen_region: list[int], home: int = 0,
+                      rule: str = "cheapest") -> int:
+        """Routing hook — the deterministic :func:`repro.core.regions.
+        host_route` rules (host twin of the engine's ``route`` hook)."""
+        return host_route(rule, prices=topology.prices(),
+                          rates=topology.rates(), qlens=qlen_region,
+                          home=home)
+
     def on_job_complete(self, delay: float) -> None:
         self._delays.append(delay)
         if len(self._delays) >= self.window_jobs:
@@ -104,6 +114,22 @@ class OnlineAdmissionController:
             self._updates += 1
             self.r = min(self.r_max, max(0.0, self.r - step * (d - self.delta)))
             self.history.append(self.r)
+
+
+def _sample_interarrival(proc: ArrivalProcess,
+                         rng: np.random.Generator) -> float:
+    """One inter-arrival draw for a host clock (shared by both clusters)."""
+    import jax
+
+    key = jax.random.key(int(rng.integers(2**31)))
+    return float(proc.sample(key))
+
+
+def _sample_preempt_clock(hazard: float, rng: np.random.Generator) -> float:
+    """One Exp(hazard) revocation draw; zero hazard never fires."""
+    if hazard <= 0.0:
+        return math.inf
+    return float(rng.exponential(1.0 / hazard))
 
 
 @dataclasses.dataclass
@@ -184,15 +210,10 @@ class SpotCluster:
 
     # --------------------------------------------------------------- events
     def _sample(self, proc: ArrivalProcess) -> float:
-        import jax
-
-        key = jax.random.key(int(self.rng.integers(2**31)))
-        return float(proc.sample(key))
+        return _sample_interarrival(proc, self.rng)
 
     def _sample_preempt(self, hazard: float) -> float:
-        if hazard <= 0.0:
-            return math.inf
-        return float(self.rng.exponential(1.0 / hazard))
+        return _sample_preempt_clock(hazard, self.rng)
 
     def run(self, n_events: int, *, work_steps: int = 1) -> ClusterStats:
         """Run the merged per-pool clock loop (job-first on exact ties,
@@ -368,3 +389,193 @@ class SpotCluster:
                 del self._step_times[pod_id]
                 return True
         return False
+
+
+@dataclasses.dataclass
+class RegionClusterStats(ClusterStats):
+    """Cluster stats + per-region served/routed counters.
+
+    :class:`MultiRegionCluster` constructs the per-region lists at
+    topology size; a bare ``RegionClusterStats()`` starts them empty.
+    """
+
+    region_served: list = dataclasses.field(default_factory=list)
+    region_routed: list = dataclasses.field(default_factory=list)
+    cross_region: int = 0
+
+
+class MultiRegionCluster:
+    """Host-side multi-region routing over a :class:`RegionTopology`.
+
+    The live twin of the engine's region loop (``run_region_sim``): one
+    merged host clock set — per-region job arrivals, spot slots, and hazard
+    preemptions — with routing at admission through the controller's
+    :meth:`OnlineAdmissionController.choose_region` hook and admission
+    against the *target* region's queue (per-region instances of the
+    three-phase law, exactly the traced :class:`repro.core.regions.
+    RoutingKernel` semantics).  Preempted jobs follow the PR-2 recovery
+    model: pay the partial leg, checkpoint within the notice window
+    (:func:`repro.core.market.checkpoint_within_notice`), re-enter
+    admission in their own region.  Statistics mirror the engine's region
+    accounting so the Theorem-1 region cost law applies unchanged;
+    :meth:`what_if_sweep` hands the live topology to
+    :func:`repro.core.engine.run_region_sweep` for on-device what-if grids.
+    """
+
+    #: routing rules the live host loop supports — the deterministic
+    #: subset of :func:`repro.core.regions.choose_region` (randomized
+    #: rules stay on the traced path; ``what_if_sweep`` accepts them all
+    #: via ``choice=``)
+    HOST_ROUTES = ("home", "cheapest", "fastest", "least_loaded")
+
+    def __init__(self, *, topology: RegionTopology,
+                 controller: OnlineAdmissionController,
+                 k_cost: float = 10.0, route: str = "cheapest",
+                 checkpoint_hours: float = 0.0, seed: int = 0):
+        if route not in self.HOST_ROUTES:
+            raise ValueError(
+                f"unknown host routing rule {route!r}; the live loop "
+                f"supports {self.HOST_ROUTES} (randomized rules run "
+                f"on-device — pass them to what_if_sweep(choice=...))")
+        self.topology = topology
+        self.ctl = controller
+        self.k = k_cost
+        self.route = route
+        self.checkpoint_hours = checkpoint_hours
+        self.rng = np.random.default_rng(seed)
+        self.queues: list[deque[Job]] = [deque()
+                                         for _ in topology.regions]
+        self.stats = RegionClusterStats(
+            region_served=[0] * topology.n_regions,
+            region_routed=[0] * topology.n_regions)
+        self._t = 0.0
+        self._job_counter = 0
+
+    # --------------------------------------------------------------- events
+    def _sample(self, proc: ArrivalProcess) -> float:
+        return _sample_interarrival(proc, self.rng)
+
+    def _sample_preempt(self, hazard: float) -> float:
+        return _sample_preempt_clock(hazard, self.rng)
+
+    def qlen_region(self) -> list[int]:
+        return [len(q) for q in self.queues]
+
+    def run(self, n_events: int) -> RegionClusterStats:
+        """Run the merged per-region clock loop (tie order: slot > preempt
+        > job, regions tie by position — ties are measure-zero for
+        continuous samplers)."""
+        regions = self.topology.regions
+        next_job = [self._sample(r.job) for r in regions]
+        next_slot = [self._sample(r.spot) for r in regions]
+        next_pre = [self._sample_preempt(r.hazard) for r in regions]
+        for _ in range(n_events):
+            r_job = int(np.argmin(next_job))
+            r_slot = int(np.argmin(next_slot))
+            r_pre = int(np.argmin(next_pre))
+            dt = min(next_job[r_job], next_slot[r_slot], next_pre[r_pre])
+            self._t += dt
+            for r in range(len(regions)):
+                next_job[r] -= dt
+                next_slot[r] -= dt
+                if math.isfinite(next_pre[r]):
+                    next_pre[r] -= dt
+            if next_slot[r_slot] <= 0.0:
+                next_slot[r_slot] = self._sample(regions[r_slot].spot)
+                self._spot_arrival(r_slot)
+            elif next_pre[r_pre] <= 0.0:
+                next_pre[r_pre] = self._sample_preempt(regions[r_pre].hazard)
+                self._preempt_event(r_pre)
+            else:
+                next_job[r_job] = self._sample(regions[r_job].job)
+                self._job_arrival(r_job)
+        return self.stats
+
+    def _job_arrival(self, home: int) -> None:
+        self._job_counter += 1
+        target = self.ctl.choose_region(self.topology, self.qlen_region(),
+                                        home=home, rule=self.route)
+        job = Job(self._job_counter, self._t, work_steps=1, pool=target)
+        region = self.topology.regions[target]
+        qlen_t = len(self.queues[target])
+        if (qlen_t < region.rmax
+                and self.ctl.admit(qlen_t, self.rng)):
+            self.queues[target].append(job)
+            self.stats.region_routed[target] += 1
+            if target != home:
+                self.stats.cross_region += 1
+        else:
+            self._run_ondemand(job)
+
+    def _spot_arrival(self, region_idx: int) -> None:
+        queue = self.queues[region_idx]
+        if not queue:
+            return
+        job = queue.popleft()  # FIFO within the region partition
+        region = self.topology.regions[region_idx]
+        delay = self._t - job.arrival_time
+        self.stats.jobs_completed += 1
+        self.stats.spot_served += 1
+        self.stats.region_served[region_idx] += 1
+        self.stats.total_cost += region.price
+        self.stats.spot_cost += region.price
+        self.stats.total_delay += delay
+        self.ctl.on_job_complete(delay)
+
+    def _preempt_event(self, region_idx: int) -> None:
+        """Hazard-clock revocation, the PR-2 recovery model per region."""
+        queue = self.queues[region_idx]
+        if not queue:
+            return  # the revoked instance was idle
+        job = queue.popleft()
+        region = self.topology.regions[region_idx]
+        delay = self._t - job.arrival_time
+        self.stats.preemptions += 1
+        self.stats.total_cost += region.price
+        self.stats.spot_cost += region.price
+        within = checkpoint_within_notice(self.checkpoint_hours,
+                                          region.notice)
+        if within:
+            self.stats.checkpoints += 1
+        if within and self.ctl.admit(len(queue), self.rng):
+            self.stats.restores += 1
+            queue.append(dataclasses.replace(job, arrival_time=self._t))
+            self.stats.total_delay += delay
+            self.stats.jobs_completed += 1  # leg accounting
+            self.ctl.on_job_complete(delay)
+        else:
+            self._run_ondemand(job, extra_delay=delay)
+
+    def _run_ondemand(self, job: Job, extra_delay: float = 0.0) -> None:
+        del job
+        self.stats.jobs_completed += 1
+        self.stats.ondemand_served += 1
+        self.stats.total_cost += self.k
+        self.stats.total_delay += extra_delay
+        self.ctl.on_job_complete(extra_delay)
+
+    # ---------------------------------------------------- on-device what-if
+    def what_if_sweep(self, rs, *, n_events: int = 20_000, n_seeds: int = 2,
+                      k=None, key=None, choice: str | None = None) -> dict:
+        """Sweep admission knobs against THIS cluster's topology, on-device.
+
+        Runs :func:`repro.core.engine.run_region_sweep` with the cluster's
+        topology, routing rule, and recovery parameters — one compiled
+        program for the whole what-if grid, not a host loop.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.engine import run_region_sweep
+        from repro.core.regions import RoutingKernel
+
+        if key is None:
+            key = jax.random.key(int(self.rng.integers(2**31)))
+        kern = RoutingKernel(
+            NoticeAwareKernel(checkpoint_time=self.checkpoint_hours),
+            choice=self.route if choice is None else choice)
+        return run_region_sweep(
+            self.topology, kern, {"r": jnp.asarray(rs, jnp.float32)},
+            k=self.k if k is None else k, n_events=n_events, key=key,
+            n_seeds=n_seeds,
+        )

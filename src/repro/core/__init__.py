@@ -22,6 +22,13 @@ Architecture (post-engine-refactor):
                            pools-config × seeds in one jit; a degenerate
                            1-pool zero-hazard market IS the PR-1 engine,
                            bit-for-bit)
+  * multi-region routing — :mod:`repro.core.regions` (N region-partitioned
+                           queues with per-region job/spot/preempt clocks
+                           and a ``route`` hook; ``run_region_sweep``
+                           batches params × k × regions-config × seeds —
+                           incl. per-region demand via ``job_scales`` —
+                           in one jit; a degenerate 1-region topology IS
+                           the PR-3 engine, bit-for-bit)
   * seed-compat wrappers — :mod:`repro.core.simulator`
                            (``run_queue_sim`` / ``run_single_slot_sim``)
   * Algorithm 1          — :mod:`repro.core.adaptive` (single and batched
@@ -31,7 +38,9 @@ New scenarios plug in as policy kernels + arrival processes: an engine
 kernel is ~10 lines (see ``ThreePhaseKernel``), and everything downstream
 (sweeps, Algorithm 1, benchmarks) is generic over it.  Market-aware kernels
 add a pool-choice hook (``admit_market``) and a preemption-recovery hook
-(``on_preempt``); see :class:`repro.core.market.NoticeAwareKernel`.
+(``on_preempt``); region-aware kernels add a routing hook (``route``) —
+wrap any kernel in :class:`repro.core.regions.RoutingKernel` to get one.
+docs/kernels.md is the full protocol reference.
 """
 from repro.core.arrivals import (
     ArrivalProcess,
@@ -57,8 +66,10 @@ from repro.core.cost import (
     cost_lower_bound,
     market_cost_lower_bound,
     pi0_from_cost,
+    region_cost_lower_bound,
     theorem1_cost,
     theorem1_market_cost,
+    theorem1_region_cost,
 )
 from repro.core.engine import (
     DEFAULT_CHUNK_EVENTS,
@@ -66,15 +77,34 @@ from repro.core.engine import (
     MarketState,
     MarketWindowStats,
     PolicyKernel,
+    RegionState,
+    RegionWindowStats,
     WindowStats,
     run_market_sim,
     run_market_sweep,
+    run_region_sim,
+    run_region_sweep,
     run_sim,
     run_sweep,
     summarize,
     summarize_market,
+    summarize_region,
 )
-from repro.core.lp import knapsack_lp, market_knapsack_lp, waittime_lp
+from repro.core.lp import (
+    knapsack_lp,
+    market_knapsack_lp,
+    region_knapsack_lp,
+    waittime_lp,
+)
+from repro.core.regions import (
+    Region,
+    RegionTopology,
+    RegionView,
+    RoutingKernel,
+    as_topology,
+    choose_region,
+    host_route,
+)
 from repro.core.market import (
     MarketPolicyKernel,
     NoticeAwareKernel,
@@ -111,14 +141,20 @@ __all__ = [
     "adaptive_admission_control_batched", "mm1n_pi", "theorem2_cost",
     "theorem2_delta_max", "theorem5_cost", "theorem5_delta",
     "cost_lower_bound", "market_cost_lower_bound", "pi0_from_cost",
-    "theorem1_cost", "theorem1_market_cost", "DEFAULT_CHUNK_EVENTS",
+    "region_cost_lower_bound", "theorem1_cost", "theorem1_market_cost",
+    "theorem1_region_cost", "DEFAULT_CHUNK_EVENTS",
     "EngineState", "MarketState",
-    "MarketWindowStats", "PolicyKernel", "WindowStats", "run_market_sim",
-    "run_market_sweep", "run_sim", "run_sweep", "summarize",
-    "summarize_market", "knapsack_lp", "market_knapsack_lp", "waittime_lp",
+    "MarketWindowStats", "PolicyKernel", "RegionState", "RegionWindowStats",
+    "WindowStats", "run_market_sim",
+    "run_market_sweep", "run_region_sim", "run_region_sweep", "run_sim",
+    "run_sweep", "summarize",
+    "summarize_market", "summarize_region", "knapsack_lp",
+    "market_knapsack_lp", "region_knapsack_lp", "waittime_lp",
     "MarketPolicyKernel", "NoticeAwareKernel", "PoolChoiceKernel",
     "PoolState", "SpotMarket", "SpotPool", "as_market",
-    "checkpoint_within_notice", "choose_pool", "SingleSlotKernel",
+    "checkpoint_within_notice", "choose_pool", "Region", "RegionTopology",
+    "RegionView", "RoutingKernel", "as_topology", "choose_region",
+    "host_route", "SingleSlotKernel",
     "SingleSlotPolicy", "ThreePhaseKernel", "ThreePhasePolicy",
     "three_phase_admit_prob", "run_queue_sim", "run_single_slot_sim",
     "DeterministicWait", "ExponentialWait", "InfiniteWait", "TwoPointWait",

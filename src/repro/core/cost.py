@@ -73,3 +73,74 @@ def market_cost_lower_bound(k: float, lam: float, delta: float, market, *,
     return market_knapsack_lp(k, lam, delta, market,
                               include_preemption=include_preemption)[
                                   "objective"]
+
+
+# ---------------------------------------------------------------------------
+# Multi-region generalization (see repro.core.regions)
+# ---------------------------------------------------------------------------
+
+
+def theorem1_region_cost(k: float, lam: float, rates, prices, utils) -> float:
+    """Region Theorem 1: E[C] from per-region slot utilizations.
+
+    Identical algebra to :func:`theorem1_market_cost` — under routing, a
+    region's spot supply is a pool serving the pooled job stream:
+    ``E[C] = k − Σ_r (k − c_r)(μ_r/λ)u_r`` with ``u_r`` the per-region slot
+    utilization the engine reports as ``region_utilization`` and ``λ`` the
+    *total* (all-region) job arrival rate.  Preemption-free identity, like
+    its market twin.
+    """
+    return theorem1_market_cost(k, lam, rates, prices, utils)
+
+
+def region_cost_lower_bound(k: float, delta: float, topology, *,
+                            routed: bool = True,
+                            include_preemption: bool = False) -> float:
+    """Policy-independent multi-region bound on E[C].
+
+    ``routed=True`` (default): cross-region routing pools all demand against
+    all supply — the :func:`repro.core.lp.region_knapsack_lp` floor.
+    ``routed=False``: no routing; region r is a closed single-queue problem
+    at its own ``λ_r``, and the bound is the λ-weighted average of the
+    per-region floors.  Pooling relaxes the per-region constraints, so
+    routed ≤ home-only always; the gap is the value routing can capture
+    (tested in tests/test_core_regions.py).
+    """
+    from repro.core.lp import market_knapsack_lp, region_knapsack_lp
+
+    if routed:
+        return region_knapsack_lp(k, delta, topology,
+                                  include_preemption=include_preemption)[
+                                      "objective"]
+    lams = topology.job_rates()
+    lam_total = float(lams.sum())
+    total = 0.0
+    for r, lam_r in zip(topology.regions, lams):
+        view = _SingleRegionSupply(r)
+        obj = market_knapsack_lp(k, float(lam_r), delta, view,
+                                 include_preemption=include_preemption)[
+                                     "objective"]
+        total += (lam_r / lam_total) * obj
+    return float(total)
+
+
+class _SingleRegionSupply:
+    """One region's supply as a 1-pool market view for the knapsack LP."""
+
+    def __init__(self, region):
+        self._r = region
+
+    def rates(self):
+        import numpy as np
+
+        return np.array([self._r.spot_rate()], np.float64)
+
+    def prices(self):
+        import numpy as np
+
+        return np.array([self._r.price], np.float64)
+
+    def hazards(self):
+        import numpy as np
+
+        return np.array([self._r.hazard], np.float64)

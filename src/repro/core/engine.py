@@ -8,7 +8,9 @@ small kernel implementations (:class:`repro.core.policies.ThreePhaseKernel`,
 
 Policy-kernel protocol
 ----------------------
-A kernel is a hashable (frozen-dataclass) static object with one traced hook::
+(Full reference: docs/kernels.md — all four hooks, tie order, worked
+example.)  A kernel is a hashable (frozen-dataclass) static object with
+one traced hook::
 
     admit(params, qlen, key) -> (admit: bool[], budget: f32[])
 
@@ -88,6 +90,7 @@ import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
 from repro.core.market import PoolState, SpotMarket, as_market
+from repro.core.regions import RegionTopology, RegionView, as_topology
 from repro.kernels.sweep import (batched_events, batched_event_windows_ref,
                                  default_interpret)
 
@@ -472,7 +475,9 @@ def _run_sweep_pallas_jit(job, spot, kernel, rmax, n_events, chunk_events,
 #: the module docstring).
 INT_STATS = ("jobs_arrived", "jobs_completed", "spot_served", "ondemand",
              "preemptions", "resumed", "pool_served", "pool_spot_arrivals",
-             "pool_preempted")
+             "pool_preempted", "routed_home", "region_served",
+             "region_spot_arrivals", "region_preempted", "region_jobs",
+             "region_routed")
 
 
 def summarize(stats: WindowStats) -> dict:
@@ -1069,25 +1074,33 @@ def summarize_market(stats: MarketWindowStats) -> dict:
     return out
 
 
-def _broadcast_market_params(market: SpotMarket, mp_overrides: dict,
+def _broadcast_config_params(n: int, cfg: dict, overrides: dict,
                              grid_shape: tuple) -> dict:
-    """Merge pools-config overrides into the market's traced params.
+    """Merge config overrides into a traced per-pool/per-region params dict.
 
-    Each override broadcasts to ``grid_shape + (P,)``: scalars fill every
-    pool, ``(P,)`` vectors fix a config, ``grid_shape + (P,)`` arrays sweep
-    the pool configuration itself.
+    Each override broadcasts to ``grid_shape + (n,)``: scalars fill every
+    entry, ``(n,)`` vectors fix a config, ``grid_shape + (n,)`` arrays sweep
+    the configuration itself.  Shared by the market (pools axis) and region
+    (regions axis) sweep entry points; non-overridden keys keep their dtype
+    (the region config carries an int32 ``rmax`` vector).
     """
-    n = market.n_pools
-    mp = market.params()
-    for name, val in mp_overrides.items():
+    for name, val in overrides.items():
         if val is None:
             continue
         v = jnp.asarray(val, jnp.float32)
         if v.ndim == 0:
             v = jnp.broadcast_to(v, (n,))
-        mp[name] = v
+        cfg[name] = v
     return {name: jnp.broadcast_to(v, grid_shape + (n,))
-            .reshape((-1, n)) for name, v in mp.items()}
+            .reshape((-1, n)) for name, v in cfg.items()}
+
+
+def _broadcast_market_params(market: SpotMarket, mp_overrides: dict,
+                             grid_shape: tuple) -> dict:
+    """Pools-config overrides → flat traced market params (see
+    :func:`_broadcast_config_params`)."""
+    return _broadcast_config_params(market.n_pools, market.params(),
+                                    mp_overrides, grid_shape)
 
 
 def run_market_sim(
@@ -1214,5 +1227,680 @@ def run_market_sweep(
     per_pool = _POOL_FIELDS | {"pool_utilization"}
     return {name: v.reshape(grid_shape
                             + ((n_seeds, n) if name in per_pool
+                               else (n_seeds,)))
+            for name, v in out.items()}
+
+
+# ===========================================================================
+# Multi-region routing: N queues, per-region clocks, routing at admission
+# ===========================================================================
+#
+# Third traversal of the event-loop architecture (PR 4).  The region loop
+# widens the market loop one more level: the scalar job clock becomes a
+# per-region ``next_job`` vector, the pool clock vectors become per-region
+# supply clocks (one pool per region — exactly the PR-2 market clocks,
+# re-indexed), and the single ``(rmax,)`` queue becomes N per-region
+# ``(rmax_r,)`` partitions packed as one ``(sum rmax_r,)`` slot array with a
+# *static* slot→region map.  The kernel protocol gains a routing hook
+# (``route(params, qlens, region_state, key) -> region``, see
+# repro.core.regions); the admission law then runs against the TARGET
+# region's queue length, so each region runs a per-region instance of the
+# paper's policy.
+#
+# Event-time ties resolve spot > preempt > deadline > job (the PR-2 order);
+# ties between regions resolve by position (argmin), measure-zero for
+# continuous samplers.
+#
+# With a degenerate topology (1 region, zero hazard, unit price) and a
+# kernel without a ``route`` hook, every expression below reduces bitwise
+# to the market loop's (and hence, by the PR-2 ledger, to the PR-1 engine):
+# the routing machinery is statically removed (no extra key split, target =
+# home = 0), the per-region min/argmin over length-1 vectors are exact
+# identities, the static all-zero slot→region map makes every eligibility
+# mask equal the occupancy mask, and the extra stat terms accumulate into
+# separate fields.  tests/test_core_regions.py freezes that contract
+# against run_sim/run_sweep AND run_market_sim/run_market_sweep under all
+# three executors.
+
+
+class RegionWindowStats(NamedTuple):
+    """Per-window accumulators for the region loop.
+
+    The first ten fields mirror :class:`WindowStats` exactly (same order,
+    same accumulation semantics); ``resumed``/``spot_cost`` mirror the
+    market tail; the per-region counters close the set.  ``region_jobs``
+    counts arrivals by HOME region; ``region_routed`` counts admissions by
+    TARGET region — their difference is the cross-region flow the routing
+    hook created (``routed_home`` tracks the non-crossing admissions).
+    """
+
+    jobs_arrived: jax.Array
+    jobs_completed: jax.Array
+    spot_served: jax.Array
+    ondemand: jax.Array
+    cost_sum: jax.Array
+    delay_sum: jax.Array
+    time_elapsed: jax.Array
+    empty_time: jax.Array
+    spot_arrivals: jax.Array
+    spot_found_empty: jax.Array
+    resumed: jax.Array  # i32: preempted legs that checkpointed + re-queued
+    spot_cost: jax.Array  # f32: spend on region spot (incl. partial legs)
+    routed_home: jax.Array  # i32: admissions whose target == home region
+    region_served: jax.Array  # (R,) i32 completions per region
+    region_spot_arrivals: jax.Array  # (R,) i32 slot arrivals per region
+    region_preempted: jax.Array  # (R,) i32 preemption hits per region
+    region_jobs: jax.Array  # (R,) i32 job arrivals per HOME region
+    region_routed: jax.Array  # (R,) i32 admissions per TARGET region
+
+    @staticmethod
+    def zeros(n_regions: int) -> "RegionWindowStats":
+        z = jnp.zeros((), jnp.float32)
+        zi = jnp.zeros((), jnp.int32)
+        zr = jnp.zeros((n_regions,), jnp.int32)
+        return RegionWindowStats(zi, zi, zi, zi, z, z, z, z, zi, zi,
+                                 zi, z, zi, zr, zr, zr, zr, zr)
+
+
+_REGION_FIELDS = frozenset({"region_served", "region_spot_arrivals",
+                            "region_preempted", "region_jobs",
+                            "region_routed"})
+
+
+class RegionState(NamedTuple):
+    key: jax.Array
+    next_job: jax.Array  # (R,) per-region job-arrival clocks
+    next_spot: jax.Array  # (R,) per-region spot-slot clocks
+    next_preempt: jax.Array  # (R,) per-region preemption clocks (INF = never)
+    ages: jax.Array  # (S,) packed slots, S = sum rmax_r
+    budgets: jax.Array  # (S,)
+    occ: jax.Array  # (S,) bool
+    order: jax.Array  # (S,) int32 join sequence number
+    next_seq: jax.Array
+    qlen: jax.Array  # (R,) int32 queued jobs per region
+
+
+def _slot_region_iota(topo: RegionTopology, iota_s: jax.Array) -> jax.Array:
+    """The static slot→region map as ops on an iota (no array constants:
+    inline jnp constants would be hoisted as consts, which pallas_call
+    rejects — same rule as the module-level np scalars)."""
+    reg = jnp.zeros_like(iota_s)
+    for off in topo.slot_offsets()[1:]:
+        reg = reg + (iota_s >= np.int32(off)).astype(jnp.int32)
+    return reg
+
+
+def _region_fold_keys(topo: RegionTopology, k: jax.Array) -> list:
+    """Per-region sampling keys, label-independent via fold_in(region.tag).
+
+    The 1-region topology uses ``k`` directly — the PR-1/PR-2 key layout —
+    so the degenerate engine is bit-for-bit the PR-3 engine.
+    """
+    if topo.n_regions == 1:
+        return [k]
+    return [jax.random.fold_in(k, r.tag) for r in topo.regions]
+
+
+def _sample_job_clocks(topo: RegionTopology, k_job: jax.Array,
+                       rp: dict) -> jax.Array:
+    samples = [r.job.sample(k)
+               for r, k in zip(topo.regions, _region_fold_keys(topo, k_job))]
+    return jnp.stack(samples) * rp["job_scale"]
+
+
+def _sample_region_spot_clocks(topo: RegionTopology, k_spot: jax.Array,
+                               rp: dict) -> jax.Array:
+    samples = [r.spot.sample(k)
+               for r, k in zip(topo.regions, _region_fold_keys(topo, k_spot))]
+    return jnp.stack(samples) * rp["spot_scale"]
+
+
+def _sample_region_preempt_clocks(topo: RegionTopology, k_pre: jax.Array,
+                                  rp: dict) -> jax.Array:
+    """Exponential(h_r) revocation clocks; h_r = 0 never fires (INF)."""
+    u = jnp.stack([
+        jax.random.exponential(jax.random.fold_in(k_pre, r.tag),
+                               dtype=jnp.float32)
+        for r in topo.regions
+    ])
+    h = rp["hazard"]
+    return jnp.where(h > 0.0, u / jnp.maximum(h, jnp.float32(1e-30)), INF)
+
+
+def init_region_state(key: jax.Array, topo: RegionTopology, rp: dict,
+                      preempt_on: bool) -> RegionState:
+    kj, ks, kc = jax.random.split(key, 3)
+    n, s = topo.n_regions, topo.total_slots
+    if preempt_on:
+        next_preempt = _sample_region_preempt_clocks(
+            topo, jax.random.fold_in(ks, 2**31 - 1), rp)
+    else:
+        next_preempt = jnp.full((n,), INF, jnp.float32)
+    return RegionState(
+        key=kc,
+        next_job=_sample_job_clocks(topo, kj, rp),
+        next_spot=_sample_region_spot_clocks(topo, ks, rp),
+        next_preempt=next_preempt,
+        ages=jnp.zeros((s,), jnp.float32),
+        budgets=jnp.full((s,), INF, jnp.float32),
+        occ=jnp.zeros((s,), jnp.bool_),
+        order=jnp.zeros((s,), jnp.int32),
+        next_seq=jnp.zeros((), jnp.int32),
+        qlen=jnp.zeros((n,), jnp.int32),
+    )
+
+
+def _kernel_region_admit(kernel, params, qlen_t, view: RegionView, key):
+    """Run the admission law against the target region's queue length.
+
+    Market-aware kernels (``admit_market``) see the regions as their pools
+    (one supply pool per region — the :class:`PoolState` vectors ARE the
+    region vectors); their pool choice is ignored in favour of the routing
+    decision.  Legacy kernels call ``admit`` with the PR-1 key layout.
+    """
+    if hasattr(kernel, "admit_market"):
+        ps = PoolState(price=view.price, hazard=view.hazard,
+                       notice=view.notice, rate=view.rate,
+                       qlen_pool=view.qlen_region)
+        admit, budget, _pool = kernel.admit_market(params, qlen_t, ps, key)
+        return admit, budget
+    return kernel.admit(params, qlen_t, key)
+
+
+def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
+                  carry: RegionState, stats: RegionWindowStats, params,
+                  rp: dict, k_cost: jax.Array
+                  ) -> tuple[RegionState, RegionWindowStats]:
+    """One merged event: job arrival (in some region) / region spot slot /
+    region preemption / wait deadline.  Same dense one-hot-select style as
+    :func:`_engine_event` (see the note there on scatter vs select under
+    vmap); expression structure deliberately mirrors :func:`_market_event`
+    so the degenerate reduction is auditable term by term.
+    """
+    n_regions, n_slots = topo.n_regions, topo.total_slots
+    has_route = hasattr(kernel, "route")
+    if preempt_on and has_route:
+        key, k_job, k_spot, k_pol, k_pre, k_rt = jax.random.split(carry.key, 6)
+    elif preempt_on:
+        key, k_job, k_spot, k_pol, k_pre = jax.random.split(carry.key, 5)
+        k_rt = None
+    elif has_route:
+        key, k_job, k_spot, k_pol, k_rt = jax.random.split(carry.key, 5)
+    else:
+        key, k_job, k_spot, k_pol = jax.random.split(carry.key, 4)
+        k_rt = None
+    iota_s = jax.lax.iota(jnp.int32, n_slots)
+    iota_r = jax.lax.iota(jnp.int32, n_regions)
+    slot_region = _slot_region_iota(topo, iota_s)
+
+    budgets_masked = jnp.where(carry.occ, carry.budgets, INF)
+    deadline = jnp.min(budgets_masked)
+    defect_slot = jnp.argmin(budgets_masked)
+
+    min_job = jnp.min(carry.next_job)
+    home = jnp.argmin(carry.next_job).astype(jnp.int32)
+    min_spot = jnp.min(carry.next_spot)
+    spot_region = jnp.argmin(carry.next_spot).astype(jnp.int32)
+    if preempt_on:
+        min_pre = jnp.min(carry.next_preempt)
+        pre_region = jnp.argmin(carry.next_preempt).astype(jnp.int32)
+        dt = jnp.minimum(jnp.minimum(min_job, min_spot),
+                         jnp.minimum(deadline, min_pre))
+        is_spot = min_spot <= jnp.minimum(min_job,
+                                          jnp.minimum(deadline, min_pre))
+        is_pre = (~is_spot) & (min_pre <= jnp.minimum(min_job, deadline))
+        is_deadline = (~is_spot) & (~is_pre) & (deadline <= min_job)
+        is_job = (~is_spot) & (~is_pre) & (~is_deadline)
+    else:
+        pre_region = jnp.zeros((), jnp.int32)
+        dt = jnp.minimum(jnp.minimum(min_job, min_spot), deadline)
+        is_spot = min_spot <= jnp.minimum(min_job, deadline)
+        is_pre = jnp.zeros((), jnp.bool_)
+        is_deadline = (~is_spot) & (deadline <= min_job)
+        is_job = (~is_spot) & (~is_deadline)
+
+    ages = carry.ages + dt
+    budgets = jnp.where(carry.occ, carry.budgets - dt, INF)
+
+    # ---- job arrival in region `home`: route, then ask the admission law --
+    view = RegionView(
+        home=home,
+        price=rp["price"], hazard=rp["hazard"], notice=rp["notice"],
+        rate=rp["rate"] / rp["spot_scale"],
+        job_rate=rp["job_rate"] / rp["job_scale"],
+        qlen_region=carry.qlen,
+        free_slots=jnp.maximum(rp["rmax"] - carry.qlen, 0),
+    )
+    if has_route:
+        target = jnp.asarray(kernel.route(params, carry.qlen, view, k_rt),
+                             jnp.int32)
+    else:
+        target = home
+    qlen_t = jnp.sum(jnp.where(iota_r == target, carry.qlen, 0))
+    rmax_t = jnp.sum(jnp.where(iota_r == target, rp["rmax"], 0))
+    admit_raw, budget = _kernel_region_admit(kernel, params, qlen_t, view,
+                                             k_pol)
+    admit = is_job & admit_raw & (qlen_t < rmax_t)
+    od_now = is_job & (~admit)
+    target_mask = slot_region == target
+    join_slot = jnp.argmin(jnp.where(target_mask,
+                                     carry.occ.astype(jnp.int32), 2))
+
+    # ---- region spot slot: serve the FIFO-oldest job queued there --------
+    eligible_s = carry.occ & (slot_region == spot_region)
+    serve_slot = jnp.argmin(jnp.where(eligible_s, carry.order, _ORDER_MAX))
+    has_elig = jnp.any(eligible_s)
+    served = is_spot & has_elig
+    wait_served = jnp.sum(jnp.where(iota_s == serve_slot, ages, 0.0))
+    price_s = rp["price"][spot_region]
+
+    # ---- region preemption: revoke the FIFO-oldest job in that region ----
+    if preempt_on:
+        eligible_p = carry.occ & (slot_region == pre_region)
+        pre_slot = jnp.argmin(jnp.where(eligible_p, carry.order, _ORDER_MAX))
+        pre_hit = is_pre & jnp.any(eligible_p)
+        age_pre = jnp.sum(jnp.where(iota_s == pre_slot, ages, 0.0))
+        # re-admission sees the region's queue WITHOUT the revoked job (the
+        # host orchestrator pops it before consulting the admission law)
+        qlen_p = jnp.sum(jnp.where(iota_r == pre_region, carry.qlen, 0))
+        qlen_wo = jnp.maximum(qlen_p - 1, 0)
+        resume_raw = _kernel_on_preempt(kernel, params, age_pre,
+                                        rp["notice"][pre_region], qlen_wo,
+                                        k_pre)
+        resume = pre_hit & resume_raw
+        defect_pre = pre_hit & (~resume)
+        price_p = rp["price"][pre_region]
+    else:
+        pre_slot = jnp.zeros((), jnp.int32)
+        pre_hit = jnp.zeros((), jnp.bool_)
+        age_pre = jnp.zeros((), jnp.float32)
+        resume = jnp.zeros((), jnp.bool_)
+        defect_pre = jnp.zeros((), jnp.bool_)
+        price_p = jnp.zeros((), jnp.float32)
+
+    # ---- deadline: the minimal-budget job defects to on-demand ----
+    defected = is_deadline
+    age_defect = jnp.sum(jnp.where(iota_s == defect_slot, ages, 0.0))
+
+    leave = served | defected | defect_pre
+    leave_slot = jnp.where(served, serve_slot,
+                           jnp.where(defected, defect_slot, pre_slot))
+    leave_region = jnp.sum(jnp.where(iota_s == leave_slot, slot_region, 0))
+
+    join_mask = admit & (iota_s == join_slot)
+    leave_mask = leave & (iota_s == leave_slot)
+    resume_mask = resume & (iota_s == pre_slot)
+    ages = jnp.where(join_mask | resume_mask, 0.0, ages)
+    budgets = jnp.where(join_mask, budget,
+                        jnp.where(resume_mask, INF, budgets))
+    occ = (carry.occ | join_mask) & (~leave_mask)
+    order = jnp.where(join_mask | resume_mask, carry.next_seq, carry.order)
+
+    fire_j = is_job & (iota_r == home)
+    next_job = jnp.where(fire_j, _sample_job_clocks(topo, k_job, rp),
+                         carry.next_job - dt)
+    fire_s = is_spot & (iota_r == spot_region)
+    next_spot = jnp.where(fire_s,
+                          _sample_region_spot_clocks(topo, k_spot, rp),
+                          carry.next_spot - dt)
+    if preempt_on:
+        fire_p = is_pre & (iota_r == pre_region)
+        next_preempt = jnp.where(
+            fire_p, _sample_region_preempt_clocks(topo, k_pre, rp),
+            carry.next_preempt - dt)
+    else:
+        next_preempt = carry.next_preempt
+
+    new_carry = RegionState(
+        key=key,
+        next_job=next_job,
+        next_spot=next_spot,
+        next_preempt=next_preempt,
+        ages=ages,
+        budgets=budgets,
+        occ=occ,
+        order=order,
+        next_seq=carry.next_seq + jnp.where(admit | resume, 1, 0),
+        qlen=(carry.qlen
+              + jnp.where(admit & (iota_r == target), 1, 0)
+              - jnp.where(leave & (iota_r == leave_region), 1, 0)),
+    )
+    completed = od_now | served | defected | defect_pre | resume
+    new_stats = RegionWindowStats(
+        jobs_arrived=stats.jobs_arrived + is_job.astype(jnp.int32),
+        jobs_completed=stats.jobs_completed + completed.astype(jnp.int32),
+        spot_served=stats.spot_served + served.astype(jnp.int32),
+        ondemand=stats.ondemand
+        + (od_now | defected | defect_pre).astype(jnp.int32),
+        cost_sum=stats.cost_sum
+        + jnp.where(served, price_s, 0.0)
+        + jnp.where(od_now | defected | defect_pre, k_cost, 0.0)
+        + jnp.where(pre_hit, price_p, 0.0),
+        delay_sum=stats.delay_sum
+        + jnp.where(served, wait_served, 0.0)
+        + jnp.where(defected, age_defect, 0.0)
+        + jnp.where(pre_hit, age_pre, 0.0),
+        time_elapsed=stats.time_elapsed + dt,
+        empty_time=stats.empty_time
+        + jnp.where(jnp.sum(carry.qlen) == 0, dt, 0.0),
+        spot_arrivals=stats.spot_arrivals + is_spot.astype(jnp.int32),
+        spot_found_empty=stats.spot_found_empty
+        + (is_spot & (~has_elig)).astype(jnp.int32),
+        resumed=stats.resumed + resume.astype(jnp.int32),
+        spot_cost=stats.spot_cost
+        + jnp.where(served, price_s, 0.0)
+        + jnp.where(pre_hit, price_p, 0.0),
+        routed_home=stats.routed_home
+        + (admit & (target == home)).astype(jnp.int32),
+        region_served=stats.region_served
+        + (fire_s & served).astype(jnp.int32),
+        region_spot_arrivals=stats.region_spot_arrivals
+        + fire_s.astype(jnp.int32),
+        region_preempted=stats.region_preempted
+        + (pre_hit & (iota_r == pre_region)).astype(jnp.int32),
+        region_jobs=stats.region_jobs + fire_j.astype(jnp.int32),
+        region_routed=stats.region_routed
+        + (admit & (iota_r == target)).astype(jnp.int32),
+    )
+    return new_carry, new_stats
+
+
+def run_region_window(topo: RegionTopology, kernel, preempt_on: bool,
+                      state: RegionState, params, rp: dict,
+                      k_cost: jax.Array, n_events: int
+                      ) -> tuple[RegionState, RegionWindowStats]:
+    """Run ``n_events`` merged region events; one window of float32 sums."""
+    step = functools.partial(_region_event, topo, kernel, preempt_on,
+                             params=params, rp=rp, k_cost=k_cost)
+    return _scan_window(step, RegionWindowStats.zeros(topo.n_regions),
+                        state, n_events)
+
+
+def run_region_chunked(topo: RegionTopology, kernel, preempt_on: bool,
+                       state: RegionState, params, rp: dict,
+                       k_cost: jax.Array, n_events: int, chunk_events: int
+                       ) -> tuple[RegionState, RegionWindowStats]:
+    step = functools.partial(_region_event, topo, kernel, preempt_on,
+                             params=params, rp=rp, k_cost=k_cost)
+    return _scan_chunked(step, RegionWindowStats.zeros(topo.n_regions),
+                         state, n_events, chunk_events)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("topo", "kernel", "preempt_on", "n_events",
+                     "chunk_events", "burn_in"),
+)
+def _run_region_sim_jit(topo, kernel, preempt_on, n_events, chunk_events,
+                        burn_in, params, rp, k_cost, key):
+    state = init_region_state(key, topo, rp, preempt_on)
+    if burn_in:
+        state, _ = run_region_window(topo, kernel, preempt_on, state, params,
+                                     rp, k_cost, burn_in)
+        state = _rebase_order(state)
+    return run_region_chunked(topo, kernel, preempt_on, state, params, rp,
+                              k_cost, n_events, chunk_events)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("topo", "kernel", "preempt_on", "n_events",
+                     "chunk_events", "burn_in"),
+)
+def _run_region_sweep_jit(topo, kernel, preempt_on, n_events, chunk_events,
+                          burn_in, params, rp, k_cost, keys):
+    """(grid × regions-config × seeds) fleet as one nested-vmap XLA program
+    (broadcast ``in_axes``; see :func:`_flat_lane_args`)."""
+
+    def one(p, r, kc, key):
+        state = init_region_state(key, topo, r, preempt_on)
+        if burn_in:
+            state, _ = run_region_window(topo, kernel, preempt_on, state, p,
+                                         r, kc, burn_in)
+            state = _rebase_order(state)
+        _, stats = run_region_chunked(topo, kernel, preempt_on, state, p, r,
+                                      kc, n_events, chunk_events)
+        return stats
+
+    per_seeds = jax.vmap(one, in_axes=(None, None, None, 0))
+    return jax.vmap(per_seeds, in_axes=(0, 0, 0, None))(params, rp, k_cost,
+                                                        keys)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("topo", "kernel", "preempt_on", "n_events",
+                     "chunk_events", "burn_in", "tile", "interpret",
+                     "executor"),
+)
+def _run_region_sweep_pallas_jit(topo, kernel, preempt_on, n_events,
+                                 chunk_events, burn_in, tile, interpret,
+                                 params, rp, k_cost, keys,
+                                 executor="pallas"):
+    """The region fleet through the same batched-event kernel family: the
+    engine-state blocks grow a region axis — (tile, R) clock vectors,
+    (tile, sum rmax_r) packed slot arrays — and :func:`_region_event` is
+    the vmap-ed kernel body.  Bit-for-bit the ``executor="ref"`` scan
+    oracle; integer stats bitwise / float sums to ~ulp vs
+    :func:`_run_region_sweep_jit` (see the module docstring)."""
+    g, s = k_cost.shape[0], keys.shape[0]
+    (params_f, rp_f), k_f, keys_f = _flat_lane_args((params, rp), k_cost,
+                                                    keys)
+    params_b = {"params": params_f, "rp": rp_f, "k": k_f}
+    state0 = jax.vmap(
+        lambda key, r: init_region_state(key, topo, r,
+                                         preempt_on))(keys_f, rp_f)
+
+    def step(carry, stats, p):
+        return _region_event(topo, kernel, preempt_on, carry, stats,
+                             p["params"], p["rp"], p["k"])
+
+    plan = _window_plan(n_events, chunk_events, burn_in)
+    if executor == "ref":
+        _, stats = batched_event_windows_ref(
+            step, state0, params_b, RegionWindowStats.zeros(topo.n_regions),
+            plan, epilogue=_rebase_order)
+    else:
+        _, stats = batched_events(
+            step, state0, params_b, RegionWindowStats.zeros(topo.n_regions),
+            plan, tile=tile, interpret=interpret, epilogue=_rebase_order)
+    if burn_in:
+        stats = jax.tree.map(lambda x: x[:, 1:], stats)
+    return _unflatten_lanes(stats, g, s)
+
+
+def summarize_region(stats: RegionWindowStats) -> dict:
+    """Float64 chunk reduction + region-specific derived statistics.
+
+    Extends :func:`summarize`'s dict with preemption counters, spot spend,
+    per-job statistics (leg vs job accounting as in
+    :func:`summarize_market`), per-region served/arrival/utilization
+    arrays (trailing region axis), and the routing flow:
+    ``region_jobs`` (arrivals by home region), ``region_routed``
+    (admissions by target region), and ``cross_region_frac`` (the fraction
+    of admitted jobs the routing hook sent away from home).
+    """
+    n_common = len(WindowStats._fields)
+    out = summarize(WindowStats(*stats[:n_common]))
+
+    def _red(name):
+        x = getattr(stats, name)
+        axis = -2 if name in _REGION_FIELDS else -1
+        return np.asarray(x, np.float64).sum(axis=axis)
+
+    resumed = _red("resumed")
+    spot_cost = _red("spot_cost")
+    routed_home = _red("routed_home")
+    region_served = _red("region_served")
+    region_arrivals = _red("region_spot_arrivals")
+    region_preempted = _red("region_preempted")
+    region_jobs = _red("region_jobs")
+    region_routed = _red("region_routed")
+    cost_sum = _red("cost_sum")
+    delay_sum = _red("delay_sum")
+    final = np.maximum(_red("spot_served") + _red("ondemand"), 1.0)
+    admitted = region_routed.sum(axis=-1)
+    cross = np.where(admitted > 0,
+                     1.0 - routed_home / np.maximum(admitted, 1.0), 0.0)
+    out.update({
+        "preemptions": region_preempted.sum(axis=-1),
+        "resumed": resumed,
+        "spot_cost": spot_cost,
+        "avg_cost_job": cost_sum / final,
+        "avg_delay_job": delay_sum / final,
+        "routed_home": routed_home,
+        "cross_region_frac": cross,
+        "region_served": region_served,
+        "region_spot_arrivals": region_arrivals,
+        "region_preempted": region_preempted,
+        "region_jobs": region_jobs,
+        "region_routed": region_routed,
+        "region_utilization": region_served / np.maximum(region_arrivals,
+                                                         1.0),
+    })
+    return out
+
+
+def run_region_sim(
+    topology: RegionTopology,
+    kernel,
+    params=None,
+    *,
+    k: float = 10.0,
+    n_events: int,
+    key: jax.Array,
+    burn_in: int = 0,
+    chunk_events: int | None = DEFAULT_CHUNK_EVENTS,
+    impl: str = "xla",
+    tile: int = 256,
+    interpret: bool | None = None,
+) -> dict:
+    """Run one routing policy on one topology point; scalar long-run stats.
+
+    A degenerate topology (:attr:`RegionTopology.is_degenerate`) with a
+    non-routing kernel reproduces :func:`run_sim` (and the 1-pool
+    :func:`run_market_sim`) bit-for-bit per seed.  ``chunk_events`` /
+    ``impl`` behave exactly as in :func:`run_sim`.
+    """
+    topology = as_topology(topology)
+    params = {} if params is None else params
+    rp = topology.params()
+    chunk = n_events if chunk_events is None else min(chunk_events, n_events)
+    if impl in ("pallas", "ref"):
+        stats = _run_region_sweep_pallas_jit(
+            topology, kernel, topology.preemptible, n_events, chunk, burn_in,
+            tile, default_interpret() if interpret is None else interpret,
+            jax.tree.map(lambda x: jnp.asarray(x)[None], params),
+            jax.tree.map(lambda x: jnp.asarray(x)[None], rp),
+            jnp.float32(k)[None], _raw_keys(key)[None], executor=impl)
+        stats = jax.tree.map(lambda x: x[0, 0], stats)
+    elif impl == "xla":
+        _, stats = _run_region_sim_jit(topology, kernel,
+                                       topology.preemptible, n_events, chunk,
+                                       burn_in, params, rp, jnp.float32(k),
+                                       key)
+    else:
+        raise ValueError(
+            f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
+    return {name: (float(v) if np.ndim(v) == 0 else np.asarray(v))
+            for name, v in summarize_region(stats).items()}
+
+
+def run_region_sweep(
+    topology: RegionTopology,
+    kernel,
+    params=None,
+    *,
+    k: float | np.ndarray | jax.Array = 10.0,
+    vector_params=None,
+    prices=None,
+    hazards=None,
+    notices=None,
+    spot_scales=None,
+    job_scales=None,
+    n_events: int,
+    key: jax.Array,
+    n_seeds: int = 1,
+    burn_in: int = 0,
+    chunk_events: int | None = DEFAULT_CHUNK_EVENTS,
+    impl: str = "xla",
+    tile: int = 256,
+    interpret: bool | None = None,
+) -> dict:
+    """Run a (params × k × regions-config × seeds) grid as ONE jitted call.
+
+    ``params`` leaves and ``k`` broadcast to a common grid shape exactly as
+    in :func:`run_sweep`.  ``vector_params`` is a dict of *vector-valued*
+    kernel parameters whose LAST axis is carried into every grid point
+    instead of being swept: an ``(m,)`` leaf fixes one vector for the whole
+    grid, a ``grid_shape + (m,)`` leaf sweeps the vector itself (e.g.
+    ``{"region_logits": logits}`` for ``choice="weighted"`` routing — the
+    logits stay ``(R,)`` per point while ``r`` sweeps).  ``prices``/
+    ``hazards``/``notices``/
+    ``spot_scales``/``job_scales`` optionally override the topology's
+    static region configuration per grid point: a scalar applies to every
+    region, an ``(R,)`` vector fixes one config, and a ``grid_shape + (R,)``
+    array sweeps the region configuration inside the same compiled program
+    (the regions-config axis of the grid — ``job_scales`` sweeps *demand*
+    per region, the axis the market engine does not have).
+
+    ``impl``/``tile``/``interpret`` select the executor exactly as in
+    :func:`run_sweep`; the Pallas path widens the VMEM-resident state tile
+    with the (tile, R) clock vectors and the (tile, sum rmax_r) packed slot
+    partition — bit-for-bit the ``"ref"`` oracle, integer stats bitwise /
+    float sums to ~ulp vs ``"xla"`` (the module docstring's executor
+    contract).
+
+    Returns :func:`summarize_region`'s dict; scalar statistics are shaped
+    ``grid_shape + (n_seeds,)`` and per-region statistics
+    ``grid_shape + (n_seeds, R)``.
+    """
+    topology = as_topology(topology)
+    n = topology.n_regions
+    params = {} if params is None else params
+    params = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params)
+    vparams = {} if vector_params is None else jax.tree.map(
+        lambda x: jnp.asarray(x, jnp.float32), dict(vector_params))
+    if vparams and not isinstance(params, dict):
+        raise TypeError("vector_params requires params to be a dict")
+    k = jnp.asarray(k, jnp.float32)
+    overrides = {"price": prices, "hazard": hazards, "notice": notices,
+                 "spot_scale": spot_scales, "job_scale": job_scales}
+    override_shapes = [jnp.asarray(v).shape[:-1]
+                       for v in overrides.values()
+                       if v is not None and jnp.asarray(v).ndim > 1]
+    grid_shape = jnp.broadcast_shapes(
+        k.shape, *(x.shape for x in jax.tree.leaves(params)),
+        *(x.shape[:-1] for x in jax.tree.leaves(vparams)),
+        *override_shapes,
+    )
+    flat = lambda x: jnp.broadcast_to(x, grid_shape).reshape(-1)
+    vflat = lambda x: jnp.broadcast_to(
+        x, grid_shape + x.shape[-1:]).reshape((-1,) + x.shape[-1:])
+    params_flat = {**jax.tree.map(flat, params),
+                   **jax.tree.map(vflat, vparams)} if vparams \
+        else jax.tree.map(flat, params)
+    k_flat = flat(k)
+    rp_flat = _broadcast_config_params(n, topology.params(), overrides,
+                                       grid_shape)
+    preempt_on = topology.preemptible or hazards is not None
+    keys = jax.random.split(key, n_seeds)
+    chunk = n_events if chunk_events is None else min(chunk_events, n_events)
+    if impl in ("pallas", "ref"):
+        stats = _run_region_sweep_pallas_jit(
+            topology, kernel, preempt_on, n_events, chunk, burn_in, tile,
+            default_interpret() if interpret is None else interpret,
+            params_flat, rp_flat, k_flat, _raw_keys(keys), executor=impl)
+    elif impl == "xla":
+        stats = _run_region_sweep_jit(topology, kernel, preempt_on, n_events,
+                                      chunk, burn_in, params_flat, rp_flat,
+                                      k_flat, keys)
+    else:
+        raise ValueError(
+            f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
+    out = summarize_region(stats)
+    per_region = _REGION_FIELDS | {"region_utilization"}
+    return {name: v.reshape(grid_shape
+                            + ((n_seeds, n) if name in per_region
                                else (n_seeds,)))
             for name, v in out.items()}

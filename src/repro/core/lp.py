@@ -100,6 +100,25 @@ def market_knapsack_lp(k: float, lam: float, delta: float, market, *,
     }
 
 
+def region_knapsack_lp(k: float, delta: float, topology, *,
+                       include_preemption: bool = False) -> dict:
+    """Pooled multi-region knapsack: the cost floor WITH cross-region routing.
+
+    With routing at admission, any job can be served by any region's spot
+    supply, so the supply side of a :class:`repro.core.regions.RegionTopology`
+    is formally a pool market over the *total* demand rate λ = Σ_r λ_r:
+    region r's slot rate μ_r, price c_r, and hazard h_r fill the
+    :func:`market_knapsack_lp` greedy exactly (the topology's host views
+    ``rates()``/``prices()``/``hazards()`` are deliberately pool-shaped).
+    The home-only counterpart — each region its own closed single-queue
+    problem — is :func:`repro.core.cost.region_cost_lower_bound` with
+    ``routed=False``; the gap between the two is the value of routing.
+    """
+    lam_total = float(topology.total_job_rate())
+    return market_knapsack_lp(k, lam_total, delta, topology,
+                              include_preemption=include_preemption)
+
+
 @dataclasses.dataclass
 class WaitTimeLPResult:
     support: np.ndarray  # (≤2,) wait values

@@ -11,7 +11,9 @@ single continuous knob ``r = N̂ + q`` (eq. 12):
 shared by the traced engine kernel, the host-side policy descriptor, and the
 cluster orchestrator (the seed carried three copies).
 
-The engine kernels (see :mod:`repro.core.engine` for the protocol):
+The engine kernels (see docs/kernels.md for the full protocol reference —
+``admit`` / ``admit_market`` / ``on_preempt`` / ``route``, the event-tie
+order, and a worked custom-kernel example):
 
   * :class:`ThreePhaseKernel` — Theorem 4; params ``{"r": f32}``; admitted
     jobs wait indefinitely.

@@ -24,8 +24,11 @@ kernel body.
 
 Genericity: the kernel is parameterized by a per-lane ``step(state, stats,
 params) -> (state, stats)`` event body and arbitrary state/params/stats
-pytrees, so the single-pool engine and the spot-market engine (per-pool
-clock vectors, per-pool stat counters) share this one kernel family.  The
+pytrees, so the single-pool engine, the spot-market engine (per-pool
+clock vectors, per-pool stat counters), and the multi-region engine
+(state blocks grown a region axis: (tile, R) job/spot/preempt clock
+vectors, (tile, sum rmax_r) packed slot partitions) share this one
+kernel family with zero kernel-side changes.  The
 body is ``jax.vmap``-ed across the tile inside the kernel, which keeps each
 lane's arithmetic — including its threefry PRNG stream — bit-for-bit
 identical to the ``lax.scan`` reference path (see ref.py and
