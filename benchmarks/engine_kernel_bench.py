@@ -20,18 +20,19 @@ Interpretation of the numbers (recorded in the JSON):
     separately under ``"interpret": true`` so they are never compared
     against the compiled target.
 
-Compile time is excluded for both executors (identical-shape warmup).
+Compile time is recorded separately from the steady-state numbers
+(``benchmarks/_timing.py``).
 """
 from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._timing import time_compiled
 from benchmarks.market_bench import bench_market
 from repro.core import (
     Exponential,
@@ -106,11 +107,13 @@ def measure_engine_kernel(n_r: int = 16, n_seeds: int = 4,
     grid_points = n_r * n_seeds
     total_events = grid_points * n_events
 
-    def timed(fn):
-        fn()  # warm the compiled path
-        t0 = time.perf_counter()
-        out = fn()
-        return out, time.perf_counter() - t0
+    compile_s = {}
+
+    def timed(fn, label=None):
+        out, timing = time_compiled(fn)
+        if label:
+            compile_s[label] = timing["t_compile_s"]
+        return out, timing["t_run_s"]
 
     result = {
         "grid_points": grid_points,
@@ -119,6 +122,7 @@ def measure_engine_kernel(n_r: int = 16, n_seeds: int = 4,
         "n_events_per_point": n_events,
         "total_events": total_events,
         "rmax": rmax,
+        "rng": "split",  # the frozen stream (see BENCH_event_rng.json)
         "tile": TILE,
         "event_block": min(1 << 16, n_events),
         "interpret": interpret,
@@ -131,10 +135,11 @@ def measure_engine_kernel(n_r: int = 16, n_seeds: int = 4,
 
     kern = ThreePhaseKernel()
     xla, t_xla = timed(lambda: run_sweep(job, spot, kern, {"r": rs},
-                                         **common))
+                                         **common), "single_xla")
     pal, t_pal = timed(lambda: run_sweep(job, spot, kern, {"r": rs},
                                          impl="pallas", tile=TILE,
-                                         interpret=interpret, **common))
+                                         interpret=interpret, **common),
+                       "single_pallas")
     ref = run_sweep(job, spot, kern, {"r": rs}, impl="ref", **common)
     result["single"] = {
         "t_xla_s": t_xla,
@@ -148,10 +153,10 @@ def measure_engine_kernel(n_r: int = 16, n_seeds: int = 4,
     market = bench_market()  # the reference 4-pool market
     mkern = NoticeAwareKernel(checkpoint_time=0.05)
     xla_m, t_xla_m = timed(lambda: run_market_sweep(
-        job, market, mkern, {"r": rs}, **common))
+        job, market, mkern, {"r": rs}, **common), "market_xla")
     pal_m, t_pal_m = timed(lambda: run_market_sweep(
         job, market, mkern, {"r": rs}, impl="pallas", tile=TILE,
-        interpret=interpret, **common))
+        interpret=interpret, **common), "market_pallas")
     ref_m = run_market_sweep(job, market, mkern, {"r": rs}, impl="ref",
                              **common)
     result["market"] = {
@@ -164,6 +169,7 @@ def measure_engine_kernel(n_r: int = 16, n_seeds: int = 4,
         **_parity(pal_m, ref_m, xla_m),
     }
 
+    result["t_compile_s"] = compile_s
     with open(_bench_json_path(), "w") as f:
         json.dump(result, f, indent=2)
     return result

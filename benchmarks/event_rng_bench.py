@@ -1,0 +1,166 @@
+"""Event-loop RNG streams: slab vs split, at matched grid/events (PR 5).
+
+Times the market and region sweep engines on BOTH PRNG streams at exactly
+the configurations of BENCH_market.json / BENCH_region.json (same grids,
+same event counts, same kernels — the split numbers here ARE those benches'
+engines re-measured in-process, i.e. the PR-4 baseline):
+
+  * ``rng="split"`` — the frozen per-event key-ladder stream: 4-6
+    ``jax.random.split`` threefry calls plus a per-pool/per-region
+    ``fold_in`` + ``exponential`` clock refresh per event;
+  * ``rng="slab"``  — one counter-based uint32 slab per float32 window,
+    draws consumed by static column index, preemption clock vectors
+    superposed into one scalar clock (see EXPERIMENTS.md §"Event-loop
+    RNG").
+
+Writes BENCH_event_rng.json next to the repo root (smoke runs write a
+separate BENCH_event_rng_smoke.json, the committed copy of which is the
+CI perf-regression baseline — tools/check_bench_regression.py fails the
+bench-smoke job if the slab/split speedup ratio drops >30%, or absolute
+slab events/s >60%, below it).  The
+acceptance target: slab region events/s ≥ 2× the split (PR-4) baseline,
+with compile and steady-state times recorded separately for every cell.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._timing import time_compiled
+from benchmarks.market_bench import bench_market
+from benchmarks.region_bench import bench_topology
+from repro.core import (
+    Exponential,
+    NoticeAwareKernel,
+    RoutingKernel,
+    ThreePhaseKernel,
+    run_market_sweep,
+    run_region_sweep,
+    run_sweep,
+)
+
+LAM, MU, K = 1 / 12, 1 / 24, 10.0
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+_SCALE = 1.0
+
+
+def set_scale(scale: float) -> None:
+    global _SCALE
+    _SCALE = scale
+
+
+def _bench_json_path() -> str:
+    name = ("BENCH_event_rng.json" if _SCALE == 1.0
+            else "BENCH_event_rng_smoke.json")
+    return os.path.join(_REPO_ROOT, name)
+
+
+def measure_event_rng(n_r: int = 16, n_seeds: int = 4,
+                      n_events: int | None = None,
+                      rmax_region: int = 16, rmax_market: int = 64) -> dict:
+    """Both loops × both streams at the BENCH_market/BENCH_region configs."""
+    if n_events is None:
+        n_events = max(2_000, int(50_000 * _SCALE))
+    job = Exponential(LAM)
+    market = bench_market()
+    topo = bench_topology(rmax_region)
+    rs = jnp.linspace(0.25, 4.0, n_r)
+    key = jax.random.key(0)
+    mkern = NoticeAwareKernel(checkpoint_time=0.05)
+    rkern = RoutingKernel(NoticeAwareKernel(checkpoint_time=0.05),
+                          choice="least_loaded")
+    grid_points = n_r * n_seeds
+    total_events = grid_points * n_events
+    common = dict(k=K, n_events=n_events, key=key, n_seeds=n_seeds)
+
+    result = {
+        "grid_points": grid_points,
+        "n_r": n_r,
+        "n_seeds": n_seeds,
+        "n_events_per_point": n_events,
+        "total_events": total_events,
+        "n_pools": market.n_pools,
+        "n_regions": topo.n_regions,
+        "rmax_market": rmax_market,
+        "rmax_per_region": rmax_region,
+        "backend": jax.default_backend(),
+    }
+
+    for loop, run in (
+        ("single", lambda rng: run_sweep(
+            Exponential(LAM), Exponential(MU), ThreePhaseKernel(),
+            {"r": rs}, rmax=rmax_market, rng=rng, **common)),
+        ("market", lambda rng: run_market_sweep(
+            job, market, mkern, {"r": rs}, rmax=rmax_market, rng=rng,
+            **common)),
+        ("region", lambda rng: run_region_sweep(
+            topo, rkern, {"r": rs}, rng=rng, **common)),
+    ):
+        cells = {}
+        for rng in ("split", "slab"):
+            out, timing = time_compiled(lambda rng=rng: run(rng))
+            cells[rng] = {
+                "rng": rng,
+                **timing,
+                "events_per_s": total_events / timing["t_run_s"],
+                "preemptions_total": float(
+                    np.asarray(out["preemptions"]).sum())
+                if "preemptions" in out else 0.0,
+            }
+        cells["slab_speedup_x"] = (cells["slab"]["events_per_s"]
+                                   / cells["split"]["events_per_s"])
+        result[loop] = cells
+
+    # per-event overhead of the market machinery vs the single-queue
+    # engine ON THE SAME STREAM (the BENCH_market.json ratio, per stream)
+    for loop in ("market", "region"):
+        for rng in ("split", "slab"):
+            result[loop][rng]["overhead_vs_single_x"] = (
+                result["single"][rng]["events_per_s"]
+                / result[loop][rng]["events_per_s"])
+
+    result["headline"] = {
+        # the acceptance target: slab region sweep vs the split (PR-4
+        # baseline) stream, same grid, same events
+        "region_split_events_per_s":
+            result["region"]["split"]["events_per_s"],
+        "region_slab_events_per_s":
+            result["region"]["slab"]["events_per_s"],
+        "region_slab_speedup_x": result["region"]["slab_speedup_x"],
+        "market_slab_speedup_x": result["market"]["slab_speedup_x"],
+        "market_overhead_split_x":
+            result["market"]["split"]["overhead_vs_single_x"],
+        "market_overhead_slab_x":
+            result["market"]["slab"]["overhead_vs_single_x"],
+        "target_region_speedup_x": 2.0,
+        "meets_target": result["region"]["slab_speedup_x"] >= 2.0,
+    }
+    with open(_bench_json_path(), "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def bench_event_rng():
+    """Benchmark-harness entry: rows + headline (slab region events/s)."""
+    res = measure_event_rng()
+    rows = []
+    for loop in ("market", "region"):
+        c = res[loop]
+        rows.append({
+            "name": f"event_rng/{loop}/{res['grid_points']}pt_grid",
+            "us_per_call": c["slab"]["t_run_s"] * 1e6,
+            "derived": (
+                f"{res['grid_points']} pts × {res['n_events_per_point']} ev: "
+                f"slab={c['slab']['events_per_s']/1e6:.2f}M ev/s "
+                f"split={c['split']['events_per_s']/1e6:.2f}M ev/s "
+                f"speedup={c['slab_speedup_x']:.2f}x "
+                f"(compile slab={c['slab']['t_compile_s']:.1f}s "
+                f"split={c['split']['t_compile_s']:.1f}s)"
+            ),
+        })
+    return rows, res["headline"]["region_slab_events_per_s"]

@@ -13,19 +13,19 @@ Times two sweeps at equal total events:
 The ratio is the price of the market machinery per event (wider clock
 minima, pool-eligibility masks, preemption branch).  Writes
 BENCH_market.json next to the repo root (smoke runs write a separate
-gitignored BENCH_market_smoke.json); compile time is excluded for both
-paths (identical-shape warmup calls).
+gitignored BENCH_market_smoke.json); compile time is recorded separately
+from the steady-state numbers (``benchmarks/_timing.py``).
 """
 from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._timing import time_compiled
 from repro.core import (
     Exponential,
     NoticeAwareKernel,
@@ -79,17 +79,13 @@ def measure_market_throughput(n_r: int = 16, n_seeds: int = 4,
 
     common = dict(k=K, n_events=n_events, key=key, n_seeds=n_seeds,
                   rmax=rmax)
-    # warm both compiled paths with identical shapes
-    run_sweep(job, spot, ThreePhaseKernel(), {"r": rs}, **common)
-    run_market_sweep(job, market, kern, {"r": rs}, **common)
-
-    t0 = time.perf_counter()
-    run_sweep(job, spot, ThreePhaseKernel(), {"r": rs}, **common)
-    t_single = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    out = run_market_sweep(job, market, kern, {"r": rs}, **common)
-    t_market = time.perf_counter() - t0
+    _, single_timing = time_compiled(
+        lambda: run_sweep(job, spot, ThreePhaseKernel(), {"r": rs},
+                          **common))
+    out, market_timing = time_compiled(
+        lambda: run_market_sweep(job, market, kern, {"r": rs}, **common))
+    t_single = single_timing["t_run_s"]
+    t_market = market_timing["t_run_s"]
 
     grid_points = n_r * n_seeds
     total_events = grid_points * n_events
@@ -101,9 +97,12 @@ def measure_market_throughput(n_r: int = 16, n_seeds: int = 4,
         "n_events_per_point": n_events,
         "total_events": total_events,
         "rmax": rmax,
+        "rng": "split",  # the frozen stream (see BENCH_event_rng.json)
         "one_jit": True,  # the whole market grid is one compiled program
         "t_market_s": t_market,
         "t_single_s": t_single,
+        "t_market_compile_s": market_timing["t_compile_s"],
+        "t_single_compile_s": single_timing["t_compile_s"],
         "market_events_per_s": total_events / t_market,
         "single_events_per_s": total_events / t_single,
         "market_overhead_x": t_market / t_single,

@@ -17,19 +17,19 @@ minima over demand AND supply, partition masks, the routing hook).  The
 topology splits the paper's λ and μ across regions, so both engines push
 the same total demand against the same total supply.  Writes
 BENCH_region.json next to the repo root (smoke runs write a separate
-gitignored BENCH_region_smoke.json); compile time is excluded for both
-paths (identical-shape warmup calls).
+gitignored BENCH_region_smoke.json); compile time is recorded separately
+from the steady-state numbers (``benchmarks/_timing.py``).
 """
 from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._timing import time_compiled
 from repro.core import (
     Exponential,
     NoticeAwareKernel,
@@ -90,19 +90,13 @@ def measure_region_throughput(n_r: int = 16, n_seeds: int = 4,
                          choice="least_loaded")
 
     common = dict(k=K, n_events=n_events, key=key, n_seeds=n_seeds)
-    # warm both compiled paths with identical shapes
-    run_sweep(job, spot, ThreePhaseKernel(), {"r": rs},
-              rmax=4 * rmax, **common)
-    run_region_sweep(topo, kern, {"r": rs}, **common)
-
-    t0 = time.perf_counter()
-    run_sweep(job, spot, ThreePhaseKernel(), {"r": rs}, rmax=4 * rmax,
-              **common)
-    t_single = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    out = run_region_sweep(topo, kern, {"r": rs}, **common)
-    t_region = time.perf_counter() - t0
+    _, single_timing = time_compiled(
+        lambda: run_sweep(job, spot, ThreePhaseKernel(), {"r": rs},
+                          rmax=4 * rmax, **common))
+    out, region_timing = time_compiled(
+        lambda: run_region_sweep(topo, kern, {"r": rs}, **common))
+    t_single = single_timing["t_run_s"]
+    t_region = region_timing["t_run_s"]
 
     grid_points = n_r * n_seeds
     total_events = grid_points * n_events
@@ -114,9 +108,12 @@ def measure_region_throughput(n_r: int = 16, n_seeds: int = 4,
         "n_events_per_point": n_events,
         "total_events": total_events,
         "rmax_per_region": rmax,
+        "rng": "split",  # the frozen stream (see BENCH_event_rng.json)
         "one_jit": True,  # the whole region grid is one compiled program
         "t_region_s": t_region,
         "t_single_s": t_single,
+        "t_region_compile_s": region_timing["t_compile_s"],
+        "t_single_compile_s": single_timing["t_compile_s"],
         "region_events_per_s": total_events / t_region,
         "single_events_per_s": total_events / t_single,
         "region_overhead_x": t_region / t_single,

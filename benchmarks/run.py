@@ -27,6 +27,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import engine_kernel_bench
+    from benchmarks import event_rng_bench
     from benchmarks import market_bench
     from benchmarks import paper_benches as pb
     from benchmarks import region_bench
@@ -39,6 +40,7 @@ def main() -> None:
         market_bench.set_scale(0.1)
         engine_kernel_bench.set_scale(0.1)
         region_bench.set_scale(0.1)
+        event_rng_bench.set_scale(0.1)
 
     benches = [
         pb.bench_theorem1_cost_law,
@@ -52,6 +54,7 @@ def main() -> None:
         market_bench.bench_market_engine,  # writes BENCH_market.json
         engine_kernel_bench.bench_engine_kernel,  # BENCH_engine_kernel.json
         region_bench.bench_region_engine,  # writes BENCH_region.json
+        event_rng_bench.bench_event_rng,  # writes BENCH_event_rng.json
         bench_engine_roofline,  # reads them back
         bench_roofline,
     ]

@@ -9,8 +9,8 @@ events:
 
 Writes BENCH_sweep.json next to the repo root so CI and
 ``benchmarks/roofline.py`` can consume the numbers.  Compile time is
-excluded for BOTH paths (each is warmed with an identical-shape call first);
-the comparison is steady-state wall clock.
+recorded separately from steady-state run time for the batched path
+(``benchmarks/_timing.py``); the comparison is steady-state wall clock.
 """
 from __future__ import annotations
 
@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._timing import time_compiled
 from repro.core import Exponential, ThreePhaseKernel, run_queue_sim, run_sweep
 
 LAM, MU, K = 1 / 12, 1 / 24, 10.0
@@ -54,16 +55,14 @@ def measure_sweep_speedup(n_r: int = 16, n_seeds: int = 4,
     key = jax.random.key(0)
     seed_keys = jax.random.split(key, n_seeds)
 
-    # warm both compiled paths
-    run_sweep(job, spot, kernel, {"r": rs}, k=K, n_events=n_events, key=key,
-              n_seeds=n_seeds, rmax=rmax)
+    out, sweep_timing = time_compiled(
+        lambda: run_sweep(job, spot, kernel, {"r": rs}, k=K,
+                          n_events=n_events, key=key, n_seeds=n_seeds,
+                          rmax=rmax))
+    t_sweep = sweep_timing["t_run_s"]
+    # warm the per-point compiled path too (its compile cost is one trace)
     run_queue_sim(job, spot, k=K, r=0.25, n_events=n_events,
                   key=seed_keys[0], rmax=rmax)
-
-    t0 = time.perf_counter()
-    out = run_sweep(job, spot, kernel, {"r": rs}, k=K, n_events=n_events,
-                    key=key, n_seeds=n_seeds, rmax=rmax)
-    t_sweep = time.perf_counter() - t0
 
     t0 = time.perf_counter()
     loop_cost = np.zeros((n_r, n_seeds))
@@ -83,7 +82,9 @@ def measure_sweep_speedup(n_r: int = 16, n_seeds: int = 4,
         "n_events_per_point": n_events,
         "total_events": total_events,
         "rmax": rmax,
+        "rng": "split",  # the frozen stream (see BENCH_event_rng.json)
         "t_sweep_s": t_sweep,
+        "t_sweep_compile_s": sweep_timing["t_compile_s"],
         "t_loop_s": t_loop,
         "speedup": t_loop / t_sweep,
         "sweep_events_per_s": total_events / t_sweep,

@@ -48,6 +48,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
+from repro.core.clocks import hazard_clock, thinning_pick
 from repro.core.market import (
     NoticeAwareKernel,
     SpotMarket,
@@ -125,11 +126,19 @@ def _sample_interarrival(proc: ArrivalProcess,
     return float(proc.sample(key))
 
 
-def _sample_preempt_clock(hazard: float, rng: np.random.Generator) -> float:
-    """One Exp(hazard) revocation draw; zero hazard never fires."""
-    if hazard <= 0.0:
-        return math.inf
-    return float(rng.exponential(1.0 / hazard))
+def _sample_superposed_preempt(hazards,
+                               rng: np.random.Generator) -> tuple[float, int]:
+    """(time, pool) of the next preemption under the superposed clock.
+
+    Host twin of the engine's ``rng="slab"`` preemption machinery: ONE
+    ``Exp(Σ h_p)`` draw plus a hazard-weighted thinning pick replaces the
+    per-pool clock vector — the same shared law
+    (:func:`repro.core.clocks.hazard_clock` /
+    :func:`repro.core.clocks.thinning_pick`), exactly the vector clocks'
+    joint (min, argmin) distribution.
+    """
+    return (hazard_clock(hazards, rng.random()),
+            thinning_pick(hazards, rng.random()))
 
 
 @dataclasses.dataclass
@@ -212,29 +221,27 @@ class SpotCluster:
     def _sample(self, proc: ArrivalProcess) -> float:
         return _sample_interarrival(proc, self.rng)
 
-    def _sample_preempt(self, hazard: float) -> float:
-        return _sample_preempt_clock(hazard, self.rng)
-
     def run(self, n_events: int, *, work_steps: int = 1) -> ClusterStats:
         """Run the merged per-pool clock loop (job-first on exact ties,
         the host's historical order; ties are measure-zero for continuous
         samplers)."""
         pools = self.market.pools
+        hazards = self.market.hazards()
         next_job = self._sample(self.jobs)
         next_slot = [self._sample(p.arrival) for p in pools]
-        next_pre = [self._sample_preempt(p.hazard) for p in pools]
+        # ONE superposed preemption clock for the whole market (the shared
+        # hazard-superposition law; see _sample_superposed_preempt)
+        next_pre, p_pre = _sample_superposed_preempt(hazards, self.rng)
         for _ in range(n_events):
             p_slot = int(np.argmin(next_slot))
             m_slot = next_slot[p_slot]
-            p_pre = int(np.argmin(next_pre))
-            m_pre = next_pre[p_pre]
-            dt = min(next_job, m_slot, m_pre)
+            dt = min(next_job, m_slot, next_pre)
             self._t += dt
             next_job -= dt
             for p in range(len(pools)):
                 next_slot[p] -= dt
-                if math.isfinite(next_pre[p]):
-                    next_pre[p] -= dt
+            if math.isfinite(next_pre):
+                next_pre -= dt
             if next_job <= 0.0:
                 next_job = self._sample(self.jobs)
                 self._job_arrival(work_steps)
@@ -242,8 +249,10 @@ class SpotCluster:
                 next_slot[p_slot] = self._sample(pools[p_slot].arrival)
                 self._spot_arrival(p_slot)
             else:
-                next_pre[p_pre] = self._sample_preempt(pools[p_pre].hazard)
-                self._preempt_event(p_pre)
+                fired = p_pre
+                next_pre, p_pre = _sample_superposed_preempt(hazards,
+                                                             self.rng)
+                self._preempt_event(fired)
         return self.stats
 
     def _qlen_pool(self) -> list[int]:
@@ -455,9 +464,6 @@ class MultiRegionCluster:
     def _sample(self, proc: ArrivalProcess) -> float:
         return _sample_interarrival(proc, self.rng)
 
-    def _sample_preempt(self, hazard: float) -> float:
-        return _sample_preempt_clock(hazard, self.rng)
-
     def qlen_region(self) -> list[int]:
         return [len(q) for q in self.queues]
 
@@ -466,26 +472,30 @@ class MultiRegionCluster:
         > job, regions tie by position — ties are measure-zero for
         continuous samplers)."""
         regions = self.topology.regions
+        hazards = self.topology.hazards()
         next_job = [self._sample(r.job) for r in regions]
         next_slot = [self._sample(r.spot) for r in regions]
-        next_pre = [self._sample_preempt(r.hazard) for r in regions]
+        # ONE superposed preemption clock across regions (shared law; see
+        # _sample_superposed_preempt)
+        next_pre, r_pre = _sample_superposed_preempt(hazards, self.rng)
         for _ in range(n_events):
             r_job = int(np.argmin(next_job))
             r_slot = int(np.argmin(next_slot))
-            r_pre = int(np.argmin(next_pre))
-            dt = min(next_job[r_job], next_slot[r_slot], next_pre[r_pre])
+            dt = min(next_job[r_job], next_slot[r_slot], next_pre)
             self._t += dt
             for r in range(len(regions)):
                 next_job[r] -= dt
                 next_slot[r] -= dt
-                if math.isfinite(next_pre[r]):
-                    next_pre[r] -= dt
+            if math.isfinite(next_pre):
+                next_pre -= dt
             if next_slot[r_slot] <= 0.0:
                 next_slot[r_slot] = self._sample(regions[r_slot].spot)
                 self._spot_arrival(r_slot)
-            elif next_pre[r_pre] <= 0.0:
-                next_pre[r_pre] = self._sample_preempt(regions[r_pre].hazard)
-                self._preempt_event(r_pre)
+            elif next_pre <= 0.0:
+                fired = r_pre
+                next_pre, r_pre = _sample_superposed_preempt(hazards,
+                                                             self.rng)
+                self._preempt_event(fired)
             else:
                 next_job[r_job] = self._sample(regions[r_job].job)
                 self._job_arrival(r_job)

@@ -31,19 +31,39 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import ClassVar, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.clocks import exp_from_u as _exp_from_u
+
 
 @dataclasses.dataclass(frozen=True)
 class ArrivalProcess:
-    """Base renewal process; subclasses define sampling and moments."""
+    """Base renewal process; subclasses define sampling and moments.
+
+    Two traceable sampling backends: :meth:`sample` draws from a PRNG key
+    (the engine's ``rng="split"`` stream), while :meth:`sample_u` transforms
+    ``u_dim`` pre-drawn float32 uniforms — the ``rng="slab"`` stream, where
+    the engine hands the event body slab columns instead of keys (see
+    :mod:`repro.core.clocks`).  The two backends are equal in distribution,
+    not bitwise.
+    """
+
+    #: uniform draws :meth:`sample_u` consumes (None = no slab sampler;
+    #: the engine's ``rng="slab"`` raises and points at ``rng="split"``).
+    #: A ClassVar, not a dataclass field, so frozen subclasses keep their
+    #: positional constructors.
+    u_dim: ClassVar[int | None] = None
 
     def sample(self, key: jax.Array) -> jax.Array:
         """Draw one inter-arrival time (scalar, float32). Traceable."""
+        raise NotImplementedError
+
+    def sample_u(self, u: jax.Array) -> jax.Array:
+        """Transform ``u[:u_dim]`` float32 uniforms into one draw."""
         raise NotImplementedError
 
     def mean(self) -> float:
@@ -65,8 +85,13 @@ class ArrivalProcess:
 class Exponential(ArrivalProcess):
     rate_: float
 
+    u_dim: ClassVar[int] = 1
+
     def sample(self, key):
         return jax.random.exponential(key, dtype=jnp.float32) / self.rate_
+
+    def sample_u(self, u):
+        return _exp_from_u(u[0]) / jnp.float32(self.rate_)
 
     def mean(self):
         return 1.0 / self.rate_
@@ -81,8 +106,21 @@ class Gamma(ArrivalProcess):
     shape: float
     scale: float = 1.0
 
+    @property
+    def u_dim(self):
+        # Gamma(n, scale) with integer n is a sum of n unit exponentials —
+        # a fixed-draw-count sampler.  Non-integer shapes need jax's
+        # rejection sampler (unbounded draws), which the slab stream cannot
+        # drive; u_dim=None routes those configs to rng="split".
+        n = round(self.shape)
+        return n if (n > 0 and math.isclose(n, self.shape)) else None
+
     def sample(self, key):
         return jax.random.gamma(key, self.shape, dtype=jnp.float32) * self.scale
+
+    def sample_u(self, u):
+        n = self.u_dim
+        return -jnp.sum(jnp.log1p(-u[:n])) * jnp.float32(self.scale)
 
     def mean(self):
         return self.shape * self.scale
@@ -100,10 +138,15 @@ class Uniform(ArrivalProcess):
     low: float
     high: float
 
+    u_dim: ClassVar[int] = 1
+
     def sample(self, key):
         return jax.random.uniform(
             key, dtype=jnp.float32, minval=self.low, maxval=self.high
         )
+
+    def sample_u(self, u):
+        return jnp.float32(self.low) + u[0] * jnp.float32(self.high - self.low)
 
     def mean(self):
         return 0.5 * (self.low + self.high)
@@ -120,8 +163,14 @@ class Uniform(ArrivalProcess):
 class Deterministic(ArrivalProcess):
     value: float
 
+    u_dim: ClassVar[int] = 0
+
     def sample(self, key):
         del key
+        return jnp.asarray(self.value, jnp.float32)
+
+    def sample_u(self, u):
+        del u
         return jnp.asarray(self.value, jnp.float32)
 
     def mean(self):
@@ -144,6 +193,8 @@ class BathtubGCP(ArrivalProcess):
     tau2: float = 0.8
     b: float = 24.0
 
+    u_dim: ClassVar[int] = 3
+
     def sample(self, key):
         k1, k2, k3 = jax.random.split(key, 3)
         pick_head = jax.random.uniform(k1) < self.A
@@ -153,6 +204,15 @@ class BathtubGCP(ArrivalProcess):
         tail = jnp.maximum(
             self.b - jax.random.exponential(k3, dtype=jnp.float32) * self.tau2, 0.0
         )
+        return jnp.where(pick_head, head, tail)
+
+    def sample_u(self, u):
+        pick_head = u[0] < jnp.float32(self.A)
+        head = jnp.minimum(_exp_from_u(u[1]) * jnp.float32(self.tau1),
+                           jnp.float32(self.b))
+        tail = jnp.maximum(
+            jnp.float32(self.b) - _exp_from_u(u[2]) * jnp.float32(self.tau2),
+            0.0)
         return jnp.where(pick_head, head, tail)
 
     def mean(self):

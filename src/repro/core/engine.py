@@ -78,6 +78,23 @@ accounting is bitwise identical and float32 window sums match to ~1 ulp
 faster on CPU but whose transcendental codegen can round an ulp apart —
 see EXPERIMENTS.md).  ``interpret=None`` auto-falls back to the Pallas
 interpreter off-TPU, so tier-1 stays green everywhere.
+
+Randomness (``rng=``)
+---------------------
+Every entry point also dispatches between two PRNG streams (PR 5; full
+story in EXPERIMENTS.md §"Event-loop RNG" and :mod:`repro.core.clocks`):
+``rng="split"`` (default) is the frozen per-event split/fold_in ladder the
+seed wrappers and every bitwise contract are pinned to; ``rng="slab"``
+generates one ``(window_events, n_cols)`` uint32 slab per float32 window
+with a single counter-based threefry call and has the event body consume
+draws by static column index — no per-event key arithmetic, the per-pool/
+per-region Poisson preemption clock vectors collapsed to one scalar clock
+at the superposed total hazard (exact, by the superposition theorem), and,
+in the Pallas executor, the slab arriving as a plain VMEM input block per
+window (zero in-kernel RNG).  The slab stream holds the pallas == ref ==
+xla integer-accounting ledger on its own terms; slab-vs-split equivalence
+is distributional (KS-tested in tests/test_event_rng.py), so ``"slab"`` is
+the stream for new sweeps and ``"split"`` the compatibility stream.
 """
 from __future__ import annotations
 
@@ -89,6 +106,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
+from repro.core.clocks import (SlabLayout, build_slab_layout, hazard_clock,
+                               lane_window_slabs, process_udim,
+                               sample_clock_vector, sample_hazard_clocks,
+                               split_event_keys, synth_key, tagged_keys,
+                               thinning_pick, window_slab)
 from repro.core.market import PoolState, SpotMarket, as_market
 from repro.core.regions import RegionTopology, RegionView, as_topology
 from repro.kernels.sweep import (batched_events, batched_event_windows_ref,
@@ -170,18 +192,36 @@ def init_engine_state(key: jax.Array, job: ArrivalProcess,
     )
 
 
+def _admit_slab(kernel, params, qlen, layout: SlabLayout, x):
+    """Slab-mode admission: a slab-aware kernel consumes its own uniform
+    columns (``admit_u``); a legacy kernel gets a key synthesized from two
+    raw columns and draws in-body (the compatibility path)."""
+    if layout.admit_mode == "u":
+        return kernel.admit_u(params, qlen, layout.uniforms(x, layout.admit))
+    return kernel.admit(params, qlen, synth_key(layout.bits(x, layout.admit)))
+
+
 def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
-                  kernel: PolicyKernel, rmax: int, carry: EngineState,
-                  stats: WindowStats, params,
-                  k_cost: jax.Array) -> tuple[EngineState, WindowStats]:
+                  kernel: PolicyKernel, rmax: int,
+                  layout: SlabLayout | None, carry: EngineState,
+                  stats: WindowStats, params, k_cost: jax.Array,
+                  x: jax.Array | None = None
+                  ) -> tuple[EngineState, WindowStats]:
     """Process one merged event (job arrival / spot slot / wait deadline).
 
     Per-slot updates are dense one-hot selects rather than scatter/gather:
     under ``vmap`` a traced-index ``.at[i].set`` lowers to a scatter, which
     is far slower on CPU/TPU than the width-``rmax`` selects used here (and
     the selects are numerically identical).
+
+    ``layout=None`` is the frozen ``rng="split"`` stream (per-event key
+    ladder); with a :class:`SlabLayout`, ``x`` is this event's uint32 slab
+    row and the body performs no key arithmetic at all.
     """
-    key, k_job, k_spot, k_pol = jax.random.split(carry.key, 4)
+    if layout is None:
+        key, k_job, k_spot, k_pol, _, _ = split_event_keys(carry.key)
+    else:
+        key = carry.key  # advanced once per window by the slab generator
     iota = jax.lax.iota(jnp.int32, rmax)
 
     budgets_masked = jnp.where(carry.occ, carry.budgets, INF)
@@ -197,7 +237,10 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
     budgets = jnp.where(carry.occ, carry.budgets - dt, INF)
 
     # ---- job arrival: ask the policy kernel ----
-    admit_raw, budget = kernel.admit(params, carry.qlen, k_pol)
+    if layout is None:
+        admit_raw, budget = kernel.admit(params, carry.qlen, k_pol)
+    else:
+        admit_raw, budget = _admit_slab(kernel, params, carry.qlen, layout, x)
     admit = is_job & admit_raw & (carry.qlen < rmax)
     od_now = is_job & (~admit)  # rejected -> immediate on-demand, delay 0
     join_slot = jnp.argmin(carry.occ.astype(jnp.int32))  # first free slot
@@ -222,11 +265,16 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
     occ = (carry.occ | join_mask) & (~leave_mask)
     order = jnp.where(join_mask, carry.next_seq, carry.order)
 
+    if layout is None:
+        job_draw = job.sample(k_job)
+        spot_draw = spot.sample(k_spot)
+    else:
+        job_draw = job.sample_u(layout.uniforms(x, layout.job))
+        spot_draw = spot.sample_u(layout.uniforms(x, layout.spot))
     new_carry = EngineState(
         key=key,
-        next_job=jnp.where(is_job, job.sample(k_job), carry.next_job - dt),
-        next_spot=jnp.where(is_spot, spot.sample(k_spot),
-                            carry.next_spot - dt),
+        next_job=jnp.where(is_job, job_draw, carry.next_job - dt),
+        next_spot=jnp.where(is_spot, spot_draw, carry.next_spot - dt),
         ages=ages,
         budgets=budgets,
         occ=occ,
@@ -317,6 +365,45 @@ def _scan_chunked(step, zeros, state, n_events: int, chunk_events: int):
     return state, stats
 
 
+def _scan_window_slab(step, zeros, state, n_events: int, n_cols: int):
+    """Slab-stream window: ONE counter-based bits call generates the whole
+    window's ``(n_events, n_cols)`` uint32 slab, the event scan consumes it
+    row by row as ``xs``, and the lane key advances once per window (not
+    per event).  :func:`repro.core.clocks.lane_window_slabs` walks the same
+    ladder with the same shapes, so the Pallas/ref executors consume
+    bitwise-identical slabs."""
+    key, slab = window_slab(state.key, n_events, n_cols)
+    state = state._replace(key=key)
+
+    def body(sc, x):
+        c, s = step(sc[0], sc[1], x)
+        return (c, s), None
+
+    (state, stats), _ = jax.lax.scan(body, (state, zeros), slab)
+    return state, stats
+
+
+def _scan_chunked_slab(step, zeros, state, n_events: int, chunk_events: int,
+                       n_cols: int):
+    """Slab-stream twin of :func:`_scan_chunked` (same chunk plan, same
+    per-window order rebase)."""
+    n_chunks, rem = divmod(n_events, chunk_events)
+
+    def chunk(c, _):
+        c, s = _scan_window_slab(step, zeros, c, chunk_events, n_cols)
+        return _rebase_order(c), s
+
+    state, stats = jax.lax.scan(chunk, state, None, length=n_chunks)
+    if rem:
+        state, tail = _scan_window_slab(step, zeros, state, rem, n_cols)
+        state = _rebase_order(state)
+        stats = jax.tree.map(
+            lambda s, t: jnp.concatenate([s, t[None]]), stats,
+            jax.tree.map(jnp.asarray, tail),
+        )
+    return state, stats
+
+
 def _window_plan(n_events: int, chunk_events: int,
                  burn_in: int) -> tuple[int, ...]:
     """Static per-window event counts: [burn-in?] + full chunks + [tail?]."""
@@ -333,48 +420,71 @@ def _raw_keys(keys: jax.Array) -> jax.Array:
     return keys
 
 
+def _engine_layout(job: ArrivalProcess, spot: ArrivalProcess,
+                   kernel) -> SlabLayout:
+    """Slab column map for the single-queue loop (built at trace time)."""
+    return build_slab_layout(kernel, job_udim=process_udim(job),
+                             spot_udim=process_udim(spot))
+
+
 def run_window(job: ArrivalProcess, spot: ArrivalProcess,
                kernel: PolicyKernel, rmax: int, state: EngineState, params,
-               k_cost: jax.Array,
-               n_events: int) -> tuple[EngineState, WindowStats]:
+               k_cost: jax.Array, n_events: int,
+               layout: SlabLayout | None = None
+               ) -> tuple[EngineState, WindowStats]:
     """Run ``n_events`` merged events; return state + one window of sums."""
-    step = functools.partial(_engine_event, job, spot, kernel, rmax,
+    step = functools.partial(_engine_event, job, spot, kernel, rmax, layout,
                              params=params, k_cost=k_cost)
-    return _scan_window(lambda c, s: step(c, s), WindowStats.zeros(), state,
-                        n_events)
+    if layout is None:
+        return _scan_window(lambda c, s: step(c, s), WindowStats.zeros(),
+                            state, n_events)
+    return _scan_window_slab(lambda c, s, x: step(c, s, x=x),
+                             WindowStats.zeros(), state, n_events,
+                             layout.n_cols)
 
 
 def run_chunked(job: ArrivalProcess, spot: ArrivalProcess,
                 kernel: PolicyKernel, rmax: int, state: EngineState, params,
-                k_cost: jax.Array, n_events: int,
-                chunk_events: int) -> tuple[EngineState, WindowStats]:
+                k_cost: jax.Array, n_events: int, chunk_events: int,
+                layout: SlabLayout | None = None
+                ) -> tuple[EngineState, WindowStats]:
     """Run exactly ``n_events`` events as stacked float32 chunk windows.
 
     Returns stats with a leading chunk axis; :func:`summarize` reduces it in
     float64 so long horizons do not hit float32 sum saturation.
     """
-    step = functools.partial(_engine_event, job, spot, kernel, rmax,
+    step = functools.partial(_engine_event, job, spot, kernel, rmax, layout,
                              params=params, k_cost=k_cost)
-    return _scan_chunked(lambda c, s: step(c, s), WindowStats.zeros(), state,
-                         n_events, chunk_events)
+    if layout is None:
+        return _scan_chunked(lambda c, s: step(c, s), WindowStats.zeros(),
+                             state, n_events, chunk_events)
+    return _scan_chunked_slab(lambda c, s, x: step(c, s, x=x),
+                              WindowStats.zeros(), state, n_events,
+                              chunk_events, layout.n_cols)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("job", "spot", "kernel", "rmax", "n_events",
-                     "chunk_events", "burn_in"),
+                     "chunk_events", "burn_in", "rng"),
 )
 def _run_sim_jit(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
-                 params, k_cost, key):
+                 rng, params, k_cost, key):
     """Single-point entry, compiled once per static signature at module scope
     (the seed re-jitted its burn-in path on every call)."""
+    layout = _engine_layout(job, spot, kernel) if rng == "slab" else None
     state = init_engine_state(key, job, spot, rmax)
     if burn_in:
         state, _ = run_window(job, spot, kernel, rmax, state, params, k_cost,
-                              burn_in)
+                              burn_in, layout=layout)
         state = _rebase_order(state)
     return run_chunked(job, spot, kernel, rmax, state, params, k_cost,
-                       n_events, chunk_events)
+                       n_events, chunk_events, layout=layout)
+
+
+def _check_rng(rng: str) -> None:
+    if rng not in ("split", "slab"):
+        raise ValueError(f"unknown rng {rng!r} (expected 'split'|'slab')")
 
 
 def _flat_lane_args(params_trees, k_cost, keys):
@@ -404,36 +514,47 @@ def _unflatten_lanes(stats, g: int, s: int):
 @functools.partial(
     jax.jit,
     static_argnames=("job", "spot", "kernel", "rmax", "n_events",
-                     "chunk_events", "burn_in"),
+                     "chunk_events", "burn_in", "rng"),
 )
 def _run_sweep_jit(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
-                   params, k_cost, keys):
+                   rng, params, k_cost, keys):
     """(grid × seeds) fleet as one nested-vmap XLA program (broadcast
     ``in_axes`` — see :func:`_flat_lane_args` for why not flat lanes)."""
+    layout = _engine_layout(job, spot, kernel) if rng == "slab" else None
 
     def one(p, kc, key):
         state = init_engine_state(key, job, spot, rmax)
         if burn_in:
             state, _ = run_window(job, spot, kernel, rmax, state, p, kc,
-                                  burn_in)
+                                  burn_in, layout=layout)
             state = _rebase_order(state)
         _, stats = run_chunked(job, spot, kernel, rmax, state, p, kc,
-                               n_events, chunk_events)
+                               n_events, chunk_events, layout=layout)
         return stats
 
     per_seeds = jax.vmap(one, in_axes=(None, None, 0))
     return jax.vmap(per_seeds, in_axes=(0, 0, None))(params, k_cost, keys)
 
 
+def _lane_slabs(state0, plan, layout: SlabLayout) -> jax.Array:
+    """All lanes' per-window slabs, (lanes, n_windows, max_ev, n_cols) —
+    generated OUTSIDE the kernel from each lane's initial key, so the
+    Pallas executor sees the slab as a plain per-window input block and
+    performs zero in-kernel RNG.  Values consumed per window are bitwise
+    the scan executor's (:func:`_scan_window_slab`)."""
+    return jax.vmap(
+        lambda k: lane_window_slabs(k, plan, layout.n_cols))(state0.key)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("job", "spot", "kernel", "rmax", "n_events",
                      "chunk_events", "burn_in", "tile", "interpret",
-                     "executor"),
+                     "executor", "rng"),
 )
 def _run_sweep_pallas_jit(job, spot, kernel, rmax, n_events, chunk_events,
                           burn_in, tile, interpret, params, k_cost, keys,
-                          executor="pallas"):
+                          executor="pallas", rng="split"):
     """The (grid × seeds) fleet as ONE Pallas batched-event kernel call.
 
     Lanes are grid-major (seed fastest; :func:`_flat_lane_args`); per-lane
@@ -448,20 +569,30 @@ def _run_sweep_pallas_jit(job, spot, kernel, rmax, n_events, chunk_events,
     params_b = {"params": params_f, "k": k_f}
     state0 = jax.vmap(
         lambda key: init_engine_state(key, job, spot, rmax))(keys_f)
-
-    def step(carry, stats, p):
-        return _engine_event(job, spot, kernel, rmax, carry, stats,
-                             p["params"], p["k"])
-
     plan = _window_plan(n_events, chunk_events, burn_in)
+
+    if rng == "slab":
+        layout = _engine_layout(job, spot, kernel)
+        xs = _lane_slabs(state0, plan, layout)
+
+        def step(carry, stats, p, x):
+            return _engine_event(job, spot, kernel, rmax, layout, carry,
+                                 stats, p["params"], p["k"], x=x)
+    else:
+        layout, xs = None, None
+
+        def step(carry, stats, p):
+            return _engine_event(job, spot, kernel, rmax, None, carry,
+                                 stats, p["params"], p["k"])
+
     if executor == "ref":
         _, stats = batched_event_windows_ref(
-            step, state0, params_b, WindowStats.zeros(), plan,
+            step, state0, params_b, WindowStats.zeros(), plan, xs=xs,
             epilogue=_rebase_order)
     else:
         _, stats = batched_events(
-            step, state0, params_b, WindowStats.zeros(), plan, tile=tile,
-            interpret=interpret, epilogue=_rebase_order)
+            step, state0, params_b, WindowStats.zeros(), plan, xs=xs,
+            tile=tile, interpret=interpret, epilogue=_rebase_order)
     if burn_in:
         stats = jax.tree.map(lambda x: x[:, 1:], stats)
     return _unflatten_lanes(stats, g, s)
@@ -519,6 +650,7 @@ def run_sim(
     burn_in: int = 0,
     chunk_events: int | None = DEFAULT_CHUNK_EVENTS,
     impl: str = "xla",
+    rng: str = "split",
     tile: int = 256,
     interpret: bool | None = None,
 ) -> dict:
@@ -531,19 +663,23 @@ def run_sim(
     ``impl="pallas"`` runs the horizon as a one-lane batched-event kernel
     call — bit-for-bit the ``"ref"`` scan oracle; see :func:`run_sweep`
     and the module docstring for the cross-executor equality contract.
+    ``rng="slab"`` selects the fast slab PRNG stream (module docstring,
+    "Randomness").
     """
     params = {} if params is None else params
+    _check_rng(rng)
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
     if impl in ("pallas", "ref"):
         stats = _run_sweep_pallas_jit(
             job, spot, kernel, rmax, n_events, chunk, burn_in, tile,
             default_interpret() if interpret is None else interpret,
             jax.tree.map(lambda x: jnp.asarray(x)[None], params),
-            jnp.float32(k)[None], _raw_keys(key)[None], executor=impl)
+            jnp.float32(k)[None], _raw_keys(key)[None], executor=impl,
+            rng=rng)
         stats = jax.tree.map(lambda x: x[0, 0], stats)
     elif impl == "xla":
         _, stats = _run_sim_jit(job, spot, kernel, rmax, n_events, chunk,
-                                burn_in, params, jnp.float32(k), key)
+                                burn_in, rng, params, jnp.float32(k), key)
     else:
         raise ValueError(
             f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
@@ -564,6 +700,7 @@ def run_sweep(
     burn_in: int = 0,
     chunk_events: int | None = DEFAULT_CHUNK_EVENTS,
     impl: str = "xla",
+    rng: str = "split",
     tile: int = 256,
     interpret: bool | None = None,
 ) -> dict:
@@ -583,12 +720,16 @@ def run_sweep(
     oracle; see the module docstring for the exact cross-executor
     equality contract).  ``tile`` is lanes per kernel instance;
     ``interpret=None`` auto-selects compiled Mosaic on TPU and the Pallas
-    interpreter elsewhere (the CPU fallback).
+    interpreter elsewhere (the CPU fallback).  ``rng="slab"`` selects the
+    fast slab PRNG stream (module docstring, "Randomness") — recommended
+    for new sweeps; the default ``"split"`` is the frozen seed-compatible
+    stream.
 
     Returns :func:`summarize`'s dict with every value shaped
     ``grid_shape + (n_seeds,)``.
     """
     params = {} if params is None else params
+    _check_rng(rng)
     params = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params)
     k = jnp.asarray(k, jnp.float32)
     grid_shape = jnp.broadcast_shapes(
@@ -603,10 +744,10 @@ def run_sweep(
         stats = _run_sweep_pallas_jit(
             job, spot, kernel, rmax, n_events, chunk, burn_in, tile,
             default_interpret() if interpret is None else interpret,
-            params_flat, k_flat, _raw_keys(keys), executor=impl)
+            params_flat, k_flat, _raw_keys(keys), executor=impl, rng=rng)
     elif impl == "xla":
         stats = _run_sweep_jit(job, spot, kernel, rmax, n_events, chunk,
-                               burn_in, params_flat, k_flat, keys)
+                               burn_in, rng, params_flat, k_flat, keys)
     else:
         raise ValueError(
             f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
@@ -686,46 +827,48 @@ class MarketState(NamedTuple):
     qlen: jax.Array
 
 
-def _pool_spot_keys(market: SpotMarket, k_spot: jax.Array) -> list:
-    """Per-pool sampling keys, label-independent via fold_in(pool.tag).
-
-    The 1-pool market uses ``k_spot`` directly — the PR-1 key layout — so
-    the degenerate engine is bit-for-bit the PR-1 engine.
-    """
-    if market.n_pools == 1:
-        return [k_spot]
-    return [jax.random.fold_in(k_spot, p.tag) for p in market.pools]
+def _market_tags(market: SpotMarket) -> tuple:
+    return tuple(p.tag for p in market.pools)
 
 
 def _sample_spot_clocks(market: SpotMarket, k_spot: jax.Array,
                         mp: dict) -> jax.Array:
-    samples = [p.arrival.sample(k)
-               for p, k in zip(market.pools, _pool_spot_keys(market, k_spot))]
-    return jnp.stack(samples) * mp["spot_scale"]
+    """Per-pool spot clock refresh (split stream): tag-folded keys via the
+    shared :func:`repro.core.clocks.sample_clock_vector` plumbing — the
+    1-pool market uses ``k_spot`` directly (the PR-1 key layout), so the
+    degenerate engine is bit-for-bit the PR-1 engine."""
+    return sample_clock_vector(tuple(p.arrival for p in market.pools),
+                               _market_tags(market), k_spot,
+                               mp["spot_scale"])
 
 
-def _sample_preempt_clocks(market: SpotMarket, k_pre: jax.Array,
-                           mp: dict) -> jax.Array:
-    """Exponential(h_p) revocation clocks; h_p = 0 never fires (INF)."""
-    u = jnp.stack([
-        jax.random.exponential(jax.random.fold_in(k_pre, p.tag),
-                               dtype=jnp.float32)
-        for p in market.pools
-    ])
-    h = mp["hazard"]
-    return jnp.where(h > 0.0, u / jnp.maximum(h, jnp.float32(1e-30)), INF)
+def _slab_spot_clocks(procs: tuple, u: jax.Array,
+                      scale: jax.Array) -> jax.Array:
+    """Slab-stream clock-vector refresh: every process transforms the SAME
+    shared uniforms (only the firing entry's sample is ever consumed, so
+    sharing the columns is distributionally exact) — zero key arithmetic,
+    O(P) cheap transforms."""
+    return jnp.stack([p.sample_u(u) for p in procs]) * scale
 
 
 def init_market_state(key: jax.Array, job: ArrivalProcess,
                       market: SpotMarket, rmax: int, mp: dict,
-                      preempt_on: bool) -> MarketState:
+                      preempt_on: bool,
+                      scalar_preempt: bool = False) -> MarketState:
+    """``scalar_preempt`` (the ``rng="slab"`` representation) carries ONE
+    superposed preemption clock instead of the (P,) vector: the min of the
+    per-pool init draws — exactly ``Exp(Σ h_p)``, the superposition law."""
     kj, ks, kc = jax.random.split(key, 3)
     n = market.n_pools
     if preempt_on:
-        next_preempt = _sample_preempt_clocks(
-            market, jax.random.fold_in(ks, 2**31 - 1), mp)
+        next_preempt = sample_hazard_clocks(
+            _market_tags(market), jax.random.fold_in(ks, 2**31 - 1),
+            mp["hazard"])
+        if scalar_preempt:
+            next_preempt = jnp.min(next_preempt, keepdims=True)
     else:
-        next_preempt = jnp.full((n,), INF, jnp.float32)
+        next_preempt = jnp.full((1 if scalar_preempt else n,), INF,
+                                jnp.float32)
     return MarketState(
         key=kc,
         next_job=job.sample(kj),
@@ -752,24 +895,61 @@ def _kernel_admit(kernel, params, qlen, pool_state, key):
     return admit, budget, jnp.zeros((), jnp.int32)
 
 
+def _kernel_admit_slab(kernel, params, qlen, pool_state, layout: SlabLayout,
+                       x):
+    """Slab-stream twin of :func:`_kernel_admit`: slab-aware kernels own
+    their uniform columns; legacy hooks get a synthesized key."""
+    if layout.market_admit:
+        if layout.admit_mode == "u":
+            admit, budget, pool = kernel.admit_market_u(
+                params, qlen, pool_state, layout.uniforms(x, layout.admit))
+        else:
+            admit, budget, pool = kernel.admit_market(
+                params, qlen, pool_state,
+                synth_key(layout.bits(x, layout.admit)))
+        return admit, budget, jnp.asarray(pool, jnp.int32)
+    admit, budget = _admit_slab(kernel, params, qlen, layout, x)
+    return admit, budget, jnp.zeros((), jnp.int32)
+
+
 def _kernel_on_preempt(kernel, params, age, notice, qlen, key):
     if hasattr(kernel, "on_preempt"):
         return kernel.on_preempt(params, age, notice, qlen, key)
     return jnp.zeros((), jnp.bool_)  # legacy kernels defect on revocation
 
 
+def _kernel_on_preempt_slab(kernel, params, age, notice, qlen,
+                            layout: SlabLayout, x):
+    if layout.on_preempt_mode == "u":
+        return kernel.on_preempt_u(params, age, notice, qlen,
+                                   layout.uniforms(x, layout.on_preempt))
+    if layout.on_preempt_mode == "key":
+        return kernel.on_preempt(params, age, notice, qlen,
+                                 synth_key(layout.bits(x, layout.on_preempt)))
+    return jnp.zeros((), jnp.bool_)  # legacy kernels defect on revocation
+
+
 def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
-                  preempt_on: bool, carry: MarketState,
-                  stats: MarketWindowStats, params, mp: dict,
-                  k_cost: jax.Array) -> tuple[MarketState, MarketWindowStats]:
+                  preempt_on: bool, layout: SlabLayout | None,
+                  carry: MarketState, stats: MarketWindowStats, params,
+                  mp: dict, k_cost: jax.Array,
+                  x: jax.Array | None = None
+                  ) -> tuple[MarketState, MarketWindowStats]:
     """One merged event: job arrival / pool spot slot / pool preemption /
     wait deadline.  Same dense one-hot-select style as :func:`_engine_event`
-    (see the note there on scatter vs select under vmap)."""
+    (see the note there on scatter vs select under vmap).
+
+    ``layout=None`` is the frozen split stream; with a :class:`SlabLayout`
+    the body consumes slab row ``x`` instead — and the (P,) preemption
+    clock vector is ONE superposed clock at total hazard plus a thinning
+    pick of the firing pool (exact; see :mod:`repro.core.clocks`).
+    """
     n_pools = market.n_pools
-    if preempt_on:
-        key, k_job, k_spot, k_pol, k_pre = jax.random.split(carry.key, 5)
+    if layout is None:
+        key, k_job, k_spot, k_pol, k_pre, _ = split_event_keys(
+            carry.key, preempt_on)
     else:
-        key, k_job, k_spot, k_pol = jax.random.split(carry.key, 4)
+        key = carry.key
     iota = jax.lax.iota(jnp.int32, rmax)
     iota_p = jax.lax.iota(jnp.int32, n_pools)
 
@@ -780,8 +960,13 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
     min_spot = jnp.min(carry.next_spot)
     spot_pool = jnp.argmin(carry.next_spot).astype(jnp.int32)
     if preempt_on:
-        min_pre = jnp.min(carry.next_preempt)
-        pre_pool = jnp.argmin(carry.next_preempt).astype(jnp.int32)
+        if layout is None:
+            min_pre = jnp.min(carry.next_preempt)
+            pre_pool = jnp.argmin(carry.next_preempt).astype(jnp.int32)
+        else:
+            min_pre = carry.next_preempt[0]
+            pre_pool = thinning_pick(mp["hazard"],
+                                     layout.uniforms(x, layout.preempt)[1])
         dt = jnp.minimum(jnp.minimum(carry.next_job, min_spot),
                          jnp.minimum(deadline, min_pre))
         is_spot = min_spot <= jnp.minimum(carry.next_job,
@@ -809,9 +994,13 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
     pool_state = PoolState(price=mp["price"], hazard=mp["hazard"],
                            notice=mp["notice"], rate=rates,
                            qlen_pool=qlen_pool)
-    admit_raw, budget, pool_choice = _kernel_admit(kernel, params,
-                                                   carry.qlen, pool_state,
-                                                   k_pol)
+    if layout is None:
+        admit_raw, budget, pool_choice = _kernel_admit(kernel, params,
+                                                       carry.qlen,
+                                                       pool_state, k_pol)
+    else:
+        admit_raw, budget, pool_choice = _kernel_admit_slab(
+            kernel, params, carry.qlen, pool_state, layout, x)
     admit = is_job & admit_raw & (carry.qlen < rmax)
     od_now = is_job & (~admit)
     join_slot = jnp.argmin(carry.occ.astype(jnp.int32))
@@ -833,9 +1022,14 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
         # re-admission sees the queue WITHOUT the revoked job (the host
         # orchestrator pops it before consulting the admission law)
         qlen_wo = jnp.maximum(carry.qlen - 1, 0)
-        resume_raw = _kernel_on_preempt(kernel, params, age_pre,
-                                        mp["notice"][pre_pool], qlen_wo,
-                                        k_pre)
+        if layout is None:
+            resume_raw = _kernel_on_preempt(kernel, params, age_pre,
+                                            mp["notice"][pre_pool], qlen_wo,
+                                            k_pre)
+        else:
+            resume_raw = _kernel_on_preempt_slab(kernel, params, age_pre,
+                                                 mp["notice"][pre_pool],
+                                                 qlen_wo, layout, x)
         resume = pre_hit & resume_raw
         defect_pre = pre_hit & (~resume)
         price_p = mp["price"][pre_pool]
@@ -866,19 +1060,34 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
     order = jnp.where(join_mask | resume_mask, carry.next_seq, carry.order)
 
     fire_s = is_spot & (iota_p == spot_pool)
-    next_spot = jnp.where(fire_s, _sample_spot_clocks(market, k_spot, mp),
-                          carry.next_spot - dt)
-    if preempt_on:
+    if layout is None:
+        spot_draws = _sample_spot_clocks(market, k_spot, mp)
+        job_draw = job.sample(k_job)
+    else:
+        spot_draws = _slab_spot_clocks(
+            tuple(p.arrival for p in market.pools),
+            layout.uniforms(x, layout.spot), mp["spot_scale"])
+        job_draw = job.sample_u(layout.uniforms(x, layout.job))
+    next_spot = jnp.where(fire_s, spot_draws, carry.next_spot - dt)
+    if not preempt_on:
+        next_preempt = carry.next_preempt
+    elif layout is None:
         fire_p = is_pre & (iota_p == pre_pool)
         next_preempt = jnp.where(
-            fire_p, _sample_preempt_clocks(market, k_pre, mp),
+            fire_p, sample_hazard_clocks(_market_tags(market), k_pre,
+                                         mp["hazard"]),
             carry.next_preempt - dt)
     else:
-        next_preempt = carry.next_preempt
+        # scalar superposed clock: refresh Exp(Σ h_p) whenever ANY pool
+        # fires (memorylessness makes the non-firing residuals fresh draws)
+        next_preempt = jnp.where(
+            is_pre, hazard_clock(mp["hazard"],
+                                 layout.uniforms(x, layout.preempt)[0]),
+            carry.next_preempt - dt)
 
     new_carry = MarketState(
         key=key,
-        next_job=jnp.where(is_job, job.sample(k_job), carry.next_job - dt),
+        next_job=jnp.where(is_job, job_draw, carry.next_job - dt),
         next_spot=next_spot,
         next_preempt=next_preempt,
         ages=ages,
@@ -923,64 +1132,93 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
     return new_carry, new_stats
 
 
+def _market_layout(job: ArrivalProcess, market: SpotMarket, kernel,
+                   preempt_on: bool) -> SlabLayout:
+    """Slab column map for the market loop: the spot span is the max
+    ``u_dim`` across pools (all pools transform the same shared
+    uniforms)."""
+    return build_slab_layout(
+        kernel, job_udim=process_udim(job),
+        spot_udim=max(process_udim(p.arrival) for p in market.pools),
+        n=market.n_pools, preempt_on=preempt_on, market=True)
+
+
 def run_market_window(job: ArrivalProcess, market: SpotMarket, kernel,
                       rmax: int, preempt_on: bool, state: MarketState,
-                      params, mp: dict, k_cost: jax.Array,
-                      n_events: int) -> tuple[MarketState, MarketWindowStats]:
+                      params, mp: dict, k_cost: jax.Array, n_events: int,
+                      layout: SlabLayout | None = None
+                      ) -> tuple[MarketState, MarketWindowStats]:
     """Run ``n_events`` merged market events; one window of float32 sums."""
     step = functools.partial(_market_event, job, market, kernel, rmax,
-                             preempt_on, params=params, mp=mp, k_cost=k_cost)
-    return _scan_window(step, MarketWindowStats.zeros(market.n_pools), state,
-                        n_events)
+                             preempt_on, layout, params=params, mp=mp,
+                             k_cost=k_cost)
+    zeros = MarketWindowStats.zeros(market.n_pools)
+    if layout is None:
+        return _scan_window(step, zeros, state, n_events)
+    return _scan_window_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
+                             n_events, layout.n_cols)
 
 
 def run_market_chunked(job: ArrivalProcess, market: SpotMarket, kernel,
                        rmax: int, preempt_on: bool, state: MarketState,
                        params, mp: dict, k_cost: jax.Array, n_events: int,
-                       chunk_events: int
+                       chunk_events: int, layout: SlabLayout | None = None
                        ) -> tuple[MarketState, MarketWindowStats]:
     step = functools.partial(_market_event, job, market, kernel, rmax,
-                             preempt_on, params=params, mp=mp, k_cost=k_cost)
-    return _scan_chunked(step, MarketWindowStats.zeros(market.n_pools),
-                         state, n_events, chunk_events)
+                             preempt_on, layout, params=params, mp=mp,
+                             k_cost=k_cost)
+    zeros = MarketWindowStats.zeros(market.n_pools)
+    if layout is None:
+        return _scan_chunked(step, zeros, state, n_events, chunk_events)
+    return _scan_chunked_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
+                              n_events, chunk_events, layout.n_cols)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("job", "market", "kernel", "rmax", "preempt_on",
-                     "n_events", "chunk_events", "burn_in"),
+                     "n_events", "chunk_events", "burn_in", "rng"),
 )
 def _run_market_sim_jit(job, market, kernel, rmax, preempt_on, n_events,
-                        chunk_events, burn_in, params, mp, k_cost, key):
-    state = init_market_state(key, job, market, rmax, mp, preempt_on)
+                        chunk_events, burn_in, rng, params, mp, k_cost, key):
+    layout = (_market_layout(job, market, kernel, preempt_on)
+              if rng == "slab" else None)
+    state = init_market_state(key, job, market, rmax, mp, preempt_on,
+                              scalar_preempt=layout is not None)
     if burn_in:
         state, _ = run_market_window(job, market, kernel, rmax, preempt_on,
-                                     state, params, mp, k_cost, burn_in)
+                                     state, params, mp, k_cost, burn_in,
+                                     layout=layout)
         state = _rebase_order(state)
     return run_market_chunked(job, market, kernel, rmax, preempt_on, state,
-                              params, mp, k_cost, n_events, chunk_events)
+                              params, mp, k_cost, n_events, chunk_events,
+                              layout=layout)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("job", "market", "kernel", "rmax", "preempt_on",
-                     "n_events", "chunk_events", "burn_in"),
+                     "n_events", "chunk_events", "burn_in", "rng"),
 )
 def _run_market_sweep_jit(job, market, kernel, rmax, preempt_on, n_events,
-                          chunk_events, burn_in, params, mp, k_cost, keys):
+                          chunk_events, burn_in, rng, params, mp, k_cost,
+                          keys):
     """(grid × pools-config × seeds) fleet as one nested-vmap XLA program
     (broadcast ``in_axes``; see :func:`_flat_lane_args`)."""
+    layout = (_market_layout(job, market, kernel, preempt_on)
+              if rng == "slab" else None)
 
     def one(p, m, kc, key):
-        state = init_market_state(key, job, market, rmax, m, preempt_on)
+        state = init_market_state(key, job, market, rmax, m, preempt_on,
+                                  scalar_preempt=layout is not None)
         if burn_in:
             state, _ = run_market_window(job, market, kernel, rmax,
                                          preempt_on, state, p, m, kc,
-                                         burn_in)
+                                         burn_in, layout=layout)
             state = _rebase_order(state)
         _, stats = run_market_chunked(job, market, kernel, rmax, preempt_on,
                                       state, p, m, kc, n_events,
-                                      chunk_events)
+                                      chunk_events, layout=layout)
         return stats
 
     per_seeds = jax.vmap(one, in_axes=(None, None, None, 0))
@@ -992,39 +1230,56 @@ def _run_market_sweep_jit(job, market, kernel, rmax, preempt_on, n_events,
     jax.jit,
     static_argnames=("job", "market", "kernel", "rmax", "preempt_on",
                      "n_events", "chunk_events", "burn_in", "tile",
-                     "interpret", "executor"),
+                     "interpret", "executor", "rng"),
 )
 def _run_market_sweep_pallas_jit(job, market, kernel, rmax, preempt_on,
                                  n_events, chunk_events, burn_in, tile,
                                  interpret, params, mp, k_cost, keys,
-                                 executor="pallas"):
+                                 executor="pallas", rng="split"):
     """The market fleet through the same batched-event kernel family: the
     per-pool ``next_spot``/``next_preempt`` clock vectors become
     (tile, n_pools) VMEM blocks and :func:`_market_event` is the vmap-ed
     kernel body — bit-for-bit the ``executor="ref"`` scan oracle; integer
     stats bitwise / float sums to ~ulp vs :func:`_run_market_sweep_jit`
-    (see the module docstring)."""
+    (see the module docstring).  Under ``rng="slab"`` the slab arrives as
+    a (tile, 1, window_events, n_cols) input block per window and the
+    kernel performs no RNG at all."""
     g, s = k_cost.shape[0], keys.shape[0]
     (params_f, mp_f), k_f, keys_f = _flat_lane_args((params, mp), k_cost,
                                                     keys)
     params_b = {"params": params_f, "mp": mp_f, "k": k_f}
+    layout = (_market_layout(job, market, kernel, preempt_on)
+              if rng == "slab" else None)
     state0 = jax.vmap(
-        lambda key, m: init_market_state(key, job, market, rmax, m,
-                                         preempt_on))(keys_f, mp_f)
-
-    def step(carry, stats, p):
-        return _market_event(job, market, kernel, rmax, preempt_on, carry,
-                             stats, p["params"], p["mp"], p["k"])
-
+        lambda key, m: init_market_state(
+            key, job, market, rmax, m, preempt_on,
+            scalar_preempt=layout is not None))(keys_f, mp_f)
     plan = _window_plan(n_events, chunk_events, burn_in)
+
+    if layout is not None:
+        xs = _lane_slabs(state0, plan, layout)
+
+        def step(carry, stats, p, x):
+            return _market_event(job, market, kernel, rmax, preempt_on,
+                                 layout, carry, stats, p["params"], p["mp"],
+                                 p["k"], x=x)
+    else:
+        xs = None
+
+        def step(carry, stats, p):
+            return _market_event(job, market, kernel, rmax, preempt_on,
+                                 None, carry, stats, p["params"], p["mp"],
+                                 p["k"])
+
     if executor == "ref":
         _, stats = batched_event_windows_ref(
             step, state0, params_b, MarketWindowStats.zeros(market.n_pools),
-            plan, epilogue=_rebase_order)
+            plan, xs=xs, epilogue=_rebase_order)
     else:
         _, stats = batched_events(
             step, state0, params_b, MarketWindowStats.zeros(market.n_pools),
-            plan, tile=tile, interpret=interpret, epilogue=_rebase_order)
+            plan, xs=xs, tile=tile, interpret=interpret,
+            epilogue=_rebase_order)
     if burn_in:
         stats = jax.tree.map(lambda x: x[:, 1:], stats)
     return _unflatten_lanes(stats, g, s)
@@ -1116,6 +1371,7 @@ def run_market_sim(
     burn_in: int = 0,
     chunk_events: int | None = DEFAULT_CHUNK_EVENTS,
     impl: str = "xla",
+    rng: str = "split",
     tile: int = 256,
     interpret: bool | None = None,
 ) -> dict:
@@ -1123,10 +1379,11 @@ def run_market_sim(
 
     A degenerate market (:meth:`SpotMarket.is_degenerate`) with a legacy
     kernel reproduces :func:`run_sim` bit-for-bit per seed.  ``chunk_events``
-    / ``impl`` behave exactly as in :func:`run_sim`.
+    / ``impl`` / ``rng`` behave exactly as in :func:`run_sim`.
     """
     market = as_market(market)
     params = {} if params is None else params
+    _check_rng(rng)
     mp = market.params()
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
     if impl in ("pallas", "ref"):
@@ -1136,13 +1393,14 @@ def run_market_sim(
             default_interpret() if interpret is None else interpret,
             jax.tree.map(lambda x: jnp.asarray(x)[None], params),
             jax.tree.map(lambda x: jnp.asarray(x)[None], mp),
-            jnp.float32(k)[None], _raw_keys(key)[None], executor=impl)
+            jnp.float32(k)[None], _raw_keys(key)[None], executor=impl,
+            rng=rng)
         stats = jax.tree.map(lambda x: x[0, 0], stats)
     elif impl == "xla":
         _, stats = _run_market_sim_jit(job, market, kernel, rmax,
                                        market.preemptible, n_events, chunk,
-                                       burn_in, params, mp, jnp.float32(k),
-                                       key)
+                                       burn_in, rng, params, mp,
+                                       jnp.float32(k), key)
     else:
         raise ValueError(
             f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
@@ -1168,6 +1426,7 @@ def run_market_sweep(
     burn_in: int = 0,
     chunk_events: int | None = DEFAULT_CHUNK_EVENTS,
     impl: str = "xla",
+    rng: str = "split",
     tile: int = 256,
     interpret: bool | None = None,
 ) -> dict:
@@ -1193,6 +1452,7 @@ def run_market_sweep(
     market = as_market(market)
     n = market.n_pools
     params = {} if params is None else params
+    _check_rng(rng)
     params = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params)
     k = jnp.asarray(k, jnp.float32)
     overrides = {"price": prices, "hazard": hazards, "notice": notices,
@@ -1215,11 +1475,12 @@ def run_market_sweep(
         stats = _run_market_sweep_pallas_jit(
             job, market, kernel, rmax, preempt_on, n_events, chunk, burn_in,
             tile, default_interpret() if interpret is None else interpret,
-            params_flat, mp_flat, k_flat, _raw_keys(keys), executor=impl)
+            params_flat, mp_flat, k_flat, _raw_keys(keys), executor=impl,
+            rng=rng)
     elif impl == "xla":
         stats = _run_market_sweep_jit(job, market, kernel, rmax, preempt_on,
-                                      n_events, chunk, burn_in, params_flat,
-                                      mp_flat, k_flat, keys)
+                                      n_events, chunk, burn_in, rng,
+                                      params_flat, mp_flat, k_flat, keys)
     else:
         raise ValueError(
             f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
@@ -1330,52 +1591,43 @@ def _slot_region_iota(topo: RegionTopology, iota_s: jax.Array) -> jax.Array:
     return reg
 
 
-def _region_fold_keys(topo: RegionTopology, k: jax.Array) -> list:
-    """Per-region sampling keys, label-independent via fold_in(region.tag).
-
-    The 1-region topology uses ``k`` directly — the PR-1/PR-2 key layout —
-    so the degenerate engine is bit-for-bit the PR-3 engine.
-    """
-    if topo.n_regions == 1:
-        return [k]
-    return [jax.random.fold_in(k, r.tag) for r in topo.regions]
+def _region_tags(topo: RegionTopology) -> tuple:
+    return tuple(r.tag for r in topo.regions)
 
 
 def _sample_job_clocks(topo: RegionTopology, k_job: jax.Array,
                        rp: dict) -> jax.Array:
-    samples = [r.job.sample(k)
-               for r, k in zip(topo.regions, _region_fold_keys(topo, k_job))]
-    return jnp.stack(samples) * rp["job_scale"]
+    """Per-region job clock refresh via the shared tag-folded plumbing
+    (:func:`repro.core.clocks.sample_clock_vector`): the 1-region topology
+    uses ``k_job`` directly, the PR-1/PR-2 key layout, so the degenerate
+    engine is bit-for-bit the PR-3 engine."""
+    return sample_clock_vector(tuple(r.job for r in topo.regions),
+                               _region_tags(topo), k_job, rp["job_scale"])
 
 
 def _sample_region_spot_clocks(topo: RegionTopology, k_spot: jax.Array,
                                rp: dict) -> jax.Array:
-    samples = [r.spot.sample(k)
-               for r, k in zip(topo.regions, _region_fold_keys(topo, k_spot))]
-    return jnp.stack(samples) * rp["spot_scale"]
-
-
-def _sample_region_preempt_clocks(topo: RegionTopology, k_pre: jax.Array,
-                                  rp: dict) -> jax.Array:
-    """Exponential(h_r) revocation clocks; h_r = 0 never fires (INF)."""
-    u = jnp.stack([
-        jax.random.exponential(jax.random.fold_in(k_pre, r.tag),
-                               dtype=jnp.float32)
-        for r in topo.regions
-    ])
-    h = rp["hazard"]
-    return jnp.where(h > 0.0, u / jnp.maximum(h, jnp.float32(1e-30)), INF)
+    return sample_clock_vector(tuple(r.spot for r in topo.regions),
+                               _region_tags(topo), k_spot, rp["spot_scale"])
 
 
 def init_region_state(key: jax.Array, topo: RegionTopology, rp: dict,
-                      preempt_on: bool) -> RegionState:
+                      preempt_on: bool,
+                      scalar_preempt: bool = False) -> RegionState:
+    """``scalar_preempt`` (the ``rng="slab"`` representation) carries ONE
+    superposed preemption clock — min of the per-region init draws, exactly
+    ``Exp(Σ h_r)``; see :func:`init_market_state`."""
     kj, ks, kc = jax.random.split(key, 3)
     n, s = topo.n_regions, topo.total_slots
     if preempt_on:
-        next_preempt = _sample_region_preempt_clocks(
-            topo, jax.random.fold_in(ks, 2**31 - 1), rp)
+        next_preempt = sample_hazard_clocks(
+            _region_tags(topo), jax.random.fold_in(ks, 2**31 - 1),
+            rp["hazard"])
+        if scalar_preempt:
+            next_preempt = jnp.min(next_preempt, keepdims=True)
     else:
-        next_preempt = jnp.full((n,), INF, jnp.float32)
+        next_preempt = jnp.full((1 if scalar_preempt else n,), INF,
+                                jnp.float32)
     return RegionState(
         key=kc,
         next_job=_sample_job_clocks(topo, kj, rp),
@@ -1407,28 +1659,51 @@ def _kernel_region_admit(kernel, params, qlen_t, view: RegionView, key):
     return kernel.admit(params, qlen_t, key)
 
 
+def _kernel_region_admit_slab(kernel, params, qlen_t, view: RegionView,
+                              layout: SlabLayout, x):
+    """Slab-stream twin of :func:`_kernel_region_admit`."""
+    if layout.market_admit:
+        ps = PoolState(price=view.price, hazard=view.hazard,
+                       notice=view.notice, rate=view.rate,
+                       qlen_pool=view.qlen_region)
+        if layout.admit_mode == "u":
+            admit, budget, _pool = kernel.admit_market_u(
+                params, qlen_t, ps, layout.uniforms(x, layout.admit))
+        else:
+            admit, budget, _pool = kernel.admit_market(
+                params, qlen_t, ps, synth_key(layout.bits(x, layout.admit)))
+        return admit, budget
+    return _admit_slab(kernel, params, qlen_t, layout, x)
+
+
+def _kernel_route_slab(kernel, params, qlens, view: RegionView,
+                       layout: SlabLayout, x):
+    if layout.route_mode == "u":
+        return kernel.route_u(params, qlens, view,
+                              layout.uniforms(x, layout.route))
+    return kernel.route(params, qlens, view,
+                        synth_key(layout.bits(x, layout.route)))
+
+
 def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
-                  carry: RegionState, stats: RegionWindowStats, params,
-                  rp: dict, k_cost: jax.Array
+                  layout: SlabLayout | None, carry: RegionState,
+                  stats: RegionWindowStats, params, rp: dict,
+                  k_cost: jax.Array, x: jax.Array | None = None
                   ) -> tuple[RegionState, RegionWindowStats]:
     """One merged event: job arrival (in some region) / region spot slot /
     region preemption / wait deadline.  Same dense one-hot-select style as
     :func:`_engine_event` (see the note there on scatter vs select under
     vmap); expression structure deliberately mirrors :func:`_market_event`
-    so the degenerate reduction is auditable term by term.
+    so the degenerate reduction is auditable term by term — including the
+    slab stream's superposed scalar preemption clock (``layout`` not None).
     """
     n_regions, n_slots = topo.n_regions, topo.total_slots
     has_route = hasattr(kernel, "route")
-    if preempt_on and has_route:
-        key, k_job, k_spot, k_pol, k_pre, k_rt = jax.random.split(carry.key, 6)
-    elif preempt_on:
-        key, k_job, k_spot, k_pol, k_pre = jax.random.split(carry.key, 5)
-        k_rt = None
-    elif has_route:
-        key, k_job, k_spot, k_pol, k_rt = jax.random.split(carry.key, 5)
+    if layout is None:
+        key, k_job, k_spot, k_pol, k_pre, k_rt = split_event_keys(
+            carry.key, preempt_on, has_route)
     else:
-        key, k_job, k_spot, k_pol = jax.random.split(carry.key, 4)
-        k_rt = None
+        key = carry.key
     iota_s = jax.lax.iota(jnp.int32, n_slots)
     iota_r = jax.lax.iota(jnp.int32, n_regions)
     slot_region = _slot_region_iota(topo, iota_s)
@@ -1442,8 +1717,13 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
     min_spot = jnp.min(carry.next_spot)
     spot_region = jnp.argmin(carry.next_spot).astype(jnp.int32)
     if preempt_on:
-        min_pre = jnp.min(carry.next_preempt)
-        pre_region = jnp.argmin(carry.next_preempt).astype(jnp.int32)
+        if layout is None:
+            min_pre = jnp.min(carry.next_preempt)
+            pre_region = jnp.argmin(carry.next_preempt).astype(jnp.int32)
+        else:
+            min_pre = carry.next_preempt[0]
+            pre_region = thinning_pick(
+                rp["hazard"], layout.uniforms(x, layout.preempt)[1])
         dt = jnp.minimum(jnp.minimum(min_job, min_spot),
                          jnp.minimum(deadline, min_pre))
         is_spot = min_spot <= jnp.minimum(min_job,
@@ -1471,15 +1751,23 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
         qlen_region=carry.qlen,
         free_slots=jnp.maximum(rp["rmax"] - carry.qlen, 0),
     )
-    if has_route:
+    if not has_route:
+        target = home
+    elif layout is None:
         target = jnp.asarray(kernel.route(params, carry.qlen, view, k_rt),
                              jnp.int32)
     else:
-        target = home
+        target = jnp.asarray(
+            _kernel_route_slab(kernel, params, carry.qlen, view, layout, x),
+            jnp.int32)
     qlen_t = jnp.sum(jnp.where(iota_r == target, carry.qlen, 0))
     rmax_t = jnp.sum(jnp.where(iota_r == target, rp["rmax"], 0))
-    admit_raw, budget = _kernel_region_admit(kernel, params, qlen_t, view,
-                                             k_pol)
+    if layout is None:
+        admit_raw, budget = _kernel_region_admit(kernel, params, qlen_t,
+                                                 view, k_pol)
+    else:
+        admit_raw, budget = _kernel_region_admit_slab(kernel, params, qlen_t,
+                                                      view, layout, x)
     admit = is_job & admit_raw & (qlen_t < rmax_t)
     od_now = is_job & (~admit)
     target_mask = slot_region == target
@@ -1504,9 +1792,14 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
         # host orchestrator pops it before consulting the admission law)
         qlen_p = jnp.sum(jnp.where(iota_r == pre_region, carry.qlen, 0))
         qlen_wo = jnp.maximum(qlen_p - 1, 0)
-        resume_raw = _kernel_on_preempt(kernel, params, age_pre,
-                                        rp["notice"][pre_region], qlen_wo,
-                                        k_pre)
+        if layout is None:
+            resume_raw = _kernel_on_preempt(kernel, params, age_pre,
+                                            rp["notice"][pre_region],
+                                            qlen_wo, k_pre)
+        else:
+            resume_raw = _kernel_on_preempt_slab(kernel, params, age_pre,
+                                                 rp["notice"][pre_region],
+                                                 qlen_wo, layout, x)
         resume = pre_hit & resume_raw
         defect_pre = pre_hit & (~resume)
         price_p = rp["price"][pre_region]
@@ -1537,19 +1830,33 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
     order = jnp.where(join_mask | resume_mask, carry.next_seq, carry.order)
 
     fire_j = is_job & (iota_r == home)
-    next_job = jnp.where(fire_j, _sample_job_clocks(topo, k_job, rp),
-                         carry.next_job - dt)
     fire_s = is_spot & (iota_r == spot_region)
-    next_spot = jnp.where(fire_s,
-                          _sample_region_spot_clocks(topo, k_spot, rp),
-                          carry.next_spot - dt)
-    if preempt_on:
+    if layout is None:
+        job_draws = _sample_job_clocks(topo, k_job, rp)
+        spot_draws = _sample_region_spot_clocks(topo, k_spot, rp)
+    else:
+        job_draws = _slab_spot_clocks(tuple(r.job for r in topo.regions),
+                                      layout.uniforms(x, layout.job),
+                                      rp["job_scale"])
+        spot_draws = _slab_spot_clocks(tuple(r.spot for r in topo.regions),
+                                       layout.uniforms(x, layout.spot),
+                                       rp["spot_scale"])
+    next_job = jnp.where(fire_j, job_draws, carry.next_job - dt)
+    next_spot = jnp.where(fire_s, spot_draws, carry.next_spot - dt)
+    if not preempt_on:
+        next_preempt = carry.next_preempt
+    elif layout is None:
         fire_p = is_pre & (iota_r == pre_region)
         next_preempt = jnp.where(
-            fire_p, _sample_region_preempt_clocks(topo, k_pre, rp),
+            fire_p, sample_hazard_clocks(_region_tags(topo), k_pre,
+                                         rp["hazard"]),
             carry.next_preempt - dt)
     else:
-        next_preempt = carry.next_preempt
+        # superposed scalar clock (see _market_event)
+        next_preempt = jnp.where(
+            is_pre, hazard_clock(rp["hazard"],
+                                 layout.uniforms(x, layout.preempt)[0]),
+            carry.next_preempt - dt)
 
     new_carry = RegionState(
         key=key,
@@ -1605,61 +1912,88 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
     return new_carry, new_stats
 
 
+def _region_layout(topo: RegionTopology, kernel,
+                   preempt_on: bool) -> SlabLayout:
+    """Slab column map for the region loop: job/spot spans are the max
+    ``u_dim`` across regions (shared uniforms, see
+    :func:`_slab_spot_clocks`)."""
+    return build_slab_layout(
+        kernel, job_udim=max(process_udim(r.job) for r in topo.regions),
+        spot_udim=max(process_udim(r.spot) for r in topo.regions),
+        n=topo.n_regions, preempt_on=preempt_on,
+        has_route=hasattr(kernel, "route"), market=True)
+
+
 def run_region_window(topo: RegionTopology, kernel, preempt_on: bool,
                       state: RegionState, params, rp: dict,
-                      k_cost: jax.Array, n_events: int
+                      k_cost: jax.Array, n_events: int,
+                      layout: SlabLayout | None = None
                       ) -> tuple[RegionState, RegionWindowStats]:
     """Run ``n_events`` merged region events; one window of float32 sums."""
-    step = functools.partial(_region_event, topo, kernel, preempt_on,
+    step = functools.partial(_region_event, topo, kernel, preempt_on, layout,
                              params=params, rp=rp, k_cost=k_cost)
-    return _scan_window(step, RegionWindowStats.zeros(topo.n_regions),
-                        state, n_events)
+    zeros = RegionWindowStats.zeros(topo.n_regions)
+    if layout is None:
+        return _scan_window(step, zeros, state, n_events)
+    return _scan_window_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
+                             n_events, layout.n_cols)
 
 
 def run_region_chunked(topo: RegionTopology, kernel, preempt_on: bool,
                        state: RegionState, params, rp: dict,
-                       k_cost: jax.Array, n_events: int, chunk_events: int
+                       k_cost: jax.Array, n_events: int, chunk_events: int,
+                       layout: SlabLayout | None = None
                        ) -> tuple[RegionState, RegionWindowStats]:
-    step = functools.partial(_region_event, topo, kernel, preempt_on,
+    step = functools.partial(_region_event, topo, kernel, preempt_on, layout,
                              params=params, rp=rp, k_cost=k_cost)
-    return _scan_chunked(step, RegionWindowStats.zeros(topo.n_regions),
-                         state, n_events, chunk_events)
+    zeros = RegionWindowStats.zeros(topo.n_regions)
+    if layout is None:
+        return _scan_chunked(step, zeros, state, n_events, chunk_events)
+    return _scan_chunked_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
+                              n_events, chunk_events, layout.n_cols)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("topo", "kernel", "preempt_on", "n_events",
-                     "chunk_events", "burn_in"),
+                     "chunk_events", "burn_in", "rng"),
 )
 def _run_region_sim_jit(topo, kernel, preempt_on, n_events, chunk_events,
-                        burn_in, params, rp, k_cost, key):
-    state = init_region_state(key, topo, rp, preempt_on)
+                        burn_in, rng, params, rp, k_cost, key):
+    layout = (_region_layout(topo, kernel, preempt_on)
+              if rng == "slab" else None)
+    state = init_region_state(key, topo, rp, preempt_on,
+                              scalar_preempt=layout is not None)
     if burn_in:
         state, _ = run_region_window(topo, kernel, preempt_on, state, params,
-                                     rp, k_cost, burn_in)
+                                     rp, k_cost, burn_in, layout=layout)
         state = _rebase_order(state)
     return run_region_chunked(topo, kernel, preempt_on, state, params, rp,
-                              k_cost, n_events, chunk_events)
+                              k_cost, n_events, chunk_events, layout=layout)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("topo", "kernel", "preempt_on", "n_events",
-                     "chunk_events", "burn_in"),
+                     "chunk_events", "burn_in", "rng"),
 )
 def _run_region_sweep_jit(topo, kernel, preempt_on, n_events, chunk_events,
-                          burn_in, params, rp, k_cost, keys):
+                          burn_in, rng, params, rp, k_cost, keys):
     """(grid × regions-config × seeds) fleet as one nested-vmap XLA program
     (broadcast ``in_axes``; see :func:`_flat_lane_args`)."""
+    layout = (_region_layout(topo, kernel, preempt_on)
+              if rng == "slab" else None)
 
     def one(p, r, kc, key):
-        state = init_region_state(key, topo, r, preempt_on)
+        state = init_region_state(key, topo, r, preempt_on,
+                                  scalar_preempt=layout is not None)
         if burn_in:
             state, _ = run_region_window(topo, kernel, preempt_on, state, p,
-                                         r, kc, burn_in)
+                                         r, kc, burn_in, layout=layout)
             state = _rebase_order(state)
         _, stats = run_region_chunked(topo, kernel, preempt_on, state, p, r,
-                                      kc, n_events, chunk_events)
+                                      kc, n_events, chunk_events,
+                                      layout=layout)
         return stats
 
     per_seeds = jax.vmap(one, in_axes=(None, None, None, 0))
@@ -1671,39 +2005,54 @@ def _run_region_sweep_jit(topo, kernel, preempt_on, n_events, chunk_events,
     jax.jit,
     static_argnames=("topo", "kernel", "preempt_on", "n_events",
                      "chunk_events", "burn_in", "tile", "interpret",
-                     "executor"),
+                     "executor", "rng"),
 )
 def _run_region_sweep_pallas_jit(topo, kernel, preempt_on, n_events,
                                  chunk_events, burn_in, tile, interpret,
                                  params, rp, k_cost, keys,
-                                 executor="pallas"):
+                                 executor="pallas", rng="split"):
     """The region fleet through the same batched-event kernel family: the
     engine-state blocks grow a region axis — (tile, R) clock vectors,
     (tile, sum rmax_r) packed slot arrays — and :func:`_region_event` is
     the vmap-ed kernel body.  Bit-for-bit the ``executor="ref"`` scan
     oracle; integer stats bitwise / float sums to ~ulp vs
-    :func:`_run_region_sweep_jit` (see the module docstring)."""
+    :func:`_run_region_sweep_jit` (see the module docstring).  Under
+    ``rng="slab"`` the slab is a per-window input block and the kernel
+    performs no RNG at all."""
     g, s = k_cost.shape[0], keys.shape[0]
     (params_f, rp_f), k_f, keys_f = _flat_lane_args((params, rp), k_cost,
                                                     keys)
     params_b = {"params": params_f, "rp": rp_f, "k": k_f}
+    layout = (_region_layout(topo, kernel, preempt_on)
+              if rng == "slab" else None)
     state0 = jax.vmap(
-        lambda key, r: init_region_state(key, topo, r,
-                                         preempt_on))(keys_f, rp_f)
-
-    def step(carry, stats, p):
-        return _region_event(topo, kernel, preempt_on, carry, stats,
-                             p["params"], p["rp"], p["k"])
-
+        lambda key, r: init_region_state(
+            key, topo, r, preempt_on,
+            scalar_preempt=layout is not None))(keys_f, rp_f)
     plan = _window_plan(n_events, chunk_events, burn_in)
+
+    if layout is not None:
+        xs = _lane_slabs(state0, plan, layout)
+
+        def step(carry, stats, p, x):
+            return _region_event(topo, kernel, preempt_on, layout, carry,
+                                 stats, p["params"], p["rp"], p["k"], x=x)
+    else:
+        xs = None
+
+        def step(carry, stats, p):
+            return _region_event(topo, kernel, preempt_on, None, carry,
+                                 stats, p["params"], p["rp"], p["k"])
+
     if executor == "ref":
         _, stats = batched_event_windows_ref(
             step, state0, params_b, RegionWindowStats.zeros(topo.n_regions),
-            plan, epilogue=_rebase_order)
+            plan, xs=xs, epilogue=_rebase_order)
     else:
         _, stats = batched_events(
             step, state0, params_b, RegionWindowStats.zeros(topo.n_regions),
-            plan, tile=tile, interpret=interpret, epilogue=_rebase_order)
+            plan, xs=xs, tile=tile, interpret=interpret,
+            epilogue=_rebase_order)
     if burn_in:
         stats = jax.tree.map(lambda x: x[:, 1:], stats)
     return _unflatten_lanes(stats, g, s)
@@ -1772,6 +2121,7 @@ def run_region_sim(
     burn_in: int = 0,
     chunk_events: int | None = DEFAULT_CHUNK_EVENTS,
     impl: str = "xla",
+    rng: str = "split",
     tile: int = 256,
     interpret: bool | None = None,
 ) -> dict:
@@ -1780,10 +2130,11 @@ def run_region_sim(
     A degenerate topology (:attr:`RegionTopology.is_degenerate`) with a
     non-routing kernel reproduces :func:`run_sim` (and the 1-pool
     :func:`run_market_sim`) bit-for-bit per seed.  ``chunk_events`` /
-    ``impl`` behave exactly as in :func:`run_sim`.
+    ``impl`` / ``rng`` behave exactly as in :func:`run_sim`.
     """
     topology = as_topology(topology)
     params = {} if params is None else params
+    _check_rng(rng)
     rp = topology.params()
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
     if impl in ("pallas", "ref"):
@@ -1792,13 +2143,14 @@ def run_region_sim(
             tile, default_interpret() if interpret is None else interpret,
             jax.tree.map(lambda x: jnp.asarray(x)[None], params),
             jax.tree.map(lambda x: jnp.asarray(x)[None], rp),
-            jnp.float32(k)[None], _raw_keys(key)[None], executor=impl)
+            jnp.float32(k)[None], _raw_keys(key)[None], executor=impl,
+            rng=rng)
         stats = jax.tree.map(lambda x: x[0, 0], stats)
     elif impl == "xla":
         _, stats = _run_region_sim_jit(topology, kernel,
                                        topology.preemptible, n_events, chunk,
-                                       burn_in, params, rp, jnp.float32(k),
-                                       key)
+                                       burn_in, rng, params, rp,
+                                       jnp.float32(k), key)
     else:
         raise ValueError(
             f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
@@ -1824,6 +2176,7 @@ def run_region_sweep(
     burn_in: int = 0,
     chunk_events: int | None = DEFAULT_CHUNK_EVENTS,
     impl: str = "xla",
+    rng: str = "split",
     tile: int = 256,
     interpret: bool | None = None,
 ) -> dict:
@@ -1858,6 +2211,7 @@ def run_region_sweep(
     topology = as_topology(topology)
     n = topology.n_regions
     params = {} if params is None else params
+    _check_rng(rng)
     params = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params)
     vparams = {} if vector_params is None else jax.tree.map(
         lambda x: jnp.asarray(x, jnp.float32), dict(vector_params))
@@ -1890,11 +2244,12 @@ def run_region_sweep(
         stats = _run_region_sweep_pallas_jit(
             topology, kernel, preempt_on, n_events, chunk, burn_in, tile,
             default_interpret() if interpret is None else interpret,
-            params_flat, rp_flat, k_flat, _raw_keys(keys), executor=impl)
+            params_flat, rp_flat, k_flat, _raw_keys(keys), executor=impl,
+            rng=rng)
     elif impl == "xla":
         stats = _run_region_sweep_jit(topology, kernel, preempt_on, n_events,
-                                      chunk, burn_in, params_flat, rp_flat,
-                                      k_flat, keys)
+                                      chunk, burn_in, rng, params_flat,
+                                      rp_flat, k_flat, keys)
     else:
         raise ValueError(
             f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")

@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
+from repro.core.clocks import choice_cols, gumbel_from_u, kernel_slab_cols
 from repro.core.policies import three_phase_admit_prob
 
 _INF = np.float32(3e38)  # np scalar: inlines as a literal in kernel traces
@@ -253,6 +254,23 @@ def choose_pool(choice: str, pool_state: PoolState, params,
     raise ValueError(f"unknown pool choice rule {choice!r}")
 
 
+def choose_pool_u(choice: str, pool_state: PoolState, params,
+                  u: jax.Array) -> jax.Array:
+    """Slab-stream twin of :func:`choose_pool`: draws come from pre-drawn
+    float32 uniforms instead of a key (``repro.core.clocks.choice_cols``
+    says how many).  Deterministic rules consume nothing; ``uniform`` one
+    column; ``weighted`` Gumbel-samples from ``n`` columns.  Equal in
+    distribution to the key path, not bitwise.
+    """
+    n = pool_state.price.shape[0]
+    if choice == "uniform":
+        return jnp.minimum((u[0] * n).astype(jnp.int32), n - 1)
+    if choice == "weighted":
+        g = gumbel_from_u(u[:n])
+        return jnp.argmax(params["pool_logits"] + g).astype(jnp.int32)
+    return choose_pool(choice, pool_state, params, key=None)
+
+
 @dataclasses.dataclass(frozen=True)
 class PoolChoiceKernel:
     """Adapt any legacy kernel to the market protocol with a choice rule.
@@ -273,6 +291,27 @@ class PoolChoiceKernel:
 
     def on_preempt(self, params, age, notice, qlen, key):
         del params, age, notice, qlen, key
+        return jnp.zeros((), jnp.bool_)
+
+    def slab_cols(self, hook, n):
+        if hook == "admit_market":
+            base_cols = kernel_slab_cols(self.base, "admit", n)
+            if base_cols is None:  # legacy base: whole hook falls back
+                return None
+            return base_cols + choice_cols(self.choice, n)
+        if hook == "on_preempt":
+            return 0  # always defects — draws nothing
+        return None
+
+    def admit_market_u(self, params, qlen, pool_state, u):
+        base_cols = kernel_slab_cols(self.base, "admit",
+                                     pool_state.price.shape[0])
+        admit, budget = self.base.admit_u(params, qlen, u[:base_cols])
+        return admit, budget, choose_pool_u(self.choice, pool_state, params,
+                                            u[base_cols:])
+
+    def on_preempt_u(self, params, age, notice, qlen, u):
+        del params, age, notice, qlen, u
         return jnp.zeros((), jnp.bool_)
 
 
@@ -313,4 +352,24 @@ class NoticeAwareKernel:
         within = checkpoint_within_notice(ckpt, notice)
         readmit = jax.random.uniform(key) < three_phase_admit_prob(
             qlen, params["r"])
+        return within & readmit
+
+    def slab_cols(self, hook, n):
+        if hook == "admit_market":
+            return 1 + choice_cols(self.choice, n)  # admission draw + rule
+        if hook == "on_preempt":
+            return 1  # the re-admission draw
+        return None
+
+    def admit_market_u(self, params, qlen, pool_state, u):
+        p = three_phase_admit_prob(qlen, params["r"])
+        admit = u[0] < p
+        pool = choose_pool_u(self.choice, pool_state, params, u[1:])
+        return admit, _INF, pool
+
+    def on_preempt_u(self, params, age, notice, qlen, u):
+        del age
+        ckpt = params.get("ckpt", jnp.float32(self.checkpoint_time))
+        within = checkpoint_within_notice(ckpt, notice)
+        readmit = u[0] < three_phase_admit_prob(qlen, params["r"])
         return within & readmit

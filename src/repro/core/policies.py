@@ -58,7 +58,11 @@ def three_phase_admit_prob(qlen, r):
 
 @dataclasses.dataclass(frozen=True)
 class ThreePhaseKernel:
-    """Theorem-4 engine kernel; params ``{"r": f32}``."""
+    """Theorem-4 engine kernel; params ``{"r": f32}``.
+
+    Slab-aware (``rng="slab"``): ``admit_u`` owns one uniform column —
+    the Bernoulli admission draw (docs/kernels.md, "Randomness protocol").
+    """
 
     def init_params(self, r: float) -> dict:
         return {"r": jnp.float32(r)}
@@ -66,6 +70,14 @@ class ThreePhaseKernel:
     def admit(self, params, qlen, key):
         p = three_phase_admit_prob(qlen, params["r"])
         return jax.random.uniform(key) < p, _INF
+
+    def slab_cols(self, hook, n):
+        del n
+        return 1 if hook == "admit" else None
+
+    def admit_u(self, params, qlen, u):
+        p = three_phase_admit_prob(qlen, params["r"])
+        return u[0] < p, _INF
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +97,17 @@ class SingleSlotKernel:
     def admit(self, params, qlen, key):
         wp = params.get("wait") if isinstance(params, dict) else None
         x = (self.wait.sample_from(wp, key) if wp else self.wait.sample(key))
+        return (qlen == 0) & (x > 0.0), x
+
+    def slab_cols(self, hook, n):
+        del n
+        # admission itself is deterministic given X; the wait-time family
+        # owns the columns (0 for Infinite/Deterministic waits)
+        return self.wait.u_dim if hook == "admit" else None
+
+    def admit_u(self, params, qlen, u):
+        wp = params.get("wait") if isinstance(params, dict) else None
+        x = self.wait.sample_from_u(wp if wp else self.wait.params(), u)
         return (qlen == 0) & (x > 0.0), x
 
 

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
+from repro.core.clocks import choice_cols, gumbel_from_u
 
 _INF = np.float32(3e38)  # np scalar: inlines as a literal in kernel traces
 
@@ -263,6 +264,20 @@ def choose_region(choice: str, view: RegionView, params,
     raise ValueError(f"unknown routing rule {choice!r}")
 
 
+def choose_region_u(choice: str, view: RegionView, params,
+                    u: jax.Array) -> jax.Array:
+    """Slab-stream twin of :func:`choose_region` (pre-drawn uniforms
+    instead of a key; ``repro.core.clocks.choice_cols`` widths) — the
+    routing analogue of :func:`repro.core.market.choose_pool_u`."""
+    n = view.price.shape[0]
+    if choice == "uniform":
+        return jnp.minimum((u[0] * n).astype(jnp.int32), n - 1)
+    if choice == "weighted":
+        g = gumbel_from_u(u[:n])
+        return jnp.argmax(params["region_logits"] + g).astype(jnp.int32)
+    return choose_region(choice, view, params, key=None)
+
+
 def host_route(choice: str, *, prices, rates, qlens, home: int = 0) -> int:
     """Host-scalar twin of the deterministic :func:`choose_region` rules.
 
@@ -301,9 +316,22 @@ class RoutingKernel:
         del qlens  # already carried by region_state.qlen_region
         return choose_region(self.choice, region_state, params, key)
 
+    def slab_cols(self, hook, n):
+        if hook == "route":
+            return choice_cols(self.choice, n)
+        base_cols = getattr(object.__getattribute__(self, "base"),
+                            "slab_cols", None)
+        return base_cols(hook, n) if base_cols is not None else None
+
+    def route_u(self, params, qlens, region_state: RegionView, u):
+        del qlens
+        return choose_region_u(self.choice, region_state, params, u)
+
     def __getattr__(self, name):
         # delegate the admission/preemption hooks the base actually has, so
         # the engine's hasattr dispatch sees exactly the base's protocol
-        if name in ("admit", "admit_market", "on_preempt", "init_params"):
+        # (key-based hooks and their slab-stream ``*_u`` twins alike)
+        if name in ("admit", "admit_market", "on_preempt", "init_params",
+                    "admit_u", "admit_market_u", "on_preempt_u"):
             return getattr(object.__getattribute__(self, "base"), name)
         raise AttributeError(name)

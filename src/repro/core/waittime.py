@@ -16,9 +16,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import ClassVar
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.clocks import exp_from_u as _exp_from_u
 
 _INF = 3e38
 
@@ -32,7 +35,14 @@ class WaitTime:
     traced ``params`` dict (as produced by :meth:`params`) so a wait-time
     *family* can be swept/vmapped inside one compiled program — the
     distribution's shape is static, only its parameters are traced.
+
+    For the engine's ``rng="slab"`` stream, :meth:`sample_from_u` transforms
+    ``u_dim`` pre-drawn float32 uniforms instead of consuming a key (equal
+    in distribution, not bitwise — see :mod:`repro.core.clocks`).
     """
+
+    #: uniform draws :meth:`sample_from_u` consumes (slab stream)
+    u_dim: ClassVar[int] = 0
 
     def params(self) -> dict:
         """Traced-parameter pytree for :meth:`sample_from`."""
@@ -40,6 +50,10 @@ class WaitTime:
 
     def sample_from(self, params: dict, key: jax.Array) -> jax.Array:
         """Draw X with this family's shape but parameters from ``params``."""
+        raise NotImplementedError
+
+    def sample_from_u(self, params: dict, u: jax.Array) -> jax.Array:
+        """Slab-stream draw from ``u[:u_dim]`` float32 uniforms."""
         raise NotImplementedError
 
     def sample(self, key: jax.Array) -> jax.Array:
@@ -61,6 +75,10 @@ class InfiniteWait(WaitTime):
         del params, key
         return jnp.asarray(_INF, jnp.float32)
 
+    def sample_from_u(self, params, u):
+        del params, u
+        return jnp.asarray(_INF, jnp.float32)
+
     def mean(self):
         return math.inf
 
@@ -75,12 +93,18 @@ class TwoPointWait(WaitTime):
     p: float
     value: float
 
+    u_dim: ClassVar[int] = 1
+
     def params(self):
         return {"p": jnp.float32(self.p), "value": jnp.float32(self.value)}
 
     def sample_from(self, params, key):
         take = jax.random.uniform(key) < params["p"]
         return jnp.where(take, params["value"], jnp.float32(0.0))
+
+    def sample_from_u(self, params, u):
+        return jnp.where(u[0] < params["p"], params["value"],
+                         jnp.float32(0.0))
 
     def mean(self):
         return self.p * self.value
@@ -93,11 +117,16 @@ class TwoPointWait(WaitTime):
 class ExponentialWait(WaitTime):
     rate_: float
 
+    u_dim: ClassVar[int] = 1
+
     def params(self):
         return {"rate": jnp.float32(self.rate_)}
 
     def sample_from(self, params, key):
         return jax.random.exponential(key, dtype=jnp.float32) / params["rate"]
+
+    def sample_from_u(self, params, u):
+        return _exp_from_u(u[0]) / params["rate"]
 
     def mean(self):
         return 1.0 / self.rate_
@@ -115,6 +144,10 @@ class DeterministicWait(WaitTime):
 
     def sample_from(self, params, key):
         del key
+        return params["value"]
+
+    def sample_from_u(self, params, u):
+        del u
         return params["value"]
 
     def mean(self):

@@ -14,18 +14,28 @@ import jax.numpy as jnp
 
 
 def batched_event_windows_ref(step, state, params, stats_zero,
-                              events_per_window, *, epilogue=None):
-    """Reference: ``(final_state, stats)`` with stats leaves (B, W, ...)."""
+                              events_per_window, *, xs=None, epilogue=None):
+    """Reference: ``(final_state, stats)`` with stats leaves (B, W, ...).
+
+    ``xs`` (optional) matches the kernel's contract: a pytree of
+    ``(B, n_windows, max_ev, ...)`` per-event window inputs; the event body
+    then takes a fourth argument — this event's row.
+    """
     b = jax.tree.leaves(state)[0].shape[0]
     vstep = jax.vmap(step)
 
-    def window(state, n_ev):
+    def window(state, n_ev, xw):
         zeros = jax.tree.map(
             lambda z: jnp.zeros((b,) + z.shape, z.dtype), stats_zero)
 
-        def event(_, carry):
+        def event(i, carry):
             st, acc = carry
-            return vstep(st, acc, params)
+            if xw is None:
+                return vstep(st, acc, params)
+            x = jax.tree.map(
+                lambda leaf: jax.lax.dynamic_index_in_dim(
+                    leaf, i, axis=1, keepdims=False), xw)
+            return vstep(st, acc, params, x)
 
         state, acc = jax.lax.fori_loop(0, n_ev, event, (state, zeros))
         if epilogue is not None:
@@ -33,8 +43,10 @@ def batched_event_windows_ref(step, state, params, stats_zero,
         return state, acc
 
     windows = []
-    for n_ev in events_per_window:
-        state, acc = window(state, n_ev)
+    for w, n_ev in enumerate(events_per_window):
+        xw = None if xs is None else jax.tree.map(lambda leaf: leaf[:, w],
+                                                  xs)
+        state, acc = window(state, n_ev, xw)
         windows.append(acc)
-    stats = jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *windows)
+    stats = jax.tree.map(lambda *leaves: jnp.stack(leaves, axis=1), *windows)
     return state, stats

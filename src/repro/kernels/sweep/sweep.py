@@ -61,19 +61,24 @@ def _window_spec(shape: tuple, tile: int) -> pl.BlockSpec:
                         lambda t, w, _n=len(rest): (t, w) + (0,) * _n)
 
 
-def _sweep_kernel(nev_ref, *refs, step, epilogue, n_state, n_params,
-                  state_tree, params_tree, stats_zero, tile):
+def _sweep_kernel(nev_ref, *refs, step, epilogue, n_state, n_params, n_xs,
+                  state_tree, params_tree, xs_tree, stats_zero, tile):
     """One (lane-tile, window) grid step: a full event block, fused.
 
     nev_ref (1,) i32 — events in this window; refs order is
-    [state_in..., params...] then [state_out..., stats_out...].  state_out
-    doubles as the VMEM-resident engine state across the window axis.
+    [state_in..., params..., xs...] then [state_out..., stats_out...].
+    state_out doubles as the VMEM-resident engine state across the window
+    axis; xs blocks (when present) are (tile, 1, max_ev, ...) per-window
+    per-event inputs — the engine's PRNG slab — indexed row-by-row inside
+    the event loop, so a slab-driven body performs zero in-kernel RNG.
     """
     wj = pl.program_id(1)
     state_in = refs[:n_state]
     params_in = refs[n_state:n_state + n_params]
-    state_out = refs[n_state + n_params:2 * n_state + n_params]
-    stats_out = refs[2 * n_state + n_params:]
+    xs_in = refs[n_state + n_params:n_state + n_params + n_xs]
+    n_in = n_state + n_params + n_xs
+    state_out = refs[n_in:n_in + n_state]
+    stats_out = refs[n_in + n_state:]
 
     @pl.when(wj == 0)
     def _seed():
@@ -88,9 +93,20 @@ def _sweep_kernel(nev_ref, *refs, step, epilogue, n_state, n_params,
                          stats_zero)
     vstep = jax.vmap(step)
 
-    def event(_, carry):
-        st, acc = carry
-        return vstep(st, acc, params)
+    if n_xs:
+        xs_block = jax.tree.unflatten(xs_tree, [r[...] for r in xs_in])
+
+        def event(i, carry):
+            st, acc = carry
+            x = jax.tree.map(
+                lambda b: jax.lax.dynamic_index_in_dim(b[:, 0], i, axis=1,
+                                                       keepdims=False),
+                xs_block)
+            return vstep(st, acc, params, x)
+    else:
+        def event(_, carry):
+            st, acc = carry
+            return vstep(st, acc, params)
 
     state, stats = jax.lax.fori_loop(0, nev_ref[0], event, (state, stats))
     if epilogue is not None:
@@ -102,18 +118,23 @@ def _sweep_kernel(nev_ref, *refs, step, epilogue, n_state, n_params,
 
 
 def batched_event_windows(step, state, params, stats_zero, events_per_window,
-                          *, tile: int = 256, interpret: bool = True,
+                          *, xs=None, tile: int = 256, interpret: bool = True,
                           epilogue=None):
     """Run stacked event windows for a batch of simulation lanes on-chip.
 
     Args:
       step: per-lane event body ``(state, stats, params) -> (state, stats)``
-        over unbatched pytrees (vmap-ed across the lane tile in-kernel).
+        over unbatched pytrees (vmap-ed across the lane tile in-kernel);
+        with ``xs``, the body takes a fourth argument — this event's xs row.
       state: pytree of ``(B, ...)`` arrays — per-lane initial engine state.
       params: pytree of ``(B, ...)`` arrays — per-lane traced parameters.
       stats_zero: pytree of *unbatched* zero accumulators defining the
         per-window stats shapes/dtypes (e.g. ``WindowStats.zeros()``).
       events_per_window: static-length sequence of per-window event counts.
+      xs: optional pytree of ``(B, n_windows, max_ev, ...)`` per-event
+        window inputs (``max_ev`` = max of ``events_per_window``; rows past
+        a window's count are ignored).  Each window's block streams in as a
+        (tile, 1, max_ev, ...) VMEM input — the engine's PRNG slab path.
       tile: lanes per kernel instance (clamped to B; B is padded up to a
         tile multiple with copies of lane 0, sliced off on return).
       interpret: run through the Pallas interpreter (the CPU fallback).
@@ -126,6 +147,7 @@ def batched_event_windows(step, state, params, stats_zero, events_per_window,
     """
     state_leaves, state_tree = jax.tree.flatten(state)
     params_leaves, params_tree = jax.tree.flatten(params)
+    xs_leaves, xs_tree = jax.tree.flatten(xs)
     b = state_leaves[0].shape[0]
     tile = max(1, min(tile, b))
     pad = -b % tile
@@ -136,6 +158,7 @@ def batched_event_windows(step, state, params, stats_zero, events_per_window,
 
         state_leaves = [padlane(x) for x in state_leaves]
         params_leaves = [padlane(x) for x in params_leaves]
+        xs_leaves = [padlane(x) for x in xs_leaves]
     bp = b + pad
     n_windows = len(events_per_window)
     nev = jnp.asarray(events_per_window, jnp.int32)
@@ -148,20 +171,21 @@ def batched_event_windows(step, state, params, stats_zero, events_per_window,
     kernel = functools.partial(
         _sweep_kernel, step=step, epilogue=epilogue,
         n_state=len(state_leaves), n_params=len(params_leaves),
-        state_tree=state_tree, params_tree=params_tree,
-        stats_zero=stats_zero, tile=tile,
+        n_xs=len(xs_leaves), state_tree=state_tree, params_tree=params_tree,
+        xs_tree=xs_tree, stats_zero=stats_zero, tile=tile,
     )
     out = pl.pallas_call(
         kernel,
         grid=(bp // tile, n_windows),
         in_specs=[pl.BlockSpec((1,), lambda t, w: (w,))]
         + [_resident_spec(x.shape, tile) for x in state_leaves]
-        + [_resident_spec(x.shape, tile) for x in params_leaves],
+        + [_resident_spec(x.shape, tile) for x in params_leaves]
+        + [_window_spec(x.shape, tile) for x in xs_leaves],
         out_specs=[_resident_spec(s.shape, tile) for s in state_structs]
         + [_window_spec(s.shape, tile) for s in stats_structs],
         out_shape=state_structs + stats_structs,
         interpret=interpret,
-    )(nev, *state_leaves, *params_leaves)
+    )(nev, *state_leaves, *params_leaves, *xs_leaves)
     n_state = len(state_leaves)
     unpad = (lambda x: x[:b]) if pad else (lambda x: x)
     final_state = jax.tree.unflatten(state_tree,

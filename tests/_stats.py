@@ -1,0 +1,78 @@
+"""Shared statistical-equivalence helpers for the test suite.
+
+Dependency-free (numpy only) two-sample Kolmogorov–Smirnov machinery used
+to pin the engine's ``rng="slab"`` stream against the frozen ``rng="split"``
+stream (tests/test_event_rng.py): the two streams are *distributionally*
+equal by construction, so their per-seed sweep marginals must pass a KS
+test at any power — while clearly different configurations must fail it
+(the helper's own meta-test).
+
+Also carries the stats-dict comparison helpers the executor-equivalence
+tests share (bitwise dict equality, and the int-bitwise/float-rtol
+contract vs the XLA executor), so test modules don't import from each
+other.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engine import INT_STATS
+
+
+def ks_2samp(a, b) -> tuple[float, float]:
+    """Two-sample KS statistic + asymptotic p-value (Stephens' small-sample
+    correction, the classic Numerical-Recipes form; ties allowed)."""
+    a = np.sort(np.asarray(a, np.float64).ravel())
+    b = np.sort(np.asarray(b, np.float64).ravel())
+    n, m = len(a), len(b)
+    if n == 0 or m == 0:
+        raise ValueError("ks_2samp needs non-empty samples")
+    grid = np.concatenate([a, b])
+    d = float(np.max(np.abs(np.searchsorted(a, grid, side="right") / n
+                            - np.searchsorted(b, grid, side="right") / m)))
+    en = np.sqrt(n * m / (n + m))
+    t = (en + 0.12 + 0.11 / en) * d
+    if t < 0.3:  # the alternating series diverges as t -> 0; true p ~ 1
+        return d, 1.0
+    ks = np.arange(1, 101)
+    p = 2.0 * np.sum((-1.0) ** (ks - 1) * np.exp(-2.0 * (ks * t) ** 2))
+    return d, float(min(max(p, 0.0), 1.0))
+
+
+def assert_same_distribution(a, b, *, alpha: float = 1e-4,
+                             name: str = "") -> None:
+    """Fail iff a KS test rejects "same distribution" at level ``alpha``.
+
+    ``alpha`` is deliberately tiny: under H0 (which slab-vs-split satisfies
+    exactly) the flake probability per assertion is ``alpha``; a genuinely
+    different distribution at these sample sizes lands many orders of
+    magnitude below it.
+    """
+    d, p = ks_2samp(a, b)
+    assert p >= alpha, (
+        f"KS rejects same-distribution for {name or 'sample'}: "
+        f"D={d:.4f}, p={p:.2e} < {alpha:.0e} "
+        f"(n={np.size(a)}, m={np.size(b)})")
+
+
+def assert_stats_equal(a: dict, b: dict, context: str = "") -> None:
+    """Every summarized statistic bitwise identical (the pallas == ref
+    contract)."""
+    for stat_name, v in a.items():
+        np.testing.assert_array_equal(
+            np.asarray(v), np.asarray(b[stat_name]),
+            err_msg=f"{stat_name} diverged ({context})")
+
+
+def assert_stats_close(xla: dict, pal: dict, context: str = "") -> None:
+    """The cross-layout contract vs the production XLA executor: integer
+    event accounting bitwise, float sums to ~ulp rtol."""
+    for stat_name, v in xla.items():
+        if stat_name in INT_STATS:
+            np.testing.assert_array_equal(
+                np.asarray(v), np.asarray(pal[stat_name]),
+                err_msg=f"{stat_name} diverged ({context})")
+        else:
+            np.testing.assert_allclose(
+                np.asarray(v), np.asarray(pal[stat_name]), rtol=1e-5,
+                err_msg=f"{stat_name} diverged ({context})")

@@ -1,0 +1,419 @@
+"""The slab PRNG stream (``rng="slab"``) + superposed preemption clocks.
+
+Contract layers (ISSUE 5 / PR 5):
+
+  * **Its own bitwise ledger** — on the slab stream, ``impl="pallas"`` ==
+    ``impl="ref"`` to the last bit at every tile size, and vs ``impl="xla"``
+    integer event accounting is bitwise (floats ~ulp) — the same executor
+    contract the split stream holds, re-proven for the new stream on all
+    three loops (single / market / region).
+  * **Degenerate cross-loop identity** — a 1-pool zero-hazard market and a
+    1-region topology on the slab stream reproduce the single-queue slab
+    engine bit-for-bit (the slab analogue of the PR-2/PR-4 ledger: the
+    column layout reduces exactly to the simpler loop's).
+  * **Slab == split in distribution** — the two streams simulate the same
+    continuous-time model (the superposed scalar preemption clock is
+    *exactly* the per-pool vector clock law, by the Poisson superposition
+    theorem), so per-seed sweep marginals pass two-sample KS tests at any
+    power (tests/_stats.py; property-tested across random market and
+    region configurations).
+  * **Seed-compat wrappers untouched** — the wrappers never pass ``rng``
+    and therefore stay on the frozen split stream (their bit-for-bit
+    contract is frozen in tests/test_core_engine.py).
+
+Everything runs in interpret mode (`JAX_PLATFORMS=cpu` in the CI job).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare interpreter: deterministic fallback
+    from _propcheck import given, settings, st
+
+from _stats import (assert_same_distribution, assert_stats_close,
+                    assert_stats_equal, ks_2samp)
+
+from repro.core import (
+    Exponential,
+    Gamma,
+    NoticeAwareKernel,
+    PoolChoiceKernel,
+    Region,
+    RegionTopology,
+    RoutingKernel,
+    SingleSlotKernel,
+    SpotMarket,
+    SpotPool,
+    ThreePhaseKernel,
+    Uniform,
+    run_market_sim,
+    run_market_sweep,
+    run_region_sweep,
+    run_sim,
+    run_sweep,
+)
+from repro.core.waittime import DeterministicWait, ExponentialWait
+
+LAM, MU, K = 1 / 12, 1 / 24, 10.0
+
+
+def _market(prices, hazards, notices):
+    pools = tuple(
+        SpotPool(Exponential(MU / len(prices)), price=p, hazard=h, notice=n)
+        for p, h, n in zip(prices, hazards, notices))
+    return SpotMarket(pools=pools)
+
+
+def _topology(rmax=8):
+    return RegionTopology(regions=(
+        Region(Exponential(LAM / 4), Exponential(MU / 4), price=0.5,
+               hazard=0.02, notice=0.5, rmax=rmax),
+        Region(Exponential(LAM / 2), Exponential(MU / 4), price=0.3,
+               hazard=0.05, notice=0.01, rmax=rmax),
+        Region(Exponential(LAM / 4), Exponential(MU / 2), price=0.1,
+               hazard=0.10, notice=2.0, rmax=rmax),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# Layer 1: the slab stream's own executor ledger, every tile size
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("tile", [1, 3, 4, 64])
+def test_slab_single_ledger_all_tiles(tile):
+    kw = dict(k=K, n_events=5_000, key=jax.random.key(7), n_seeds=3,
+              rmax=8, chunk_events=2_048, burn_in=512, rng="slab")
+    params = {"r": jnp.linspace(0.25, 4.0, 5)}
+    ref = run_sweep(Exponential(LAM), Exponential(MU), ThreePhaseKernel(),
+                    params, impl="ref", **kw)
+    pal = run_sweep(Exponential(LAM), Exponential(MU), ThreePhaseKernel(),
+                    params, impl="pallas", interpret=True, tile=tile, **kw)
+    assert_stats_equal(ref, pal, f"slab tile={tile}")
+    assert_stats_close(
+        run_sweep(Exponential(LAM), Exponential(MU), ThreePhaseKernel(),
+                  params, **kw), pal, f"slab tile={tile}")
+
+
+@pytest.mark.parametrize("tile", [1, 3, 64])
+def test_slab_market_ledger_all_tiles(tile):
+    kw = dict(k=K, n_events=4_000, key=jax.random.key(0), n_seeds=2,
+              rmax=16, chunk_events=1_024, rng="slab")
+    market = _market((0.5, 0.3, 0.2, 0.1), (0.02, 0.05, 0.0, 0.10),
+                     (0.5, 0.01, 0.0, 2.0))
+    kernel = NoticeAwareKernel(checkpoint_time=0.05)
+    params = {"r": jnp.linspace(0.25, 4.0, 4)}
+    ref = run_market_sweep(Exponential(LAM), market, kernel, params,
+                           impl="ref", **kw)
+    pal = run_market_sweep(Exponential(LAM), market, kernel, params,
+                           impl="pallas", interpret=True, tile=tile, **kw)
+    assert_stats_equal(ref, pal, f"slab market tile={tile}")
+    assert_stats_close(
+        run_market_sweep(Exponential(LAM), market, kernel, params, **kw),
+        pal, f"slab market tile={tile}")
+
+
+@pytest.mark.parametrize("tile", [1, 3, 64])
+def test_slab_region_ledger_all_tiles(tile):
+    kw = dict(k=K, n_events=4_000, key=jax.random.key(1), n_seeds=2,
+              chunk_events=1_024, rng="slab")
+    topo = _topology()
+    kernel = RoutingKernel(NoticeAwareKernel(checkpoint_time=0.05),
+                           choice="least_loaded")
+    params = {"r": jnp.linspace(0.5, 3.0, 4)}
+    ref = run_region_sweep(topo, kernel, params, impl="ref", **kw)
+    pal = run_region_sweep(topo, kernel, params, impl="pallas",
+                           interpret=True, tile=tile, **kw)
+    assert_stats_equal(ref, pal, f"slab region tile={tile}")
+    assert_stats_close(run_region_sweep(topo, kernel, params, **kw), pal,
+                       f"slab region tile={tile}")
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: degenerate cross-loop identity on the slab stream
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("impl", ["xla", "ref"])
+def test_slab_degenerate_market_is_single_engine(impl):
+    kw = dict(k=K, n_events=5_000, key=jax.random.key(3), n_seeds=2,
+              rmax=8, chunk_events=1_024, rng="slab", impl=impl)
+    params = {"r": jnp.linspace(0.25, 4.0, 4)}
+    single = run_sweep(Exponential(LAM), Exponential(MU), ThreePhaseKernel(),
+                       params, **kw)
+    market = run_market_sweep(Exponential(LAM),
+                              SpotMarket.single(Exponential(MU)),
+                              ThreePhaseKernel(), params, **kw)
+    for name, v in single.items():
+        got = np.asarray(market[name])
+        got = got[..., 0] if got.ndim > np.ndim(v) else got
+        np.testing.assert_array_equal(np.asarray(v), got,
+                                      err_msg=f"{name} ({impl})")
+
+
+@pytest.mark.parametrize("impl", ["xla", "ref"])
+def test_slab_degenerate_region_is_single_engine(impl):
+    kw = dict(k=K, n_events=5_000, key=jax.random.key(4), n_seeds=2,
+              chunk_events=1_024, rng="slab", impl=impl)
+    params = {"r": jnp.linspace(0.25, 4.0, 4)}
+    single = run_sweep(Exponential(LAM), Exponential(MU), ThreePhaseKernel(),
+                       params, rmax=8, **kw)
+    topo = RegionTopology.single(Exponential(LAM), Exponential(MU), rmax=8)
+    region = run_region_sweep(topo, ThreePhaseKernel(), params, **kw)
+    for name, v in single.items():
+        got = np.asarray(region[name])
+        got = got[..., 0] if got.ndim > np.ndim(v) else got
+        np.testing.assert_array_equal(np.asarray(v), got,
+                                      err_msg=f"{name} ({impl})")
+
+
+# ---------------------------------------------------------------------------
+# Layer 3: slab == split in distribution (KS on per-seed sweep marginals)
+# ---------------------------------------------------------------------------
+_KS_STATS = ("avg_cost", "avg_delay", "spot_served", "pi0_spot")
+
+
+def _marginals(run, rng, key, stats=_KS_STATS):
+    out = run(rng=rng, key=key)
+    return {name: np.asarray(out[name], np.float64).ravel()
+            for name in stats if name in out}
+
+
+def test_ks_helper_meta_power():
+    """The KS helper itself: same config passes, different r fails."""
+    def run(r, key):
+        return run_sweep(Exponential(LAM), Exponential(MU),
+                         ThreePhaseKernel(), {"r": jnp.float32(r)}, k=K,
+                         n_events=2_000, key=key, n_seeds=64, rmax=8)
+
+    same_a = run(1.5, jax.random.key(11))["avg_cost"].ravel()
+    same_b = run(1.5, jax.random.key(12))["avg_cost"].ravel()
+    assert_same_distribution(same_a, same_b, name="same-config avg_cost")
+    diff = run(4.0, jax.random.key(13))["avg_cost"].ravel()
+    _, p = ks_2samp(same_a, diff)
+    assert p < 1e-6, f"KS failed to separate r=1.5 from r=4.0 (p={p:.2e})"
+
+
+def test_slab_vs_split_single_queue_marginals():
+    def run(rng, key):
+        return run_sweep(Exponential(LAM), Exponential(MU),
+                         ThreePhaseKernel(), {"r": jnp.float32(1.5)}, k=K,
+                         n_events=2_000, key=key, n_seeds=96, rmax=8,
+                         rng=rng)
+
+    split = _marginals(run, "split", jax.random.key(21))
+    slab = _marginals(run, "slab", jax.random.key(22))
+    for name in split:
+        assert_same_distribution(split[name], slab[name], name=name)
+
+
+def test_slab_vs_split_single_slot_wait_family():
+    """The wait-time slab samplers (SingleSlotKernel's admit_u)."""
+    for wait in (DeterministicWait(3.0), ExponentialWait(0.5)):
+        def run(rng, key):
+            return run_sweep(Exponential(LAM), Exponential(MU),
+                             SingleSlotKernel(wait=wait), {}, k=K,
+                             n_events=2_000, key=key, n_seeds=96, rmax=1,
+                             rng=rng)
+
+        split = _marginals(run, "split", jax.random.key(31))
+        slab = _marginals(run, "slab", jax.random.key(32))
+        for name in split:
+            assert_same_distribution(split[name], slab[name],
+                                     name=f"{type(wait).__name__}:{name}")
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    r=st.floats(min_value=0.5, max_value=3.0),
+    price=st.floats(min_value=0.05, max_value=1.0),
+    hazard=st.floats(min_value=0.0, max_value=0.2),
+    notice=st.floats(min_value=0.0, max_value=2.0),
+    n_pools=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_slab_vs_split_market_marginals(r, price, hazard, notice, n_pools,
+                                        seed):
+    """Random market configs: slab-vs-split KS green on cost/delay/
+    preemption marginals (plus the slab executor ledger on the way)."""
+    market = _market((price,) * n_pools,
+                     tuple(hazard * ((i % 2) + 1) / 2
+                           for i in range(n_pools)),
+                     (notice,) * n_pools)
+    kernel = NoticeAwareKernel(checkpoint_time=0.05)
+
+    def run(rng, key):
+        return run_market_sweep(Exponential(LAM), market, kernel,
+                                {"r": jnp.float32(r)}, k=K, n_events=2_000,
+                                key=key, n_seeds=64, rmax=8, rng=rng)
+
+    stats = _KS_STATS + ("preemptions", "resumed", "spot_cost")
+    split = _marginals(run, "split", jax.random.key(seed), stats)
+    slab = _marginals(run, "slab", jax.random.key(seed + 77_777), stats)
+    for name in split:
+        assert_same_distribution(split[name], slab[name],
+                                 name=f"market:{name} seed={seed}")
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    r=st.floats(min_value=0.5, max_value=3.0),
+    hazard=st.floats(min_value=0.0, max_value=0.15),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_slab_vs_split_region_marginals(r, hazard, seed):
+    """Random region configs (hazard override sweeps the superposed clock's
+    total) under a routing kernel."""
+    topo = _topology()
+    kernel = RoutingKernel(NoticeAwareKernel(checkpoint_time=0.05),
+                           choice="least_loaded")
+
+    def run(rng, key):
+        return run_region_sweep(topo, kernel, {"r": jnp.float32(r)}, k=K,
+                                hazards=jnp.float32(hazard),
+                                n_events=2_000, key=key, n_seeds=64,
+                                rng=rng)
+
+    stats = _KS_STATS + ("preemptions", "cross_region_frac")
+    split = _marginals(run, "split", jax.random.key(seed), stats)
+    slab = _marginals(run, "slab", jax.random.key(seed + 77_777), stats)
+    for name in split:
+        assert_same_distribution(split[name], slab[name],
+                                 name=f"region:{name} seed={seed}")
+
+
+# ---------------------------------------------------------------------------
+# Protocol edges: key-synthesis fallback, Gamma shapes, choice rules
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class _LegacyKernel:
+    """A kernel with NO slab hooks: exercises the synthesized-key fallback
+    (two raw slab columns -> a legacy threefry key, hook unchanged)."""
+
+    def admit(self, params, qlen, key):
+        return jax.random.uniform(key) < jnp.float32(0.7), jnp.float32(3e38)
+
+
+def test_legacy_kernel_key_synthesis_fallback():
+    kw = dict(k=K, n_events=3_000, key=jax.random.key(5), n_seeds=2,
+              rmax=4, chunk_events=512, rng="slab")
+    ref = run_sweep(Exponential(LAM), Exponential(MU), _LegacyKernel(), {},
+                    impl="ref", **kw)
+    pal = run_sweep(Exponential(LAM), Exponential(MU), _LegacyKernel(), {},
+                    impl="pallas", interpret=True, **kw)
+    assert_stats_equal(ref, pal, "legacy fallback")
+    xla = run_sweep(Exponential(LAM), Exponential(MU), _LegacyKernel(), {},
+                    **kw)
+    assert_stats_close(xla, pal, "legacy fallback")
+    # and the kernel admits ~70% of arrivals, i.e. the synthesized key
+    # actually drives the in-body draw
+    admitted = xla["spot_served"].sum() + 0.0
+    assert admitted > 0
+
+
+def test_pool_choice_kernel_slab_delegation():
+    """PoolChoiceKernel is slab-aware iff its base is: slab-aware base
+    composes columns; the uniform rule consumes its own column."""
+    market = _market((1.0, 0.4), (0.0, 0.08), (0.0, 0.3))
+    kernel = PoolChoiceKernel(base=ThreePhaseKernel(), choice="uniform")
+
+    def run(rng, key):
+        return run_market_sweep(Exponential(LAM), market, kernel,
+                                {"r": jnp.float32(2.0)}, k=K,
+                                n_events=2_000, key=key, n_seeds=64,
+                                rmax=8, rng=rng)
+
+    split = _marginals(run, "split", jax.random.key(41),
+                       _KS_STATS + ("preemptions",))
+    slab = _marginals(run, "slab", jax.random.key(42),
+                      _KS_STATS + ("preemptions",))
+    for name in split:
+        assert_same_distribution(split[name], slab[name],
+                                 name=f"pool_choice:{name}")
+    # legacy base -> the whole admit_market hook falls back to key synthesis
+    legacy = PoolChoiceKernel(base=_LegacyKernel(), choice="cheapest")
+    assert legacy.slab_cols("admit_market", 2) is None
+    out = run_market_sim(Exponential(LAM), market, legacy, {}, k=K,
+                         n_events=1_000, key=jax.random.key(6), rmax=8,
+                         rng="slab")
+    assert out["jobs_completed"] > 0
+
+
+def test_gamma_shapes_in_slab_mode():
+    # integer shape: sum-of-exponentials slab sampler, KS vs split
+    def run(rng, key):
+        return run_sweep(Gamma(12.0, 1.0), Exponential(MU),
+                         ThreePhaseKernel(), {"r": jnp.float32(1.5)}, k=K,
+                         n_events=2_000, key=key, n_seeds=64, rmax=8,
+                         rng=rng)
+
+    split = _marginals(run, "split", jax.random.key(51))
+    slab = _marginals(run, "slab", jax.random.key(52))
+    for name in split:
+        assert_same_distribution(split[name], slab[name],
+                                 name=f"gamma12:{name}")
+    # non-integer shape: a clear error pointing at rng="split"
+    with pytest.raises(NotImplementedError, match="rng='split'"):
+        run_sweep(Gamma(1.7, 1.0), Exponential(MU), ThreePhaseKernel(),
+                  {"r": jnp.float32(1.5)}, k=K, n_events=64,
+                  key=jax.random.key(0), rng="slab")
+    # ... and still runs fine on the split stream
+    out = run_sim(Gamma(1.7, 1.0), Exponential(MU), ThreePhaseKernel(),
+                  {"r": jnp.float32(1.5)}, k=K, n_events=256,
+                  key=jax.random.key(0))
+    assert out["jobs_arrived"] > 0
+
+
+def test_uniform_spot_family_slab():
+    """Non-exponential spot supply exercises sample_u beyond icdf-exp."""
+    def run(rng, key):
+        return run_sweep(Exponential(LAM), Uniform(0.0, 48.0),
+                         ThreePhaseKernel(), {"r": jnp.float32(1.5)}, k=K,
+                         n_events=2_000, key=key, n_seeds=64, rmax=8,
+                         rng=rng)
+
+    split = _marginals(run, "split", jax.random.key(61))
+    slab = _marginals(run, "slab", jax.random.key(62))
+    for name in split:
+        assert_same_distribution(split[name], slab[name],
+                                 name=f"uniform_spot:{name}")
+
+
+def test_unknown_rng_raises():
+    with pytest.raises(ValueError, match="unknown rng"):
+        run_sweep(Exponential(LAM), Exponential(MU), ThreePhaseKernel(),
+                  {"r": jnp.float32(1.0)}, k=K, n_events=64,
+                  key=jax.random.key(0), rng="counter")
+
+
+# ---------------------------------------------------------------------------
+# The superposition law itself (unit level)
+# ---------------------------------------------------------------------------
+def test_superposed_clock_law():
+    """hazard_clock/thinning_pick reproduce the vector-clock (min, argmin)
+    joint law: matching first/second moments of the min and matching pick
+    frequencies, on host numpy draws."""
+    from repro.core.clocks import hazard_clock, thinning_pick
+
+    hazards = np.array([0.4, 0.0, 1.1, 0.5])
+    rng = np.random.default_rng(0)
+    n = 20_000
+    # vector model: min of per-pool Exp(h_p) + its argmin
+    draws = rng.exponential(1.0, size=(n, 4)) / np.where(hazards > 0,
+                                                         hazards, 1e-30)
+    vec_min = draws.min(axis=1)
+    vec_arg = draws.argmin(axis=1)
+    # superposed model (the shared law, host backend)
+    sup_min = np.array([hazard_clock(hazards, rng.random())
+                        for _ in range(n)])
+    sup_arg = np.array([thinning_pick(hazards, rng.random())
+                        for _ in range(n)])
+    assert_same_distribution(vec_min, sup_min, name="superposed min")
+    total = hazards.sum()
+    for p, h in enumerate(hazards):
+        want = h / total
+        np.testing.assert_allclose((sup_arg == p).mean(), want, atol=0.02)
+        np.testing.assert_allclose((vec_arg == p).mean(), want, atol=0.02)
+    # zero total hazard never fires
+    assert np.isinf(hazard_clock(np.zeros(3), 0.5))

@@ -1,0 +1,71 @@
+"""Perf-regression guard for the bench-smoke CI job.
+
+Compares a freshly-measured smoke BENCH json against the committed
+baseline copy (benchmarks/baselines/) and fails — nonzero exit — if any
+guarded throughput key drops more than ``--max-drop`` (default 30%) below
+the baseline.  Keys are dotted paths into the JSON; higher is better.
+
+    python tools/check_bench_regression.py \
+        --baseline benchmarks/baselines/BENCH_event_rng_smoke.json \
+        --fresh BENCH_event_rng_smoke.json \
+        --key headline.region_slab_events_per_s \
+        --key headline.region_slab_speedup_x \
+        --max-drop 0.30
+
+Smoke runners are noisy; 30% headroom is deliberately generous — the guard
+exists to catch order-of-magnitude regressions (an accidentally retained
+per-event threefry ladder, a de-jitted hot path), not 5% jitter.  Refresh
+the baseline by re-running ``benchmarks/run.py --smoke --only event_rng``
+on a quiet machine and committing the new file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def lookup(tree: dict, dotted: str):
+    node = tree
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            raise KeyError(f"{dotted!r} not found (missing {part!r})")
+        node = node[part]
+    return float(node)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--key", action="append", required=True,
+                    metavar="DOTTED.PATH",
+                    help="throughput key to guard (repeatable)")
+    ap.add_argument("--max-drop", type=float, default=0.30,
+                    help="maximum allowed fractional drop vs baseline")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    failures = []
+    for key in args.key:
+        b, v = lookup(base, key), lookup(fresh, key)
+        floor = b * (1.0 - args.max_drop)
+        verdict = "OK" if v >= floor else "REGRESSION"
+        print(f"{verdict:>10}  {key}: fresh={v:.4g} baseline={b:.4g} "
+              f"floor={floor:.4g}")
+        if v < floor:
+            failures.append(key)
+    if failures:
+        print(f"perf regression: {failures} dropped more than "
+              f"{args.max_drop:.0%} below the committed smoke baseline",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
