@@ -1,34 +1,7 @@
-"""Shared bench timing: separate compile time from steady-state run time.
+"""Shim — the bench timing helper moved to :mod:`repro.obs.timing`.
 
-Every BENCH_*.json records both numbers (plus the ``rng=`` stream the bench
-ran): ``t_compile_s`` is the first-call overhead (trace + XLA compile),
-``t_run_s`` the steady-state wall clock of an already-compiled call with
-``jax.block_until_ready`` on the result — the number every events/s figure
-is derived from.  The old harness warmed with one identical-shape call and
-timed the second; this helper keeps that structure but records what the
-warmup cost instead of throwing it away.
+Kept so older bench invocations (``from _timing import time_compiled``)
+keep working; new code should import :func:`repro.obs.timing.time_compiled`
+and stamp results with :func:`repro.obs.timing.provenance`.
 """
-from __future__ import annotations
-
-import time
-
-import jax
-
-
-def time_compiled(call, *, runs: int = 1):
-    """Time ``call`` (a 0-arg closure returning a pytree) compile + steady.
-
-    Returns ``(result, timing)`` with ``timing = {"t_first_s", "t_run_s",
-    "t_compile_s"}``: the first call pays trace + compile + one run; the
-    steady-state number is the mean of ``runs`` further calls, each blocked
-    to completion.  ``t_compile_s`` is the difference, floored at zero.
-    """
-    t0 = time.perf_counter()
-    out = jax.block_until_ready(call())
-    t_first = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    for _ in range(runs):
-        out = jax.block_until_ready(call())
-    t_run = (time.perf_counter() - t0) / runs
-    return out, {"t_first_s": t_first, "t_run_s": t_run,
-                 "t_compile_s": max(t_first - t_run, 0.0)}
+from repro.obs.timing import provenance, time_compiled  # noqa: F401

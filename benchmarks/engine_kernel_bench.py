@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._timing import time_compiled
+from repro.obs.timing import provenance, time_compiled
 from benchmarks.market_bench import bench_market
 from repro.core import (
     Exponential,
@@ -131,6 +131,7 @@ def measure_engine_kernel(n_r: int = 16, n_seeds: int = 4,
             "BENCH_sweep.json", "sweep_events_per_s"),
         "baseline_market_events_per_s": _baseline(
             "BENCH_market.json", "market_events_per_s"),
+        "provenance": provenance(seed=0, telemetry="off"),
     }
 
     kern = ThreePhaseKernel()

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._timing import time_compiled
+from repro.obs.timing import provenance, time_compiled
 from benchmarks.market_bench import bench_market
 from benchmarks.region_bench import bench_topology
 from repro.core import (
@@ -89,6 +89,7 @@ def measure_event_rng(n_r: int = 16, n_seeds: int = 4,
         "rmax_market": rmax_market,
         "rmax_per_region": rmax_region,
         "backend": jax.default_backend(),
+        "provenance": provenance(seed=0, telemetry="off"),
     }
 
     for loop, run in (

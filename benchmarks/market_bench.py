@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._timing import time_compiled
+from repro.obs.timing import provenance, time_compiled
 from repro.core import (
     Exponential,
     NoticeAwareKernel,
@@ -109,6 +109,7 @@ def measure_market_throughput(n_r: int = 16, n_seeds: int = 4,
         "preemptions_total": float(np.asarray(out["preemptions"]).sum()),
         "resumed_total": float(np.asarray(out["resumed"]).sum()),
         "backend": jax.default_backend(),
+        "provenance": provenance(seed=0, telemetry="off"),
     }
     with open(_bench_json_path(), "w") as f:
         json.dump(result, f, indent=2)

@@ -1,0 +1,131 @@
+"""Telemetry overhead: the ``telemetry=`` axis measured on vs off.
+
+The observability contract is two-sided: ``telemetry=None`` must compile
+the *identical* program (zero cost — frozen bitwise in tests/test_obs.py),
+and ``telemetry=Telemetry(...)`` must stay cheap enough to leave on for
+real sweeps.  This bench measures both sides on the market sweep (the
+loop with the most telemetry surface: per-pool counters, two histograms,
+notice accounting):
+
+  * ``off``   — today's program, the PR-5 baseline path;
+  * ``stats`` — histograms + counters, no event ring;
+  * ``trace`` — stats plus a ``trace_cap=256`` event ring per lane.
+
+Writes BENCH_obs.json next to the repo root.  The headline is the
+``stats`` overhead factor (t_stats / t_off); CI's regression gate guards
+the *off* path via the other BENCH files, and docs/EXPERIMENTS quote this
+file for the on-cost.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Exponential, ThreePhaseKernel, run_market_sweep
+from repro.core.market import SpotMarket, SpotPool
+from repro.obs import Telemetry
+from repro.obs.timing import provenance, time_compiled
+
+LAM, MU, K = 1 / 12, 1 / 24, 10.0
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+_SCALE = 1.0
+
+
+def set_scale(scale: float) -> None:
+    global _SCALE
+    _SCALE = scale
+
+
+def _bench_json_path() -> str:
+    name = "BENCH_obs.json" if _SCALE == 1.0 else "BENCH_obs_smoke.json"
+    return os.path.join(_REPO_ROOT, name)
+
+
+def _market() -> SpotMarket:
+    return SpotMarket(pools=(
+        SpotPool(Exponential(MU / 2), price=0.4, hazard=0.02, notice=0.5),
+        SpotPool(Exponential(MU / 2), price=0.7, hazard=0.005, notice=0.0),
+    ))
+
+
+def measure_telemetry_overhead(n_r: int = 16, n_seeds: int = 4,
+                               n_events: int | None = None,
+                               rmax: int = 32) -> dict:
+    """Time the market sweep off / stats-only / stats+trace."""
+    if n_events is None:
+        n_events = max(2_000, int(50_000 * _SCALE))
+    job = Exponential(LAM)
+    market = _market()
+    kern = ThreePhaseKernel()
+    rs = jnp.linspace(0.25, 4.0, n_r)
+    key = jax.random.key(0)
+    common = dict(k=K, n_events=n_events, key=key, n_seeds=n_seeds,
+                  rmax=rmax)
+
+    modes = {
+        "off": None,
+        "stats": Telemetry(),
+        "trace": Telemetry(trace_cap=256),
+    }
+    timings, p99 = {}, None
+    for mode, tel in modes.items():
+        out, timing = time_compiled(
+            lambda tel=tel: run_market_sweep(job, market, kern, {"r": rs},
+                                             telemetry=tel, **common))
+        timings[mode] = timing
+        if mode == "stats":
+            p99 = float(np.asarray(out["p99_wait"]).mean())
+
+    grid_points = n_r * n_seeds
+    total_events = grid_points * n_events
+    t_off = timings["off"]["t_run_s"]
+    result = {
+        "grid_points": grid_points,
+        "n_r": n_r,
+        "n_seeds": n_seeds,
+        "n_pools": market.n_pools,
+        "n_events_per_point": n_events,
+        "total_events": total_events,
+        "rmax": rmax,
+        "t_off_s": t_off,
+        "t_stats_s": timings["stats"]["t_run_s"],
+        "t_trace_s": timings["trace"]["t_run_s"],
+        "off_events_per_s": total_events / t_off,
+        "stats_events_per_s": total_events / timings["stats"]["t_run_s"],
+        "trace_events_per_s": total_events / timings["trace"]["t_run_s"],
+        "stats_overhead_x": timings["stats"]["t_run_s"] / t_off,
+        "trace_overhead_x": timings["trace"]["t_run_s"] / t_off,
+        "mean_p99_wait": p99,
+        "backend": jax.default_backend(),
+        "provenance": provenance(seed=0, telemetry="off/stats/trace"),
+    }
+    with open(_bench_json_path(), "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def bench_telemetry_overhead():
+    """Benchmark-harness entry: rows + headline (stats overhead factor)."""
+    res = measure_telemetry_overhead()
+    rows = [{
+        "name": f"obs/{res['grid_points']}pt_market_grid",
+        "us_per_call": res["t_stats_s"] * 1e6,
+        "derived": (
+            f"{res['grid_points']} points × {res['n_events_per_point']} ev: "
+            f"off={res['t_off_s']:.2f}s stats={res['t_stats_s']:.2f}s "
+            f"trace={res['t_trace_s']:.2f}s "
+            f"(stats {res['stats_overhead_x']:.2f}x, "
+            f"trace {res['trace_overhead_x']:.2f}x; "
+            f"mean P99 wait {res['mean_p99_wait']:.2f}h)"
+        ),
+    }]
+    return rows, res["stats_overhead_x"]
+
+
+if __name__ == "__main__":
+    print(json.dumps(measure_telemetry_overhead(), indent=2))

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._timing import time_compiled
+from repro.obs.timing import provenance, time_compiled
 from repro.core import (
     Exponential,
     NoticeAwareKernel,
@@ -121,6 +121,7 @@ def measure_region_throughput(n_r: int = 16, n_seeds: int = 4,
             np.asarray(out["cross_region_frac"]).mean()),
         "preemptions_total": float(np.asarray(out["preemptions"]).sum()),
         "backend": jax.default_backend(),
+        "provenance": provenance(seed=0, telemetry="off"),
     }
     with open(_bench_json_path(), "w") as f:
         json.dump(result, f, indent=2)

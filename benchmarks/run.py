@@ -29,6 +29,7 @@ def main() -> None:
     from benchmarks import engine_kernel_bench
     from benchmarks import event_rng_bench
     from benchmarks import market_bench
+    from benchmarks import obs_bench
     from benchmarks import paper_benches as pb
     from benchmarks import region_bench
     from benchmarks import sweep_bench
@@ -41,6 +42,7 @@ def main() -> None:
         engine_kernel_bench.set_scale(0.1)
         region_bench.set_scale(0.1)
         event_rng_bench.set_scale(0.1)
+        obs_bench.set_scale(0.1)
 
     benches = [
         pb.bench_theorem1_cost_law,
@@ -55,6 +57,7 @@ def main() -> None:
         engine_kernel_bench.bench_engine_kernel,  # BENCH_engine_kernel.json
         region_bench.bench_region_engine,  # writes BENCH_region.json
         event_rng_bench.bench_event_rng,  # writes BENCH_event_rng.json
+        obs_bench.bench_telemetry_overhead,  # writes BENCH_obs.json
         bench_engine_roofline,  # reads them back
         bench_roofline,
     ]

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._timing import time_compiled
+from repro.obs.timing import provenance, time_compiled
 from repro.core import Exponential, ThreePhaseKernel, run_queue_sim, run_sweep
 
 LAM, MU, K = 1 / 12, 1 / 24, 10.0
@@ -92,6 +92,7 @@ def measure_sweep_speedup(n_r: int = 16, n_seeds: int = 4,
         "max_abs_cost_diff": float(
             np.max(np.abs(out["avg_cost"] - loop_cost))),
         "backend": jax.default_backend(),
+        "provenance": provenance(seed=0, telemetry="off"),
     }
     with open(_bench_json_path(), "w") as f:
         json.dump(result, f, indent=2)

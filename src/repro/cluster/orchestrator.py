@@ -60,6 +60,8 @@ from repro.core.policies import (
     three_phase_admit_prob,
 )
 from repro.core.regions import RegionTopology, host_route
+from repro.obs.timing import annotate
+from repro.obs.trace import TraceRecorder
 
 
 class OnlineAdmissionController:
@@ -193,6 +195,7 @@ class SpotCluster:
                  on_spot_run: Optional[Callable] = None,
                  on_ondemand_run: Optional[Callable] = None,
                  on_preempt: Optional[Callable] = None,
+                 tracer: Optional[TraceRecorder] = None,
                  seed: int = 0):
         if (market is None) == (spot_process is None):
             raise ValueError("pass exactly one of spot_process / market")
@@ -209,6 +212,7 @@ class SpotCluster:
         self.on_spot_run = on_spot_run
         self.on_ondemand_run = on_ondemand_run
         self.on_preempt = on_preempt
+        self.tracer = tracer
         self.rng = np.random.default_rng(seed)
         self.queue: deque[Job] = deque()
         self.stats = ClusterStats()
@@ -269,6 +273,9 @@ class SpotCluster:
             self.queue.append(job)  # Theorem 4: wait indefinitely
         else:
             self._run_ondemand(job)
+        if self.tracer is not None:
+            self.tracer.record(self._t, "job", loc=pool,
+                               qlen=len(self.queue))
 
     def _pop_oldest(self, pool: int) -> Optional[Job]:
         for i, job in enumerate(self.queue):  # FIFO-oldest on this pool
@@ -279,6 +286,11 @@ class SpotCluster:
 
     def _spot_arrival(self, pool_idx: int) -> None:
         job = self._pop_oldest(pool_idx)
+        if self.tracer is not None:
+            self.tracer.record(
+                self._t, "spot", loc=pool_idx, qlen=len(self.queue),
+                **({} if job is None
+                   else {"wait": self._t - job.arrival_time}))
         if job is None:
             return
         price = self.market.pools[pool_idx].price
@@ -330,6 +342,9 @@ class SpotCluster:
         else it defects to on-demand.  Mirrors NoticeAwareKernel exactly.
         """
         job = self._pop_oldest(pool_idx)
+        if self.tracer is not None:
+            self.tracer.record(self._t, "preempt", loc=pool_idx,
+                               qlen=len(self.queue))
         if job is None:
             return  # the revoked instance was idle
         pool = self.market.pools[pool_idx]
@@ -362,13 +377,15 @@ class SpotCluster:
 
     # ---------------------------------------------------- on-device what-if
     def what_if_sweep(self, rs, *, n_events: int = 20_000, n_seeds: int = 2,
-                      k=None, key=None) -> dict:
+                      k=None, key=None, telemetry=None) -> dict:
         """Sweep admission knobs against THIS cluster's market, on-device.
 
         Runs :func:`repro.core.engine.run_market_sweep` with the cluster's
         market and recovery parameters — the host is a thin consumer: the
         what-if grid for "where should the controller's r sit" is one
-        compiled program, not a host loop.
+        compiled program, not a host loop.  ``telemetry=`` forwards a
+        :class:`repro.obs.Telemetry` so the grid also reports P50/P99
+        waits and per-pool counters.
         """
         import jax
         import jax.numpy as jnp
@@ -378,12 +395,13 @@ class SpotCluster:
         if key is None:
             key = jax.random.key(int(self.rng.integers(2**31)))
         kern = NoticeAwareKernel(checkpoint_time=self.checkpoint_hours)
-        return run_market_sweep(
-            self.jobs, self.market, kern,
-            {"r": jnp.asarray(rs, jnp.float32)},
-            k=self.k if k is None else k, n_events=n_events, key=key,
-            n_seeds=n_seeds,
-        )
+        with annotate("repro.cluster.what_if_sweep[market]"):
+            return run_market_sweep(
+                self.jobs, self.market, kern,
+                {"r": jnp.asarray(rs, jnp.float32)},
+                k=self.k if k is None else k, n_events=n_events, key=key,
+                n_seeds=n_seeds, telemetry=telemetry,
+            )
 
     # ----------------------------------------------------------- stragglers
     def observe_step_time(self, pod_id: int, seconds: float) -> bool:
@@ -440,7 +458,8 @@ class MultiRegionCluster:
     def __init__(self, *, topology: RegionTopology,
                  controller: OnlineAdmissionController,
                  k_cost: float = 10.0, route: str = "cheapest",
-                 checkpoint_hours: float = 0.0, seed: int = 0):
+                 checkpoint_hours: float = 0.0,
+                 tracer: Optional[TraceRecorder] = None, seed: int = 0):
         if route not in self.HOST_ROUTES:
             raise ValueError(
                 f"unknown host routing rule {route!r}; the live loop "
@@ -451,6 +470,7 @@ class MultiRegionCluster:
         self.k = k_cost
         self.route = route
         self.checkpoint_hours = checkpoint_hours
+        self.tracer = tracer
         self.rng = np.random.default_rng(seed)
         self.queues: list[deque[Job]] = [deque()
                                          for _ in topology.regions]
@@ -516,9 +536,18 @@ class MultiRegionCluster:
                 self.stats.cross_region += 1
         else:
             self._run_ondemand(job)
+        if self.tracer is not None:
+            self.tracer.record(self._t, "job", loc=target,
+                               qlen=sum(self.qlen_region()))
 
     def _spot_arrival(self, region_idx: int) -> None:
         queue = self.queues[region_idx]
+        if self.tracer is not None:
+            self.tracer.record(
+                self._t, "spot", loc=region_idx,
+                qlen=sum(self.qlen_region()) - (1 if queue else 0),
+                **({"wait": self._t - queue[0].arrival_time}
+                   if queue else {}))
         if not queue:
             return
         job = queue.popleft()  # FIFO within the region partition
@@ -535,6 +564,10 @@ class MultiRegionCluster:
     def _preempt_event(self, region_idx: int) -> None:
         """Hazard-clock revocation, the PR-2 recovery model per region."""
         queue = self.queues[region_idx]
+        if self.tracer is not None:
+            self.tracer.record(self._t, "preempt", loc=region_idx,
+                               qlen=sum(self.qlen_region())
+                               - (1 if queue else 0))
         if not queue:
             return  # the revoked instance was idle
         job = queue.popleft()
@@ -566,12 +599,15 @@ class MultiRegionCluster:
 
     # ---------------------------------------------------- on-device what-if
     def what_if_sweep(self, rs, *, n_events: int = 20_000, n_seeds: int = 2,
-                      k=None, key=None, choice: str | None = None) -> dict:
+                      k=None, key=None, choice: str | None = None,
+                      telemetry=None) -> dict:
         """Sweep admission knobs against THIS cluster's topology, on-device.
 
         Runs :func:`repro.core.engine.run_region_sweep` with the cluster's
         topology, routing rule, and recovery parameters — one compiled
-        program for the whole what-if grid, not a host loop.
+        program for the whole what-if grid, not a host loop.  ``telemetry=``
+        forwards a :class:`repro.obs.Telemetry` so the grid also reports
+        P50/P99 waits and per-region counters.
         """
         import jax
         import jax.numpy as jnp
@@ -584,8 +620,9 @@ class MultiRegionCluster:
         kern = RoutingKernel(
             NoticeAwareKernel(checkpoint_time=self.checkpoint_hours),
             choice=self.route if choice is None else choice)
-        return run_region_sweep(
-            self.topology, kern, {"r": jnp.asarray(rs, jnp.float32)},
-            k=self.k if k is None else k, n_events=n_events, key=key,
-            n_seeds=n_seeds,
-        )
+        with annotate("repro.cluster.what_if_sweep[region]"):
+            return run_region_sweep(
+                self.topology, kern, {"r": jnp.asarray(rs, jnp.float32)},
+                k=self.k if k is None else k, n_events=n_events, key=key,
+                n_seeds=n_seeds, telemetry=telemetry,
+            )

@@ -74,6 +74,7 @@ from repro.core.cost import (
 from repro.core.engine import (
     DEFAULT_CHUNK_EVENTS,
     EngineState,
+    Telemetry,
     MarketState,
     MarketWindowStats,
     PolicyKernel,
@@ -143,7 +144,7 @@ __all__ = [
     "cost_lower_bound", "market_cost_lower_bound", "pi0_from_cost",
     "region_cost_lower_bound", "theorem1_cost", "theorem1_market_cost",
     "theorem1_region_cost", "DEFAULT_CHUNK_EVENTS",
-    "EngineState", "MarketState",
+    "EngineState", "MarketState", "Telemetry",
     "MarketWindowStats", "PolicyKernel", "RegionState", "RegionWindowStats",
     "WindowStats", "run_market_sim",
     "run_market_sweep", "run_region_sim", "run_region_sweep", "run_sim",

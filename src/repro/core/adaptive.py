@@ -42,6 +42,7 @@ from repro.core.engine import (_rebase_order, init_market_state,
                                run_market_window)
 from repro.core.market import NoticeAwareKernel, SpotMarket, as_market
 from repro.core.policies import ThreePhaseKernel
+from repro.obs.timing import annotate
 
 _THREE_PHASE = ThreePhaseKernel()
 
@@ -213,11 +214,13 @@ def adaptive_admission_control(
     """
     market = as_market(spot)
     kernel = _default_kernel(market) if kernel is None else kernel
-    r_final, tr = _adaptive_jit(
-        job, market, kernel, rmax_slots, window_events, n_windows,
-        jnp.float32(k), jnp.float32(delta), jnp.float32(eta),
-        jnp.float32(eta_decay), jnp.float32(r0), jnp.float32(r_max), key,
-    )
+    with annotate("repro.adaptive_admission_control"):
+        r_final, tr = _adaptive_jit(
+            job, market, kernel, rmax_slots, window_events, n_windows,
+            jnp.float32(k), jnp.float32(delta), jnp.float32(eta),
+            jnp.float32(eta_decay), jnp.float32(r0), jnp.float32(r_max),
+            key,
+        )
     return _assemble(tr, r_final)
 
 
@@ -264,10 +267,11 @@ def adaptive_admission_control_batched(
     args = [jnp.broadcast_to(a, batch).reshape(-1) for a in args]
     keys = (jax.random.split(key, n) if independent_keys
             else jnp.repeat(key[None], n, axis=0))
-    r_final, tr = _adaptive_batched_jit(
-        job, market, kernel, rmax_slots, window_events, n_windows, *args,
-        keys,
-    )
+    with annotate("repro.adaptive_admission_control_batched"):
+        r_final, tr = _adaptive_batched_jit(
+            job, market, kernel, rmax_slots, window_events, n_windows,
+            *args, keys,
+        )
     # restore multi-dimensional batch shapes (e.g. a delta × r0 meshgrid)
     r_final = r_final.reshape(batch)
     tr = jax.tree.map(lambda x: x.reshape(batch + x.shape[1:]), tr)

@@ -95,6 +95,24 @@ window (zero in-kernel RNG).  The slab stream holds the pallas == ref ==
 xla integer-accounting ledger on its own terms; slab-vs-split equivalence
 is distributional (KS-tested in tests/test_event_rng.py), so ``"slab"`` is
 the stream for new sweeps and ``"split"`` the compatibility stream.
+
+Telemetry (``telemetry=``)
+--------------------------
+Every entry point dispatches a third static axis (PR 7; full story in
+docs/observability.md and :mod:`repro.obs`): ``telemetry=None`` (default)
+compiles exactly today's program — the telemetry branch of every event
+body is statically absent, so the off path is *bitwise* the pre-telemetry
+engine on all three loops × all three executors (frozen in
+tests/test_obs.py).  With a :class:`repro.obs.Telemetry` descriptor the
+stats pytree becomes a ``(base, telemetry)`` pair riding through the same
+scanners/kernels (both are generic over the stats pytree), and the event
+bodies additionally fold each event into streaming log-binned wait/cost
+histograms (mergeable quantile sketches → P50/P99 per grid point),
+event-type counters, per-pool/per-region defect/resume counters, and —
+with ``trace_cap > 0`` — a bounded per-window event ring exportable to
+Chrome/Perfetto JSON (:mod:`repro.obs.trace`).  The base statistics are
+accumulated by the untouched expressions, so telemetry-on primary stats
+equal telemetry-off stats exactly; the summaries only gain new fields.
 """
 from __future__ import annotations
 
@@ -115,6 +133,9 @@ from repro.core.market import PoolState, SpotMarket, as_market
 from repro.core.regions import RegionTopology, RegionView, as_topology
 from repro.kernels.sweep import (batched_events, batched_event_windows_ref,
                                  default_interpret)
+from repro.obs.stats import (Telemetry, summarize_telemetry,
+                             telemetry_update, telemetry_zeros)
+from repro.obs.timing import annotate
 
 # numpy (not jnp) scalars: they inline as jaxpr literals, so the event
 # bodies stay capture-free inside the Pallas kernel trace (device-array
@@ -205,7 +226,7 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
                   kernel: PolicyKernel, rmax: int,
                   layout: SlabLayout | None, carry: EngineState,
                   stats: WindowStats, params, k_cost: jax.Array,
-                  x: jax.Array | None = None
+                  x: jax.Array | None = None, tel: Telemetry | None = None
                   ) -> tuple[EngineState, WindowStats]:
     """Process one merged event (job arrival / spot slot / wait deadline).
 
@@ -217,7 +238,14 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
     ``layout=None`` is the frozen ``rng="split"`` stream (per-event key
     ladder); with a :class:`SlabLayout`, ``x`` is this event's uint32 slab
     row and the body performs no key arithmetic at all.
+
+    ``tel`` (static) switches ``stats`` to a ``(base, telemetry)`` pair;
+    the base expressions are untouched, the telemetry fold is a pure
+    appendage over locals the body already computed (the module
+    docstring's zero-cost-off / primary-stats-unchanged contract).
     """
+    if tel is not None:
+        stats, tstats = stats
     if layout is None:
         key, k_job, k_spot, k_pol, _, _ = split_event_keys(carry.key)
     else:
@@ -300,6 +328,18 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
         spot_found_empty=stats.spot_found_empty
         + (is_spot & (~has_job)).astype(jnp.int32),
     )
+    if tel is not None:
+        false = jnp.zeros((), jnp.bool_)
+        tstats = telemetry_update(
+            tel, tstats, t=new_stats.time_elapsed, is_job=is_job,
+            is_spot=is_spot, is_pre=false, is_deadline=is_deadline,
+            served=served, resume=false, defected=defected, od_now=od_now,
+            wait_sample=jnp.where(served, wait_served, age_defect),
+            wait_valid=served | defected,
+            cost_inc=jnp.where(served, np.float32(1.0), k_cost),
+            cost_valid=served | od_now | defected,
+            loc=jnp.zeros((), jnp.int32), n_locs=1, qlen=new_carry.qlen)
+        return new_carry, (new_stats, tstats)
     return new_carry, new_stats
 
 
@@ -427,26 +467,34 @@ def _engine_layout(job: ArrivalProcess, spot: ArrivalProcess,
                              spot_udim=process_udim(spot))
 
 
+def _with_zeros(zeros, tel: Telemetry | None, n_locs: int):
+    """Pair base window zeros with telemetry zeros when the axis is on."""
+    if tel is None:
+        return zeros
+    return (zeros, telemetry_zeros(tel, n_locs))
+
+
 def run_window(job: ArrivalProcess, spot: ArrivalProcess,
                kernel: PolicyKernel, rmax: int, state: EngineState, params,
                k_cost: jax.Array, n_events: int,
-               layout: SlabLayout | None = None
+               layout: SlabLayout | None = None,
+               tel: Telemetry | None = None
                ) -> tuple[EngineState, WindowStats]:
     """Run ``n_events`` merged events; return state + one window of sums."""
     step = functools.partial(_engine_event, job, spot, kernel, rmax, layout,
-                             params=params, k_cost=k_cost)
+                             params=params, k_cost=k_cost, tel=tel)
+    zeros = _with_zeros(WindowStats.zeros(), tel, 1)
     if layout is None:
-        return _scan_window(lambda c, s: step(c, s), WindowStats.zeros(),
-                            state, n_events)
-    return _scan_window_slab(lambda c, s, x: step(c, s, x=x),
-                             WindowStats.zeros(), state, n_events,
-                             layout.n_cols)
+        return _scan_window(lambda c, s: step(c, s), zeros, state, n_events)
+    return _scan_window_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
+                             n_events, layout.n_cols)
 
 
 def run_chunked(job: ArrivalProcess, spot: ArrivalProcess,
                 kernel: PolicyKernel, rmax: int, state: EngineState, params,
                 k_cost: jax.Array, n_events: int, chunk_events: int,
-                layout: SlabLayout | None = None
+                layout: SlabLayout | None = None,
+                tel: Telemetry | None = None
                 ) -> tuple[EngineState, WindowStats]:
     """Run exactly ``n_events`` events as stacked float32 chunk windows.
 
@@ -454,37 +502,44 @@ def run_chunked(job: ArrivalProcess, spot: ArrivalProcess,
     float64 so long horizons do not hit float32 sum saturation.
     """
     step = functools.partial(_engine_event, job, spot, kernel, rmax, layout,
-                             params=params, k_cost=k_cost)
+                             params=params, k_cost=k_cost, tel=tel)
+    zeros = _with_zeros(WindowStats.zeros(), tel, 1)
     if layout is None:
-        return _scan_chunked(lambda c, s: step(c, s), WindowStats.zeros(),
-                             state, n_events, chunk_events)
-    return _scan_chunked_slab(lambda c, s, x: step(c, s, x=x),
-                              WindowStats.zeros(), state, n_events,
-                              chunk_events, layout.n_cols)
+        return _scan_chunked(lambda c, s: step(c, s), zeros, state,
+                             n_events, chunk_events)
+    return _scan_chunked_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
+                              n_events, chunk_events, layout.n_cols)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("job", "spot", "kernel", "rmax", "n_events",
-                     "chunk_events", "burn_in", "rng"),
+                     "chunk_events", "burn_in", "rng", "tel"),
 )
 def _run_sim_jit(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
-                 rng, params, k_cost, key):
+                 rng, params, k_cost, key, tel=None):
     """Single-point entry, compiled once per static signature at module scope
     (the seed re-jitted its burn-in path on every call)."""
     layout = _engine_layout(job, spot, kernel) if rng == "slab" else None
     state = init_engine_state(key, job, spot, rmax)
     if burn_in:
         state, _ = run_window(job, spot, kernel, rmax, state, params, k_cost,
-                              burn_in, layout=layout)
+                              burn_in, layout=layout, tel=tel)
         state = _rebase_order(state)
     return run_chunked(job, spot, kernel, rmax, state, params, k_cost,
-                       n_events, chunk_events, layout=layout)
+                       n_events, chunk_events, layout=layout, tel=tel)
 
 
 def _check_rng(rng: str) -> None:
     if rng not in ("split", "slab"):
         raise ValueError(f"unknown rng {rng!r} (expected 'split'|'slab')")
+
+
+def _check_telemetry(telemetry) -> None:
+    if telemetry is not None and not isinstance(telemetry, Telemetry):
+        raise TypeError(
+            f"telemetry must be a repro.obs.Telemetry or None, got "
+            f"{telemetry!r}")
 
 
 def _flat_lane_args(params_trees, k_cost, keys):
@@ -514,10 +569,10 @@ def _unflatten_lanes(stats, g: int, s: int):
 @functools.partial(
     jax.jit,
     static_argnames=("job", "spot", "kernel", "rmax", "n_events",
-                     "chunk_events", "burn_in", "rng"),
+                     "chunk_events", "burn_in", "rng", "tel"),
 )
 def _run_sweep_jit(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
-                   rng, params, k_cost, keys):
+                   rng, params, k_cost, keys, tel=None):
     """(grid × seeds) fleet as one nested-vmap XLA program (broadcast
     ``in_axes`` — see :func:`_flat_lane_args` for why not flat lanes)."""
     layout = _engine_layout(job, spot, kernel) if rng == "slab" else None
@@ -526,10 +581,11 @@ def _run_sweep_jit(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
         state = init_engine_state(key, job, spot, rmax)
         if burn_in:
             state, _ = run_window(job, spot, kernel, rmax, state, p, kc,
-                                  burn_in, layout=layout)
+                                  burn_in, layout=layout, tel=tel)
             state = _rebase_order(state)
         _, stats = run_chunked(job, spot, kernel, rmax, state, p, kc,
-                               n_events, chunk_events, layout=layout)
+                               n_events, chunk_events, layout=layout,
+                               tel=tel)
         return stats
 
     per_seeds = jax.vmap(one, in_axes=(None, None, 0))
@@ -550,11 +606,11 @@ def _lane_slabs(state0, plan, layout: SlabLayout) -> jax.Array:
     jax.jit,
     static_argnames=("job", "spot", "kernel", "rmax", "n_events",
                      "chunk_events", "burn_in", "tile", "interpret",
-                     "executor", "rng"),
+                     "executor", "rng", "tel"),
 )
 def _run_sweep_pallas_jit(job, spot, kernel, rmax, n_events, chunk_events,
                           burn_in, tile, interpret, params, k_cost, keys,
-                          executor="pallas", rng="split"):
+                          executor="pallas", rng="split", tel=None):
     """The (grid × seeds) fleet as ONE Pallas batched-event kernel call.
 
     Lanes are grid-major (seed fastest; :func:`_flat_lane_args`); per-lane
@@ -577,21 +633,22 @@ def _run_sweep_pallas_jit(job, spot, kernel, rmax, n_events, chunk_events,
 
         def step(carry, stats, p, x):
             return _engine_event(job, spot, kernel, rmax, layout, carry,
-                                 stats, p["params"], p["k"], x=x)
+                                 stats, p["params"], p["k"], x=x, tel=tel)
     else:
         layout, xs = None, None
 
         def step(carry, stats, p):
             return _engine_event(job, spot, kernel, rmax, None, carry,
-                                 stats, p["params"], p["k"])
+                                 stats, p["params"], p["k"], tel=tel)
 
+    zeros = _with_zeros(WindowStats.zeros(), tel, 1)
     if executor == "ref":
         _, stats = batched_event_windows_ref(
-            step, state0, params_b, WindowStats.zeros(), plan, xs=xs,
+            step, state0, params_b, zeros, plan, xs=xs,
             epilogue=_rebase_order)
     else:
         _, stats = batched_events(
-            step, state0, params_b, WindowStats.zeros(), plan, xs=xs,
+            step, state0, params_b, zeros, plan, xs=xs,
             tile=tile, interpret=interpret, epilogue=_rebase_order)
     if burn_in:
         stats = jax.tree.map(lambda x: x[:, 1:], stats)
@@ -611,18 +668,36 @@ INT_STATS = ("jobs_arrived", "jobs_completed", "spot_served", "ondemand",
              "region_routed")
 
 
-def summarize(stats: WindowStats) -> dict:
+def _merge_telemetry(out: dict, telemetry: Telemetry, tstats,
+                     time_elapsed) -> dict:
+    """Append the telemetry summary (new fields only — base keys are never
+    touched) plus the per-window durations the trace exporter needs to
+    place each window's ring on a global clock."""
+    tout = summarize_telemetry(telemetry, tstats)
+    if "trace" in tout:
+        tout["trace"]["time_windows"] = np.asarray(time_elapsed, np.float64)
+    out.update(tout)
+    return out
+
+
+def summarize(stats: WindowStats, telemetry: Telemetry | None = None) -> dict:
     """Reduce chunked (…, n_chunks) sums in float64; derive long-run stats.
 
     Leading batch axes (grid, seeds) pass through: every value in the
     returned dict is a numpy array of the batch shape (0-d for a single run).
+    With ``telemetry``, ``stats`` is the engine's ``(base, telemetry)``
+    pair and the dict gains the :func:`repro.obs.summarize_telemetry`
+    fields (P50/P99 wait, event counters, …) — base keys unchanged.
     """
+    tstats = None
+    if telemetry is not None:
+        stats, tstats = stats
     s = jax.tree.map(lambda x: np.asarray(x, np.float64).sum(axis=-1), stats)
     completed = np.maximum(s.jobs_completed, 1.0)
     arrived = np.maximum(s.jobs_arrived, 1.0)
     time = np.maximum(s.time_elapsed, 1e-12)
     spot_arr = np.maximum(s.spot_arrivals, 1.0)
-    return {
+    out = {
         "jobs_arrived": s.jobs_arrived,
         "jobs_completed": s.jobs_completed,
         "spot_served": s.spot_served,
@@ -635,6 +710,31 @@ def summarize(stats: WindowStats) -> dict:
         "spot_utilization": (s.spot_arrivals - s.spot_found_empty) / spot_arr,
         "arrival_rate": arrived / time,
     }
+    if telemetry is not None:
+        return _merge_telemetry(out, telemetry, tstats, stats.time_elapsed)
+    return out
+
+
+def _scalar_or_array(v):
+    """Single-run host conversion: 0-d → float (the frozen sim contract),
+    arrays stay arrays (per-pool/per-region/histogram fields), the trace
+    dict passes through."""
+    if isinstance(v, dict):
+        return v
+    return float(v) if np.ndim(v) == 0 else np.asarray(v)
+
+
+def _reshape_sweep(out: dict, grid_shape: tuple, n_seeds: int) -> dict:
+    """Reshape flat ``(grid_points, n_seeds, ...)`` summary values back to
+    ``grid_shape + (n_seeds,) + trailing`` — generic over scalar,
+    per-pool/per-region, histogram, and (nested) trace-dict fields."""
+    def _r(v):
+        v = np.asarray(v)
+        return v.reshape(grid_shape + (n_seeds,) + v.shape[2:])
+
+    return {name: ({key: _r(x) for key, x in v.items()}
+                   if isinstance(v, dict) else _r(v))
+            for name, v in out.items()}
 
 
 def run_sim(
@@ -653,6 +753,7 @@ def run_sim(
     rng: str = "split",
     tile: int = 256,
     interpret: bool | None = None,
+    telemetry: Telemetry | None = None,
 ) -> dict:
     """Run one policy at one parameter point; return long-run scalar stats.
 
@@ -664,26 +765,32 @@ def run_sim(
     call — bit-for-bit the ``"ref"`` scan oracle; see :func:`run_sweep`
     and the module docstring for the cross-executor equality contract.
     ``rng="slab"`` selects the fast slab PRNG stream (module docstring,
-    "Randomness").
+    "Randomness").  ``telemetry`` (a :class:`repro.obs.Telemetry`) adds
+    streaming P50/P99 wait/cost sketches, event counters, and optionally
+    an event trace to the returned dict (module docstring, "Telemetry").
     """
     params = {} if params is None else params
     _check_rng(rng)
+    _check_telemetry(telemetry)
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
-    if impl in ("pallas", "ref"):
-        stats = _run_sweep_pallas_jit(
-            job, spot, kernel, rmax, n_events, chunk, burn_in, tile,
-            default_interpret() if interpret is None else interpret,
-            jax.tree.map(lambda x: jnp.asarray(x)[None], params),
-            jnp.float32(k)[None], _raw_keys(key)[None], executor=impl,
-            rng=rng)
-        stats = jax.tree.map(lambda x: x[0, 0], stats)
-    elif impl == "xla":
-        _, stats = _run_sim_jit(job, spot, kernel, rmax, n_events, chunk,
-                                burn_in, rng, params, jnp.float32(k), key)
-    else:
-        raise ValueError(
-            f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
-    return {name: float(v) for name, v in summarize(stats).items()}
+    with annotate(f"repro.run_sim[{impl}]"):
+        if impl in ("pallas", "ref"):
+            stats = _run_sweep_pallas_jit(
+                job, spot, kernel, rmax, n_events, chunk, burn_in, tile,
+                default_interpret() if interpret is None else interpret,
+                jax.tree.map(lambda x: jnp.asarray(x)[None], params),
+                jnp.float32(k)[None], _raw_keys(key)[None], executor=impl,
+                rng=rng, tel=telemetry)
+            stats = jax.tree.map(lambda x: x[0, 0], stats)
+        elif impl == "xla":
+            _, stats = _run_sim_jit(job, spot, kernel, rmax, n_events, chunk,
+                                    burn_in, rng, params, jnp.float32(k),
+                                    key, tel=telemetry)
+        else:
+            raise ValueError(
+                f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
+    return {name: _scalar_or_array(v)
+            for name, v in summarize(stats, telemetry).items()}
 
 
 def run_sweep(
@@ -703,6 +810,7 @@ def run_sweep(
     rng: str = "split",
     tile: int = 256,
     interpret: bool | None = None,
+    telemetry: Telemetry | None = None,
 ) -> dict:
     """Run a whole policy grid × seed fleet as ONE jitted call.
 
@@ -730,6 +838,7 @@ def run_sweep(
     """
     params = {} if params is None else params
     _check_rng(rng)
+    _check_telemetry(telemetry)
     params = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params)
     k = jnp.asarray(k, jnp.float32)
     grid_shape = jnp.broadcast_shapes(
@@ -740,20 +849,22 @@ def run_sweep(
     k_flat = flat(k)
     keys = jax.random.split(key, n_seeds)
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
-    if impl in ("pallas", "ref"):
-        stats = _run_sweep_pallas_jit(
-            job, spot, kernel, rmax, n_events, chunk, burn_in, tile,
-            default_interpret() if interpret is None else interpret,
-            params_flat, k_flat, _raw_keys(keys), executor=impl, rng=rng)
-    elif impl == "xla":
-        stats = _run_sweep_jit(job, spot, kernel, rmax, n_events, chunk,
-                               burn_in, rng, params_flat, k_flat, keys)
-    else:
-        raise ValueError(
-            f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
-    out = summarize(stats)  # values shaped (grid_points, n_seeds)
-    return {name: v.reshape(grid_shape + (n_seeds,)) for name, v in
-            out.items()}
+    with annotate(f"repro.run_sweep[{impl}]"):
+        if impl in ("pallas", "ref"):
+            stats = _run_sweep_pallas_jit(
+                job, spot, kernel, rmax, n_events, chunk, burn_in, tile,
+                default_interpret() if interpret is None else interpret,
+                params_flat, k_flat, _raw_keys(keys), executor=impl,
+                rng=rng, tel=telemetry)
+        elif impl == "xla":
+            stats = _run_sweep_jit(job, spot, kernel, rmax, n_events, chunk,
+                                   burn_in, rng, params_flat, k_flat, keys,
+                                   tel=telemetry)
+        else:
+            raise ValueError(
+                f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
+    out = summarize(stats, telemetry)  # values shaped (grid_points, n_seeds)
+    return _reshape_sweep(out, grid_shape, n_seeds)
 
 
 # ===========================================================================
@@ -933,7 +1044,7 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
                   preempt_on: bool, layout: SlabLayout | None,
                   carry: MarketState, stats: MarketWindowStats, params,
                   mp: dict, k_cost: jax.Array,
-                  x: jax.Array | None = None
+                  x: jax.Array | None = None, tel: Telemetry | None = None
                   ) -> tuple[MarketState, MarketWindowStats]:
     """One merged event: job arrival / pool spot slot / pool preemption /
     wait deadline.  Same dense one-hot-select style as :func:`_engine_event`
@@ -943,8 +1054,12 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
     the body consumes slab row ``x`` instead — and the (P,) preemption
     clock vector is ONE superposed clock at total hazard plus a thinning
     pick of the firing pool (exact; see :mod:`repro.core.clocks`).
+    ``tel`` appends the telemetry fold exactly as in :func:`_engine_event`
+    (base expressions untouched); the event locus is the firing pool.
     """
     n_pools = market.n_pools
+    if tel is not None:
+        stats, tstats = stats
     if layout is None:
         key, k_job, k_spot, k_pol, k_pre, _ = split_event_keys(
             carry.key, preempt_on)
@@ -1129,6 +1244,25 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
         pool_preempted=stats.pool_preempted
         + (pre_hit & (iota_p == pre_pool)).astype(jnp.int32),
     )
+    if tel is not None:
+        defect_pool = jnp.sum(jnp.where(iota == defect_slot, carry.pool, 0))
+        loc = jnp.where(is_spot, spot_pool,
+                        jnp.where(is_pre, pre_pool,
+                                  jnp.where(is_deadline, defect_pool,
+                                            pool_choice)))
+        tstats = telemetry_update(
+            tel, tstats, t=new_stats.time_elapsed, is_job=is_job,
+            is_spot=is_spot, is_pre=is_pre, is_deadline=is_deadline,
+            served=served, resume=resume, defected=defected, od_now=od_now,
+            wait_sample=jnp.where(served, wait_served,
+                                  jnp.where(defected, age_defect, age_pre)),
+            wait_valid=served | defected | pre_hit,
+            cost_inc=jnp.where(served, price_s, 0.0)
+            + jnp.where(od_now | defected | defect_pre, k_cost, 0.0)
+            + jnp.where(pre_hit, price_p, 0.0),
+            cost_valid=served | od_now | defected | pre_hit,
+            loc=loc, n_locs=n_pools, qlen=new_carry.qlen)
+        return new_carry, (new_stats, tstats)
     return new_carry, new_stats
 
 
@@ -1146,13 +1280,15 @@ def _market_layout(job: ArrivalProcess, market: SpotMarket, kernel,
 def run_market_window(job: ArrivalProcess, market: SpotMarket, kernel,
                       rmax: int, preempt_on: bool, state: MarketState,
                       params, mp: dict, k_cost: jax.Array, n_events: int,
-                      layout: SlabLayout | None = None
+                      layout: SlabLayout | None = None,
+                      tel: Telemetry | None = None
                       ) -> tuple[MarketState, MarketWindowStats]:
     """Run ``n_events`` merged market events; one window of float32 sums."""
     step = functools.partial(_market_event, job, market, kernel, rmax,
                              preempt_on, layout, params=params, mp=mp,
-                             k_cost=k_cost)
-    zeros = MarketWindowStats.zeros(market.n_pools)
+                             k_cost=k_cost, tel=tel)
+    zeros = _with_zeros(MarketWindowStats.zeros(market.n_pools), tel,
+                        market.n_pools)
     if layout is None:
         return _scan_window(step, zeros, state, n_events)
     return _scan_window_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
@@ -1162,12 +1298,14 @@ def run_market_window(job: ArrivalProcess, market: SpotMarket, kernel,
 def run_market_chunked(job: ArrivalProcess, market: SpotMarket, kernel,
                        rmax: int, preempt_on: bool, state: MarketState,
                        params, mp: dict, k_cost: jax.Array, n_events: int,
-                       chunk_events: int, layout: SlabLayout | None = None
+                       chunk_events: int, layout: SlabLayout | None = None,
+                       tel: Telemetry | None = None
                        ) -> tuple[MarketState, MarketWindowStats]:
     step = functools.partial(_market_event, job, market, kernel, rmax,
                              preempt_on, layout, params=params, mp=mp,
-                             k_cost=k_cost)
-    zeros = MarketWindowStats.zeros(market.n_pools)
+                             k_cost=k_cost, tel=tel)
+    zeros = _with_zeros(MarketWindowStats.zeros(market.n_pools), tel,
+                        market.n_pools)
     if layout is None:
         return _scan_chunked(step, zeros, state, n_events, chunk_events)
     return _scan_chunked_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
@@ -1177,10 +1315,11 @@ def run_market_chunked(job: ArrivalProcess, market: SpotMarket, kernel,
 @functools.partial(
     jax.jit,
     static_argnames=("job", "market", "kernel", "rmax", "preempt_on",
-                     "n_events", "chunk_events", "burn_in", "rng"),
+                     "n_events", "chunk_events", "burn_in", "rng", "tel"),
 )
 def _run_market_sim_jit(job, market, kernel, rmax, preempt_on, n_events,
-                        chunk_events, burn_in, rng, params, mp, k_cost, key):
+                        chunk_events, burn_in, rng, params, mp, k_cost, key,
+                        tel=None):
     layout = (_market_layout(job, market, kernel, preempt_on)
               if rng == "slab" else None)
     state = init_market_state(key, job, market, rmax, mp, preempt_on,
@@ -1188,21 +1327,21 @@ def _run_market_sim_jit(job, market, kernel, rmax, preempt_on, n_events,
     if burn_in:
         state, _ = run_market_window(job, market, kernel, rmax, preempt_on,
                                      state, params, mp, k_cost, burn_in,
-                                     layout=layout)
+                                     layout=layout, tel=tel)
         state = _rebase_order(state)
     return run_market_chunked(job, market, kernel, rmax, preempt_on, state,
                               params, mp, k_cost, n_events, chunk_events,
-                              layout=layout)
+                              layout=layout, tel=tel)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("job", "market", "kernel", "rmax", "preempt_on",
-                     "n_events", "chunk_events", "burn_in", "rng"),
+                     "n_events", "chunk_events", "burn_in", "rng", "tel"),
 )
 def _run_market_sweep_jit(job, market, kernel, rmax, preempt_on, n_events,
                           chunk_events, burn_in, rng, params, mp, k_cost,
-                          keys):
+                          keys, tel=None):
     """(grid × pools-config × seeds) fleet as one nested-vmap XLA program
     (broadcast ``in_axes``; see :func:`_flat_lane_args`)."""
     layout = (_market_layout(job, market, kernel, preempt_on)
@@ -1214,11 +1353,11 @@ def _run_market_sweep_jit(job, market, kernel, rmax, preempt_on, n_events,
         if burn_in:
             state, _ = run_market_window(job, market, kernel, rmax,
                                          preempt_on, state, p, m, kc,
-                                         burn_in, layout=layout)
+                                         burn_in, layout=layout, tel=tel)
             state = _rebase_order(state)
         _, stats = run_market_chunked(job, market, kernel, rmax, preempt_on,
                                       state, p, m, kc, n_events,
-                                      chunk_events, layout=layout)
+                                      chunk_events, layout=layout, tel=tel)
         return stats
 
     per_seeds = jax.vmap(one, in_axes=(None, None, None, 0))
@@ -1230,12 +1369,12 @@ def _run_market_sweep_jit(job, market, kernel, rmax, preempt_on, n_events,
     jax.jit,
     static_argnames=("job", "market", "kernel", "rmax", "preempt_on",
                      "n_events", "chunk_events", "burn_in", "tile",
-                     "interpret", "executor", "rng"),
+                     "interpret", "executor", "rng", "tel"),
 )
 def _run_market_sweep_pallas_jit(job, market, kernel, rmax, preempt_on,
                                  n_events, chunk_events, burn_in, tile,
                                  interpret, params, mp, k_cost, keys,
-                                 executor="pallas", rng="split"):
+                                 executor="pallas", rng="split", tel=None):
     """The market fleet through the same batched-event kernel family: the
     per-pool ``next_spot``/``next_preempt`` clock vectors become
     (tile, n_pools) VMEM blocks and :func:`_market_event` is the vmap-ed
@@ -1262,37 +1401,44 @@ def _run_market_sweep_pallas_jit(job, market, kernel, rmax, preempt_on,
         def step(carry, stats, p, x):
             return _market_event(job, market, kernel, rmax, preempt_on,
                                  layout, carry, stats, p["params"], p["mp"],
-                                 p["k"], x=x)
+                                 p["k"], x=x, tel=tel)
     else:
         xs = None
 
         def step(carry, stats, p):
             return _market_event(job, market, kernel, rmax, preempt_on,
                                  None, carry, stats, p["params"], p["mp"],
-                                 p["k"])
+                                 p["k"], tel=tel)
 
+    zeros = _with_zeros(MarketWindowStats.zeros(market.n_pools), tel,
+                        market.n_pools)
     if executor == "ref":
         _, stats = batched_event_windows_ref(
-            step, state0, params_b, MarketWindowStats.zeros(market.n_pools),
-            plan, xs=xs, epilogue=_rebase_order)
+            step, state0, params_b, zeros, plan, xs=xs,
+            epilogue=_rebase_order)
     else:
         _, stats = batched_events(
-            step, state0, params_b, MarketWindowStats.zeros(market.n_pools),
-            plan, xs=xs, tile=tile, interpret=interpret,
-            epilogue=_rebase_order)
+            step, state0, params_b, zeros, plan, xs=xs, tile=tile,
+            interpret=interpret, epilogue=_rebase_order)
     if burn_in:
         stats = jax.tree.map(lambda x: x[:, 1:], stats)
     return _unflatten_lanes(stats, g, s)
 
 
-def summarize_market(stats: MarketWindowStats) -> dict:
+def summarize_market(stats: MarketWindowStats,
+                     telemetry: Telemetry | None = None) -> dict:
     """Float64 chunk reduction + market-specific derived statistics.
 
     Extends :func:`summarize`'s dict with preemption counters, spot spend,
     and per-pool served/arrival/utilization arrays (trailing pool axis).
     The chunk axis is the last axis for scalar accumulators and the
-    second-to-last for per-pool vectors.
+    second-to-last for per-pool vectors.  With ``telemetry``, ``stats`` is
+    the ``(base, telemetry)`` pair and the telemetry fields are appended
+    (base keys unchanged; see :func:`summarize`).
     """
+    tstats = None
+    if telemetry is not None:
+        stats, tstats = stats
     n_common = len(WindowStats._fields)
     out = summarize(WindowStats(*stats[:n_common]))
 
@@ -1326,6 +1472,8 @@ def summarize_market(stats: MarketWindowStats) -> dict:
         "pool_preempted": pool_preempted,
         "pool_utilization": pool_served / np.maximum(pool_arrivals, 1.0),
     })
+    if telemetry is not None:
+        return _merge_telemetry(out, telemetry, tstats, stats.time_elapsed)
     return out
 
 
@@ -1374,6 +1522,7 @@ def run_market_sim(
     rng: str = "split",
     tile: int = 256,
     interpret: bool | None = None,
+    telemetry: Telemetry | None = None,
 ) -> dict:
     """Run one market policy at one parameter point; scalar long-run stats.
 
@@ -1384,28 +1533,31 @@ def run_market_sim(
     market = as_market(market)
     params = {} if params is None else params
     _check_rng(rng)
+    _check_telemetry(telemetry)
     mp = market.params()
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
-    if impl in ("pallas", "ref"):
-        stats = _run_market_sweep_pallas_jit(
-            job, market, kernel, rmax, market.preemptible, n_events, chunk,
-            burn_in, tile,
-            default_interpret() if interpret is None else interpret,
-            jax.tree.map(lambda x: jnp.asarray(x)[None], params),
-            jax.tree.map(lambda x: jnp.asarray(x)[None], mp),
-            jnp.float32(k)[None], _raw_keys(key)[None], executor=impl,
-            rng=rng)
-        stats = jax.tree.map(lambda x: x[0, 0], stats)
-    elif impl == "xla":
-        _, stats = _run_market_sim_jit(job, market, kernel, rmax,
-                                       market.preemptible, n_events, chunk,
-                                       burn_in, rng, params, mp,
-                                       jnp.float32(k), key)
-    else:
-        raise ValueError(
-            f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
-    return {name: (float(v) if np.ndim(v) == 0 else np.asarray(v))
-            for name, v in summarize_market(stats).items()}
+    with annotate(f"repro.run_market_sim[{impl}]"):
+        if impl in ("pallas", "ref"):
+            stats = _run_market_sweep_pallas_jit(
+                job, market, kernel, rmax, market.preemptible, n_events,
+                chunk, burn_in, tile,
+                default_interpret() if interpret is None else interpret,
+                jax.tree.map(lambda x: jnp.asarray(x)[None], params),
+                jax.tree.map(lambda x: jnp.asarray(x)[None], mp),
+                jnp.float32(k)[None], _raw_keys(key)[None], executor=impl,
+                rng=rng, tel=telemetry)
+            stats = jax.tree.map(lambda x: x[0, 0], stats)
+        elif impl == "xla":
+            _, stats = _run_market_sim_jit(job, market, kernel, rmax,
+                                           market.preemptible, n_events,
+                                           chunk, burn_in, rng, params, mp,
+                                           jnp.float32(k), key,
+                                           tel=telemetry)
+        else:
+            raise ValueError(
+                f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
+    return {name: _scalar_or_array(v)
+            for name, v in summarize_market(stats, telemetry).items()}
 
 
 def run_market_sweep(
@@ -1429,6 +1581,7 @@ def run_market_sweep(
     rng: str = "split",
     tile: int = 256,
     interpret: bool | None = None,
+    telemetry: Telemetry | None = None,
 ) -> dict:
     """Run a (params × k × pools-config × seeds) grid as ONE jitted call.
 
@@ -1453,6 +1606,7 @@ def run_market_sweep(
     n = market.n_pools
     params = {} if params is None else params
     _check_rng(rng)
+    _check_telemetry(telemetry)
     params = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params)
     k = jnp.asarray(k, jnp.float32)
     overrides = {"price": prices, "hazard": hazards, "notice": notices,
@@ -1471,25 +1625,24 @@ def run_market_sweep(
     preempt_on = market.preemptible or hazards is not None
     keys = jax.random.split(key, n_seeds)
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
-    if impl in ("pallas", "ref"):
-        stats = _run_market_sweep_pallas_jit(
-            job, market, kernel, rmax, preempt_on, n_events, chunk, burn_in,
-            tile, default_interpret() if interpret is None else interpret,
-            params_flat, mp_flat, k_flat, _raw_keys(keys), executor=impl,
-            rng=rng)
-    elif impl == "xla":
-        stats = _run_market_sweep_jit(job, market, kernel, rmax, preempt_on,
-                                      n_events, chunk, burn_in, rng,
-                                      params_flat, mp_flat, k_flat, keys)
-    else:
-        raise ValueError(
-            f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
-    out = summarize_market(stats)
-    per_pool = _POOL_FIELDS | {"pool_utilization"}
-    return {name: v.reshape(grid_shape
-                            + ((n_seeds, n) if name in per_pool
-                               else (n_seeds,)))
-            for name, v in out.items()}
+    with annotate(f"repro.run_market_sweep[{impl}]"):
+        if impl in ("pallas", "ref"):
+            stats = _run_market_sweep_pallas_jit(
+                job, market, kernel, rmax, preempt_on, n_events, chunk,
+                burn_in, tile,
+                default_interpret() if interpret is None else interpret,
+                params_flat, mp_flat, k_flat, _raw_keys(keys), executor=impl,
+                rng=rng, tel=telemetry)
+        elif impl == "xla":
+            stats = _run_market_sweep_jit(job, market, kernel, rmax,
+                                          preempt_on, n_events, chunk,
+                                          burn_in, rng, params_flat, mp_flat,
+                                          k_flat, keys, tel=telemetry)
+        else:
+            raise ValueError(
+                f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
+    out = summarize_market(stats, telemetry)
+    return _reshape_sweep(out, grid_shape, n_seeds)
 
 
 # ===========================================================================
@@ -1688,7 +1841,8 @@ def _kernel_route_slab(kernel, params, qlens, view: RegionView,
 def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
                   layout: SlabLayout | None, carry: RegionState,
                   stats: RegionWindowStats, params, rp: dict,
-                  k_cost: jax.Array, x: jax.Array | None = None
+                  k_cost: jax.Array, x: jax.Array | None = None,
+                  tel: Telemetry | None = None
                   ) -> tuple[RegionState, RegionWindowStats]:
     """One merged event: job arrival (in some region) / region spot slot /
     region preemption / wait deadline.  Same dense one-hot-select style as
@@ -1696,9 +1850,13 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
     vmap); expression structure deliberately mirrors :func:`_market_event`
     so the degenerate reduction is auditable term by term — including the
     slab stream's superposed scalar preemption clock (``layout`` not None).
+    ``tel`` appends the telemetry fold exactly as in :func:`_engine_event`
+    (base expressions untouched); the event locus is the firing region.
     """
     n_regions, n_slots = topo.n_regions, topo.total_slots
     has_route = hasattr(kernel, "route")
+    if tel is not None:
+        stats, tstats = stats
     if layout is None:
         key, k_job, k_spot, k_pol, k_pre, k_rt = split_event_keys(
             carry.key, preempt_on, has_route)
@@ -1909,6 +2067,26 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
         region_routed=stats.region_routed
         + (admit & (iota_r == target)).astype(jnp.int32),
     )
+    if tel is not None:
+        defect_region = jnp.sum(jnp.where(iota_s == defect_slot,
+                                          slot_region, 0))
+        loc = jnp.where(is_spot, spot_region,
+                        jnp.where(is_pre, pre_region,
+                                  jnp.where(is_deadline, defect_region,
+                                            target)))
+        tstats = telemetry_update(
+            tel, tstats, t=new_stats.time_elapsed, is_job=is_job,
+            is_spot=is_spot, is_pre=is_pre, is_deadline=is_deadline,
+            served=served, resume=resume, defected=defected, od_now=od_now,
+            wait_sample=jnp.where(served, wait_served,
+                                  jnp.where(defected, age_defect, age_pre)),
+            wait_valid=served | defected | pre_hit,
+            cost_inc=jnp.where(served, price_s, 0.0)
+            + jnp.where(od_now | defected | defect_pre, k_cost, 0.0)
+            + jnp.where(pre_hit, price_p, 0.0),
+            cost_valid=served | od_now | defected | pre_hit,
+            loc=loc, n_locs=n_regions, qlen=jnp.sum(new_carry.qlen))
+        return new_carry, (new_stats, tstats)
     return new_carry, new_stats
 
 
@@ -1927,12 +2105,14 @@ def _region_layout(topo: RegionTopology, kernel,
 def run_region_window(topo: RegionTopology, kernel, preempt_on: bool,
                       state: RegionState, params, rp: dict,
                       k_cost: jax.Array, n_events: int,
-                      layout: SlabLayout | None = None
+                      layout: SlabLayout | None = None,
+                      tel: Telemetry | None = None
                       ) -> tuple[RegionState, RegionWindowStats]:
     """Run ``n_events`` merged region events; one window of float32 sums."""
     step = functools.partial(_region_event, topo, kernel, preempt_on, layout,
-                             params=params, rp=rp, k_cost=k_cost)
-    zeros = RegionWindowStats.zeros(topo.n_regions)
+                             params=params, rp=rp, k_cost=k_cost, tel=tel)
+    zeros = _with_zeros(RegionWindowStats.zeros(topo.n_regions), tel,
+                        topo.n_regions)
     if layout is None:
         return _scan_window(step, zeros, state, n_events)
     return _scan_window_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
@@ -1942,11 +2122,13 @@ def run_region_window(topo: RegionTopology, kernel, preempt_on: bool,
 def run_region_chunked(topo: RegionTopology, kernel, preempt_on: bool,
                        state: RegionState, params, rp: dict,
                        k_cost: jax.Array, n_events: int, chunk_events: int,
-                       layout: SlabLayout | None = None
+                       layout: SlabLayout | None = None,
+                       tel: Telemetry | None = None
                        ) -> tuple[RegionState, RegionWindowStats]:
     step = functools.partial(_region_event, topo, kernel, preempt_on, layout,
-                             params=params, rp=rp, k_cost=k_cost)
-    zeros = RegionWindowStats.zeros(topo.n_regions)
+                             params=params, rp=rp, k_cost=k_cost, tel=tel)
+    zeros = _with_zeros(RegionWindowStats.zeros(topo.n_regions), tel,
+                        topo.n_regions)
     if layout is None:
         return _scan_chunked(step, zeros, state, n_events, chunk_events)
     return _scan_chunked_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
@@ -1956,29 +2138,31 @@ def run_region_chunked(topo: RegionTopology, kernel, preempt_on: bool,
 @functools.partial(
     jax.jit,
     static_argnames=("topo", "kernel", "preempt_on", "n_events",
-                     "chunk_events", "burn_in", "rng"),
+                     "chunk_events", "burn_in", "rng", "tel"),
 )
 def _run_region_sim_jit(topo, kernel, preempt_on, n_events, chunk_events,
-                        burn_in, rng, params, rp, k_cost, key):
+                        burn_in, rng, params, rp, k_cost, key, tel=None):
     layout = (_region_layout(topo, kernel, preempt_on)
               if rng == "slab" else None)
     state = init_region_state(key, topo, rp, preempt_on,
                               scalar_preempt=layout is not None)
     if burn_in:
         state, _ = run_region_window(topo, kernel, preempt_on, state, params,
-                                     rp, k_cost, burn_in, layout=layout)
+                                     rp, k_cost, burn_in, layout=layout,
+                                     tel=tel)
         state = _rebase_order(state)
     return run_region_chunked(topo, kernel, preempt_on, state, params, rp,
-                              k_cost, n_events, chunk_events, layout=layout)
+                              k_cost, n_events, chunk_events, layout=layout,
+                              tel=tel)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("topo", "kernel", "preempt_on", "n_events",
-                     "chunk_events", "burn_in", "rng"),
+                     "chunk_events", "burn_in", "rng", "tel"),
 )
 def _run_region_sweep_jit(topo, kernel, preempt_on, n_events, chunk_events,
-                          burn_in, rng, params, rp, k_cost, keys):
+                          burn_in, rng, params, rp, k_cost, keys, tel=None):
     """(grid × regions-config × seeds) fleet as one nested-vmap XLA program
     (broadcast ``in_axes``; see :func:`_flat_lane_args`)."""
     layout = (_region_layout(topo, kernel, preempt_on)
@@ -1989,11 +2173,12 @@ def _run_region_sweep_jit(topo, kernel, preempt_on, n_events, chunk_events,
                                   scalar_preempt=layout is not None)
         if burn_in:
             state, _ = run_region_window(topo, kernel, preempt_on, state, p,
-                                         r, kc, burn_in, layout=layout)
+                                         r, kc, burn_in, layout=layout,
+                                         tel=tel)
             state = _rebase_order(state)
         _, stats = run_region_chunked(topo, kernel, preempt_on, state, p, r,
                                       kc, n_events, chunk_events,
-                                      layout=layout)
+                                      layout=layout, tel=tel)
         return stats
 
     per_seeds = jax.vmap(one, in_axes=(None, None, None, 0))
@@ -2005,12 +2190,12 @@ def _run_region_sweep_jit(topo, kernel, preempt_on, n_events, chunk_events,
     jax.jit,
     static_argnames=("topo", "kernel", "preempt_on", "n_events",
                      "chunk_events", "burn_in", "tile", "interpret",
-                     "executor", "rng"),
+                     "executor", "rng", "tel"),
 )
 def _run_region_sweep_pallas_jit(topo, kernel, preempt_on, n_events,
                                  chunk_events, burn_in, tile, interpret,
                                  params, rp, k_cost, keys,
-                                 executor="pallas", rng="split"):
+                                 executor="pallas", rng="split", tel=None):
     """The region fleet through the same batched-event kernel family: the
     engine-state blocks grow a region axis — (tile, R) clock vectors,
     (tile, sum rmax_r) packed slot arrays — and :func:`_region_event` is
@@ -2036,29 +2221,33 @@ def _run_region_sweep_pallas_jit(topo, kernel, preempt_on, n_events,
 
         def step(carry, stats, p, x):
             return _region_event(topo, kernel, preempt_on, layout, carry,
-                                 stats, p["params"], p["rp"], p["k"], x=x)
+                                 stats, p["params"], p["rp"], p["k"], x=x,
+                                 tel=tel)
     else:
         xs = None
 
         def step(carry, stats, p):
             return _region_event(topo, kernel, preempt_on, None, carry,
-                                 stats, p["params"], p["rp"], p["k"])
+                                 stats, p["params"], p["rp"], p["k"],
+                                 tel=tel)
 
+    zeros = _with_zeros(RegionWindowStats.zeros(topo.n_regions), tel,
+                        topo.n_regions)
     if executor == "ref":
         _, stats = batched_event_windows_ref(
-            step, state0, params_b, RegionWindowStats.zeros(topo.n_regions),
-            plan, xs=xs, epilogue=_rebase_order)
+            step, state0, params_b, zeros, plan, xs=xs,
+            epilogue=_rebase_order)
     else:
         _, stats = batched_events(
-            step, state0, params_b, RegionWindowStats.zeros(topo.n_regions),
-            plan, xs=xs, tile=tile, interpret=interpret,
-            epilogue=_rebase_order)
+            step, state0, params_b, zeros, plan, xs=xs, tile=tile,
+            interpret=interpret, epilogue=_rebase_order)
     if burn_in:
         stats = jax.tree.map(lambda x: x[:, 1:], stats)
     return _unflatten_lanes(stats, g, s)
 
 
-def summarize_region(stats: RegionWindowStats) -> dict:
+def summarize_region(stats: RegionWindowStats,
+                     telemetry: Telemetry | None = None) -> dict:
     """Float64 chunk reduction + region-specific derived statistics.
 
     Extends :func:`summarize`'s dict with preemption counters, spot spend,
@@ -2067,8 +2256,13 @@ def summarize_region(stats: RegionWindowStats) -> dict:
     arrays (trailing region axis), and the routing flow:
     ``region_jobs`` (arrivals by home region), ``region_routed``
     (admissions by target region), and ``cross_region_frac`` (the fraction
-    of admitted jobs the routing hook sent away from home).
+    of admitted jobs the routing hook sent away from home).  With
+    ``telemetry``, ``stats`` is the ``(base, telemetry)`` pair and the
+    telemetry fields are appended (base keys unchanged; :func:`summarize`).
     """
+    tstats = None
+    if telemetry is not None:
+        stats, tstats = stats
     n_common = len(WindowStats._fields)
     out = summarize(WindowStats(*stats[:n_common]))
 
@@ -2107,6 +2301,8 @@ def summarize_region(stats: RegionWindowStats) -> dict:
         "region_utilization": region_served / np.maximum(region_arrivals,
                                                          1.0),
     })
+    if telemetry is not None:
+        return _merge_telemetry(out, telemetry, tstats, stats.time_elapsed)
     return out
 
 
@@ -2124,6 +2320,7 @@ def run_region_sim(
     rng: str = "split",
     tile: int = 256,
     interpret: bool | None = None,
+    telemetry: Telemetry | None = None,
 ) -> dict:
     """Run one routing policy on one topology point; scalar long-run stats.
 
@@ -2135,27 +2332,31 @@ def run_region_sim(
     topology = as_topology(topology)
     params = {} if params is None else params
     _check_rng(rng)
+    _check_telemetry(telemetry)
     rp = topology.params()
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
-    if impl in ("pallas", "ref"):
-        stats = _run_region_sweep_pallas_jit(
-            topology, kernel, topology.preemptible, n_events, chunk, burn_in,
-            tile, default_interpret() if interpret is None else interpret,
-            jax.tree.map(lambda x: jnp.asarray(x)[None], params),
-            jax.tree.map(lambda x: jnp.asarray(x)[None], rp),
-            jnp.float32(k)[None], _raw_keys(key)[None], executor=impl,
-            rng=rng)
-        stats = jax.tree.map(lambda x: x[0, 0], stats)
-    elif impl == "xla":
-        _, stats = _run_region_sim_jit(topology, kernel,
-                                       topology.preemptible, n_events, chunk,
-                                       burn_in, rng, params, rp,
-                                       jnp.float32(k), key)
-    else:
-        raise ValueError(
-            f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
-    return {name: (float(v) if np.ndim(v) == 0 else np.asarray(v))
-            for name, v in summarize_region(stats).items()}
+    with annotate(f"repro.run_region_sim[{impl}]"):
+        if impl in ("pallas", "ref"):
+            stats = _run_region_sweep_pallas_jit(
+                topology, kernel, topology.preemptible, n_events, chunk,
+                burn_in, tile,
+                default_interpret() if interpret is None else interpret,
+                jax.tree.map(lambda x: jnp.asarray(x)[None], params),
+                jax.tree.map(lambda x: jnp.asarray(x)[None], rp),
+                jnp.float32(k)[None], _raw_keys(key)[None], executor=impl,
+                rng=rng, tel=telemetry)
+            stats = jax.tree.map(lambda x: x[0, 0], stats)
+        elif impl == "xla":
+            _, stats = _run_region_sim_jit(topology, kernel,
+                                           topology.preemptible, n_events,
+                                           chunk, burn_in, rng, params, rp,
+                                           jnp.float32(k), key,
+                                           tel=telemetry)
+        else:
+            raise ValueError(
+                f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
+    return {name: _scalar_or_array(v)
+            for name, v in summarize_region(stats, telemetry).items()}
 
 
 def run_region_sweep(
@@ -2179,6 +2380,7 @@ def run_region_sweep(
     rng: str = "split",
     tile: int = 256,
     interpret: bool | None = None,
+    telemetry: Telemetry | None = None,
 ) -> dict:
     """Run a (params × k × regions-config × seeds) grid as ONE jitted call.
 
@@ -2212,6 +2414,7 @@ def run_region_sweep(
     n = topology.n_regions
     params = {} if params is None else params
     _check_rng(rng)
+    _check_telemetry(telemetry)
     params = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params)
     vparams = {} if vector_params is None else jax.tree.map(
         lambda x: jnp.asarray(x, jnp.float32), dict(vector_params))
@@ -2240,22 +2443,20 @@ def run_region_sweep(
     preempt_on = topology.preemptible or hazards is not None
     keys = jax.random.split(key, n_seeds)
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
-    if impl in ("pallas", "ref"):
-        stats = _run_region_sweep_pallas_jit(
-            topology, kernel, preempt_on, n_events, chunk, burn_in, tile,
-            default_interpret() if interpret is None else interpret,
-            params_flat, rp_flat, k_flat, _raw_keys(keys), executor=impl,
-            rng=rng)
-    elif impl == "xla":
-        stats = _run_region_sweep_jit(topology, kernel, preempt_on, n_events,
-                                      chunk, burn_in, rng, params_flat,
-                                      rp_flat, k_flat, keys)
-    else:
-        raise ValueError(
-            f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
-    out = summarize_region(stats)
-    per_region = _REGION_FIELDS | {"region_utilization"}
-    return {name: v.reshape(grid_shape
-                            + ((n_seeds, n) if name in per_region
-                               else (n_seeds,)))
-            for name, v in out.items()}
+    with annotate(f"repro.run_region_sweep[{impl}]"):
+        if impl in ("pallas", "ref"):
+            stats = _run_region_sweep_pallas_jit(
+                topology, kernel, preempt_on, n_events, chunk, burn_in, tile,
+                default_interpret() if interpret is None else interpret,
+                params_flat, rp_flat, k_flat, _raw_keys(keys), executor=impl,
+                rng=rng, tel=telemetry)
+        elif impl == "xla":
+            stats = _run_region_sweep_jit(topology, kernel, preempt_on,
+                                          n_events, chunk, burn_in, rng,
+                                          params_flat, rp_flat, k_flat, keys,
+                                          tel=telemetry)
+        else:
+            raise ValueError(
+                f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
+    out = summarize_region(stats, telemetry)
+    return _reshape_sweep(out, grid_shape, n_seeds)

@@ -1,0 +1,42 @@
+"""``repro.obs`` — the observability subsystem.
+
+Three layers, one axis: :class:`Telemetry` is the static descriptor the
+engine entry points accept as ``telemetry=`` (the fifth dispatch axis,
+after policy kernel / scenario loop / executor / RNG stream).  With it
+set, sims and sweeps additionally return streaming wait/cost quantile
+sketches, event-type counters, and per-pool/per-region defect/resume
+counts per grid point — accumulated on-device in the same float32 window
+blocks as the base stats, through all three executors.  ``telemetry=None``
+(the default) compiles the identical program as before the axis existed:
+zero cost, bitwise-reproduced stats (frozen in tests/test_obs.py).
+
+* :mod:`repro.obs.stats` — device accumulators + host summaries.
+* :mod:`repro.obs.trace` — event tracing (device rings / host recorder)
+  and the Chrome/Perfetto exporter.
+* :mod:`repro.obs.timing` — compile-vs-steady timing, BENCH provenance
+  stamps, profiler trace scopes.
+"""
+from .stats import (EVENT_TYPES, TEL_INT_STATS, Telemetry,
+                    TelemetryWindowStats, sketch_quantile,
+                    summarize_telemetry, telemetry_update, telemetry_zeros)
+from .timing import annotate, provenance, time_compiled
+from .trace import (TraceRecorder, device_trace_records, to_perfetto,
+                    write_perfetto)
+
+__all__ = [
+    "EVENT_TYPES",
+    "TEL_INT_STATS",
+    "Telemetry",
+    "TelemetryWindowStats",
+    "TraceRecorder",
+    "annotate",
+    "device_trace_records",
+    "provenance",
+    "sketch_quantile",
+    "summarize_telemetry",
+    "telemetry_update",
+    "telemetry_zeros",
+    "time_compiled",
+    "to_perfetto",
+    "write_perfetto",
+]

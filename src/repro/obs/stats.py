@@ -1,0 +1,308 @@
+"""On-device streaming telemetry: histograms, quantile sketches, counters.
+
+The engine's window stats answer "what did it cost *on average*" — the
+paper's delay constraint, and any SLO a real service quotes, needs the
+*tail*: P50/P99 wait, per-pool preemption rates, defect rates.  This
+module is the accumulator layer of the ``telemetry=`` engine axis
+(:mod:`repro.core.engine`): a :class:`Telemetry` descriptor (static,
+hashable — a jit cache key exactly like ``impl=``/``rng=``) plus a
+:class:`TelemetryWindowStats` pytree that rides NEXT TO the engine's
+existing ``WindowStats`` through every executor — the same float32 window
+blocks, re-zeroed per chunk, stacked on the host.  ``telemetry=None``
+never constructs any of this, so the compiled program is *identical* to
+today's (the zero-cost-off contract, frozen in tests/test_obs.py).
+
+Quantile sketch
+---------------
+Waits and costs accumulate into **log-spaced fixed-bin histograms**
+(DDSketch-style: bin ``i`` covers ``[lo·γ^(i-1), lo·γ^i)`` with
+``γ = (hi/lo)^(1/(n_bins-2))``, plus an underflow and an overflow bin).
+A log-binned histogram is a mergeable quantile sketch with *bounded
+relative error*: any quantile read off the cumulative counts is within
+one bin of the truth, i.e. within a factor ``γ`` of the exact empirical
+quantile — ``γ − 1`` ≈ 9% at the 64-bin default over six decades.
+Merging across windows / seeds / shards is integer addition, which is
+exactly what the sharded-sweep direction in ROADMAP.md needs.  Accuracy
+is pinned in tests/test_obs.py against exact empirical quantiles
+recovered from the event trace.
+
+Counters
+--------
+Scalar per-window event counters close the visibility gaps the base
+stats leave: ``preempts_fired`` counts hazard-clock firings (the base
+``preemptions`` only counts *hits* on occupied pools), ``rejects``
+splits admission rejections out of ``ondemand``, ``deadline_defects``
+splits budget expiries, ``notices_honored`` mirrors ``resumed``.  The
+``events`` vector counts merged events by type (job/spot/preempt/
+deadline), and ``loc_defects``/``loc_resumed`` resolve defects and
+recoveries per pool/region — the per-location defect-rate view.
+
+Event trace
+-----------
+With ``trace_cap > 0`` a bounded per-lane ring buffer records every
+merged event as ``(t, type, loc, qlen, val)`` — within-window time,
+event-type code, pool/region index, post-event queue length, and the
+wait sample (−1 when the event observed none).  The ring is drained per
+window (it lives in the stats pytree, which the executors re-zero and
+stack per chunk); :mod:`repro.obs.trace` turns the stacked windows into
+Chrome/Perfetto trace JSON.  Records wrap at ``trace_cap`` per window —
+``n`` keeps the true count so the exporter can report drops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: Merged-event type codes (the ``events`` counter axis and the trace
+#: ``type`` field).  Order matches the engine's tie-break priority.
+EVENT_TYPES = ("job", "spot", "preempt", "deadline")
+EV_JOB, EV_SPOT, EV_PREEMPT, EV_DEADLINE = range(4)
+
+
+@dataclasses.dataclass(frozen=True)
+class Telemetry:
+    """Static telemetry descriptor — the ``telemetry=`` engine axis.
+
+    Hashable (frozen dataclass), so it is a jit static argument exactly
+    like the ``impl=``/``rng=`` axes.  ``n_bins`` log-spaced bins span
+    ``[lo, hi)`` per histogram (first bin = underflow, last = overflow);
+    the relative quantile error is ``γ − 1`` with
+    ``γ = (hi/lo)^(1/(n_bins-2))``.  ``trace_cap`` > 0 additionally
+    records a bounded per-lane, per-window event ring (see the module
+    docstring); 0 keeps tracing compiled out.
+    """
+
+    n_bins: int = 64
+    wait_lo: float = 1e-2
+    wait_hi: float = 1e4
+    cost_lo: float = 1e-2
+    cost_hi: float = 1e3
+    trace_cap: int = 0
+
+    def wait_edges(self) -> np.ndarray:
+        return _edges(self.wait_lo, self.wait_hi, self.n_bins)
+
+    def cost_edges(self) -> np.ndarray:
+        return _edges(self.cost_lo, self.cost_hi, self.n_bins)
+
+    def rel_error(self) -> float:
+        """The sketch's worst-case relative quantile error (γ − 1)."""
+        gamma = (self.wait_hi / self.wait_lo) ** (1.0 / (self.n_bins - 2))
+        return gamma - 1.0
+
+
+class TelemetryWindowStats(NamedTuple):
+    """Per-window telemetry accumulators (int32 counts, float32 rings).
+
+    Rides next to the engine's base window stats as ``(base, telemetry)``
+    — every executor (xla scan, pallas kernel, ref oracle) is generic
+    over the stats pytree, so the pair threads through with zero
+    executor changes.  Ring fields are ``None`` when tracing is off
+    (``jax.tree`` drops ``None`` subtrees, so the compiled program
+    carries no trace machinery at all).
+    """
+
+    wait_hist: jax.Array  # (n_bins,) i32 — wait samples, log-binned
+    cost_hist: jax.Array  # (n_bins,) i32 — per-event cost increments
+    events: jax.Array  # (4,) i32 — merged events by type code
+    spot_starts: jax.Array  # () i32 — spot legs started (= served)
+    preempts_fired: jax.Array  # () i32 — hazard clock firings (incl. idle)
+    notices_honored: jax.Array  # () i32 — preempted legs that resumed
+    deadline_defects: jax.Array  # () i32 — wait-budget expiries
+    rejects: jax.Array  # () i32 — admission rejections (immediate OD)
+    loc_defects: jax.Array  # (n_locs,) i32 — deadline defects per pool/region
+    loc_resumed: jax.Array  # (n_locs,) i32 — notices honored per pool/region
+    ring_t: jax.Array | None  # (cap,) f32 within-window event time
+    ring_type: jax.Array | None  # (cap,) i32 event-type code
+    ring_loc: jax.Array | None  # (cap,) i32 pool/region index
+    ring_qlen: jax.Array | None  # (cap,) i32 post-event total queue length
+    ring_val: jax.Array | None  # (cap,) f32 wait sample (-1 = none)
+    ring_n: jax.Array | None  # () i32 true record count (ring wraps)
+
+
+def telemetry_zeros(tel: Telemetry, n_locs: int) -> TelemetryWindowStats:
+    """Unbatched zero accumulators for one window (cf. WindowStats.zeros)."""
+    zi = jnp.zeros((), jnp.int32)
+    zb = jnp.zeros((tel.n_bins,), jnp.int32)
+    zl = jnp.zeros((n_locs,), jnp.int32)
+    if tel.trace_cap:
+        # all-zero (NOT sentinel-filled): every executor re-zeros window
+        # accumulators with literal zeros, so any other fill would break
+        # the pallas == ref == xla ledger.  Unwritten ring slots are never
+        # exported (the drain reads min(n, cap) records).
+        cap = tel.trace_cap
+        ring = (jnp.zeros((cap,), jnp.float32), jnp.zeros((cap,), jnp.int32),
+                jnp.zeros((cap,), jnp.int32), jnp.zeros((cap,), jnp.int32),
+                jnp.zeros((cap,), jnp.float32), zi)
+    else:
+        ring = (None,) * 6
+    return TelemetryWindowStats(zb, zb, jnp.zeros((4,), jnp.int32),
+                                zi, zi, zi, zi, zi, zl, zl, *ring)
+
+
+def _edges(lo: float, hi: float, n_bins: int) -> np.ndarray:
+    """Host-side bin edges: [0, lo·γ⁰, …, lo·γ^(n_bins-2), inf]."""
+    interior = lo * ((hi / lo) ** (np.arange(n_bins - 1)
+                                   / (n_bins - 2))).astype(np.float64)
+    return np.concatenate([[0.0], interior, [np.inf]])
+
+
+def hist_bin(x: jax.Array, lo: float, hi: float, n_bins: int) -> jax.Array:
+    """Traced log-spaced bin index of ``x`` (clamped; bin 0 underflow,
+    bin ``n_bins-1`` overflow).  All constants are np scalars so the
+    expression stays capture-free under the Pallas kernel trace."""
+    log_lo = np.float32(np.log(lo))
+    inv_log_gamma = np.float32((n_bins - 2) / np.log(hi / lo))
+    safe = jnp.maximum(x, np.float32(1e-30))
+    raw = (jnp.log(safe) - log_lo) * inv_log_gamma
+    idx = jnp.floor(raw).astype(jnp.int32) + 1
+    return jnp.clip(idx, 0, np.int32(n_bins - 1))
+
+
+def _hist_add(hist: jax.Array, x: jax.Array, valid: jax.Array,
+              lo: float, hi: float, n_bins: int) -> jax.Array:
+    """One-hot histogram increment (dense select — the engine's idiom)."""
+    b = hist_bin(x, lo, hi, n_bins)
+    iota = jax.lax.iota(jnp.int32, n_bins)
+    return hist + ((iota == b) & valid).astype(jnp.int32)
+
+
+def telemetry_update(tel: Telemetry, ts: TelemetryWindowStats, *,
+                     t: jax.Array, is_job: jax.Array, is_spot: jax.Array,
+                     is_pre: jax.Array, is_deadline: jax.Array,
+                     served: jax.Array, resume: jax.Array,
+                     defected: jax.Array, od_now: jax.Array,
+                     wait_sample: jax.Array, wait_valid: jax.Array,
+                     cost_inc: jax.Array, cost_valid: jax.Array,
+                     loc: jax.Array, n_locs: int,
+                     qlen: jax.Array) -> TelemetryWindowStats:
+    """Fold one merged event into the telemetry accumulators.
+
+    Called from the engine event bodies ONLY under ``telemetry=``; every
+    argument is a local the body already computed, so the update is a
+    pure appendage — the base stats expressions are untouched (the
+    primary-stats-bitwise contract).  ``loc`` is the event's pool/region
+    locus (0 for the single-queue loop); ``t`` is the post-event
+    within-window time; ``qlen`` the post-event total queue length.
+    """
+    iota4 = jax.lax.iota(jnp.int32, 4)
+    ev_type = jnp.where(is_spot, EV_SPOT,
+                        jnp.where(is_pre, EV_PREEMPT,
+                                  jnp.where(is_deadline, EV_DEADLINE,
+                                            EV_JOB))).astype(jnp.int32)
+    iota_l = jax.lax.iota(jnp.int32, n_locs)
+    loc_hit = iota_l == loc
+    out = ts._replace(
+        wait_hist=_hist_add(ts.wait_hist, wait_sample, wait_valid,
+                            tel.wait_lo, tel.wait_hi, tel.n_bins),
+        cost_hist=_hist_add(ts.cost_hist, cost_inc, cost_valid,
+                            tel.cost_lo, tel.cost_hi, tel.n_bins),
+        events=ts.events + (iota4 == ev_type).astype(jnp.int32),
+        spot_starts=ts.spot_starts + served.astype(jnp.int32),
+        preempts_fired=ts.preempts_fired + is_pre.astype(jnp.int32),
+        notices_honored=ts.notices_honored + resume.astype(jnp.int32),
+        deadline_defects=ts.deadline_defects + defected.astype(jnp.int32),
+        rejects=ts.rejects + od_now.astype(jnp.int32),
+        loc_defects=ts.loc_defects + (defected & loc_hit).astype(jnp.int32),
+        loc_resumed=ts.loc_resumed + (resume & loc_hit).astype(jnp.int32),
+    )
+    if not tel.trace_cap:
+        return out
+    cap = tel.trace_cap
+    iota_c = jax.lax.iota(jnp.int32, cap)
+    slot = jnp.mod(ts.ring_n, np.int32(cap))
+    hit = iota_c == slot
+    val = jnp.where(wait_valid, wait_sample, np.float32(-1.0))
+    return out._replace(
+        ring_t=jnp.where(hit, t, ts.ring_t),
+        ring_type=jnp.where(hit, ev_type, ts.ring_type),
+        ring_loc=jnp.where(hit, jnp.asarray(loc, jnp.int32), ts.ring_loc),
+        ring_qlen=jnp.where(hit, jnp.asarray(qlen, jnp.int32), ts.ring_qlen),
+        ring_val=jnp.where(hit, val, ts.ring_val),
+        ring_n=ts.ring_n + 1,
+    )
+
+
+_TRACE_FIELDS = ("ring_t", "ring_type", "ring_loc", "ring_qlen", "ring_val",
+                 "ring_n")
+#: Telemetry statistics carrying a trailing per-bin / per-type /
+#: per-location axis in summaries (everything else is scalar per lane).
+TEL_VECTOR_STATS = frozenset({"wait_hist", "cost_hist", "events",
+                              "loc_defects", "loc_resumed"})
+#: Integer telemetry statistics — event *decisions*, bitwise across
+#: executors just like engine INT_STATS.  Histogram counts are excluded:
+#: binning a float wait that differs by an ulp between batch layouts can
+#: flip a boundary bin, so hists get the pallas==ref bitwise contract
+#: only (see tests/test_obs.py).
+TEL_INT_STATS = ("events", "spot_starts", "preempts_fired",
+                 "notices_honored", "deadline_defects", "rejects",
+                 "loc_defects", "loc_resumed")
+
+
+def sketch_quantile(hist: np.ndarray, edges: np.ndarray,
+                    q: float) -> np.ndarray:
+    """Quantile estimate from (…, n_bins) log-binned counts.
+
+    Linear interpolation of the cumulative mass inside the selected
+    bin, against the geometric bin representative rule at the edges:
+    within one bin of the exact empirical quantile by construction, i.e.
+    relative error ≤ γ − 1.  Empty histograms return 0.0.
+    """
+    h = np.asarray(hist, np.float64)
+    total = h.sum(axis=-1, keepdims=True)
+    cum = np.cumsum(h, axis=-1)
+    target = np.maximum(q * total, 1.0)
+    idx = np.minimum((cum < target).sum(axis=-1), h.shape[-1] - 1)
+    lo = edges[idx]
+    hi = np.where(np.isfinite(edges[idx + 1]), edges[idx + 1], edges[idx])
+    lo = np.where(idx == 0, 0.0, lo)
+    in_bin = np.take_along_axis(h, idx[..., None], -1)[..., 0]
+    below = np.take_along_axis(cum, idx[..., None], -1)[..., 0] - in_bin
+    frac = np.where(in_bin > 0,
+                    (target[..., 0] - below) / np.maximum(in_bin, 1.0), 0.0)
+    est = lo + np.clip(frac, 0.0, 1.0) * (hi - lo)
+    return np.where(total[..., 0] > 0, est, 0.0)
+
+
+def summarize_telemetry(tel: Telemetry, ts: TelemetryWindowStats) -> dict:
+    """Reduce stacked telemetry windows; derive quantiles.  Host-side.
+
+    Mirrors :func:`repro.core.engine.summarize`: the window axis is the
+    last axis for scalar counters and second-to-last for vector fields;
+    leading batch axes (grid, seeds) pass through.  Ring fields are NOT
+    reduced — they are per-window drains, returned under ``"trace"`` for
+    :mod:`repro.obs.trace` (with per-window true counts).
+    """
+    def _red(name):
+        x = getattr(ts, name)
+        axis = -2 if name in TEL_VECTOR_STATS else -1
+        return np.asarray(x, np.float64).sum(axis=axis)
+
+    wait_hist = _red("wait_hist")
+    cost_hist = _red("cost_hist")
+    we, ce = tel.wait_edges(), tel.cost_edges()
+    out = {
+        "p50_wait": sketch_quantile(wait_hist, we, 0.50),
+        "p90_wait": sketch_quantile(wait_hist, we, 0.90),
+        "p99_wait": sketch_quantile(wait_hist, we, 0.99),
+        "p50_cost": sketch_quantile(cost_hist, ce, 0.50),
+        "p99_cost": sketch_quantile(cost_hist, ce, 0.99),
+        "wait_hist": wait_hist,
+        "cost_hist": cost_hist,
+        "events": _red("events"),
+        "spot_starts": _red("spot_starts"),
+        "preempts_fired": _red("preempts_fired"),
+        "notices_honored": _red("notices_honored"),
+        "deadline_defects": _red("deadline_defects"),
+        "rejects": _red("rejects"),
+        "loc_defects": _red("loc_defects"),
+        "loc_resumed": _red("loc_resumed"),
+    }
+    if tel.trace_cap:
+        out["trace"] = {name[len("ring_"):]: np.asarray(getattr(ts, name))
+                        for name in _TRACE_FIELDS}
+    return out

@@ -1,0 +1,337 @@
+"""The observability contract (repro.obs + the engine ``telemetry=`` axis).
+
+Four frozen guarantees:
+
+  * **Zero-cost off** — ``telemetry=None`` reproduces today's stats
+    bitwise on every loop × executor (the compiled program is identical:
+    the telemetry fold is statically absent).
+  * **Primary stats untouched on** — turning telemetry ON changes no
+    base statistic's bits; it only *adds* fields.
+  * **Executor equivalence** — telemetry counters/histograms follow the
+    engine's executor contract: pallas == ref bitwise on everything;
+    integer decision counts (TEL_INT_STATS) bitwise vs xla too (float
+    ulp differences may flip a histogram boundary bin, so hists are
+    exempt from the cross-layout comparison).
+  * **Sketch accuracy** — P50/P90/P99 from the log-binned sketch land
+    within the advertised relative error (γ − 1) of the exact empirical
+    quantiles recovered from the event trace, across randomized market
+    and region configs.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from _stats import assert_same_distribution  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    Exponential,
+    ThreePhaseKernel,
+    run_market_sim,
+    run_market_sweep,
+    run_region_sim,
+    run_region_sweep,
+    run_sim,
+    run_sweep,
+)
+from repro.core.market import NoticeAwareKernel, SpotMarket, SpotPool
+from repro.core.regions import Region, RegionTopology
+from repro.obs import (
+    EVENT_TYPES,
+    TEL_INT_STATS,
+    Telemetry,
+    TraceRecorder,
+    device_trace_records,
+    sketch_quantile,
+    to_perfetto,
+)
+from repro.obs.stats import EV_JOB, EV_SPOT, hist_bin
+
+LAM, MU, K = 1.2, 0.9, 12.0
+TEL = Telemetry(trace_cap=32)
+
+
+def _market(n_pools: int = 2) -> SpotMarket:
+    return SpotMarket(pools=tuple(
+        SpotPool(Exponential(MU / n_pools), price=0.4 + 0.3 * i,
+                 hazard=0.2 / (i + 1), notice=0.5 * (i % 2))
+        for i in range(n_pools)))
+
+
+def _topo(n_regions: int = 2) -> RegionTopology:
+    return RegionTopology(regions=tuple(
+        Region(Exponential(LAM / n_regions), Exponential(MU / n_regions),
+               price=0.4 + 0.2 * i, hazard=0.1 / (i + 1))
+        for i in range(n_regions)))
+
+
+def _run(loop: str, impl: str, telemetry, **over):
+    kw = dict(k=K, n_events=3_000, key=jax.random.key(11),
+              chunk_events=1_024, telemetry=telemetry)
+    if impl == "pallas":
+        kw["interpret"] = True
+    kw.update(over)
+    params = {"r": jnp.float32(2.0)}
+    kern = ThreePhaseKernel()
+    if loop == "single":
+        return run_sim(Exponential(LAM), Exponential(MU), kern, params,
+                       impl=impl, rmax=4, **kw)
+    if loop == "market":
+        return run_market_sim(Exponential(LAM), _market(), kern, params,
+                              impl=impl, rmax=4, **kw)
+    return run_region_sim(_topo(), kern, params, impl=impl, **kw)
+
+
+def _assert_same(a: dict, b: dict, keys=None, context: str = "") -> None:
+    """Bitwise dict equality, descending one level into the trace dict."""
+    for name in (keys if keys is not None else a):
+        va, vb = a[name], b[name]
+        if isinstance(va, dict):
+            for sub in va:
+                np.testing.assert_array_equal(
+                    np.asarray(va[sub]), np.asarray(vb[sub]),
+                    err_msg=f"{name}.{sub} diverged ({context})")
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(va), np.asarray(vb),
+            err_msg=f"{name} diverged ({context})")
+
+
+# ---------------------------------------------------------------------------
+# Zero-cost off / primary-stats-untouched on
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("impl", ["xla", "ref", "pallas"])
+@pytest.mark.parametrize("loop", ["single", "market", "region"])
+def test_telemetry_off_and_on_preserve_primary_stats(loop, impl):
+    off = _run(loop, impl, None)
+    on = _run(loop, impl, TEL)
+    # off == today's program; on only ADDS fields, bitwise-preserving all
+    # primary statistics
+    assert set(off) < set(on)
+    _assert_same(off, on, keys=off.keys(), context=f"{loop}/{impl}")
+    added = set(on) - set(off)
+    assert {"p50_wait", "p99_wait", "events", "spot_starts",
+            "deadline_defects", "rejects", "trace"} <= added
+
+
+@pytest.mark.parametrize("loop", ["single", "market", "region"])
+def test_telemetry_executor_contract(loop):
+    """pallas == ref bitwise on ALL fields; TEL_INT_STATS bitwise vs xla."""
+    xla = _run(loop, "xla", TEL)
+    ref = _run(loop, "ref", TEL)
+    pal = _run(loop, "pallas", TEL)
+    _assert_same(ref, pal, context=f"{loop} ref vs pallas")
+    _assert_same(xla, ref, keys=TEL_INT_STATS,
+                 context=f"{loop} xla vs ref (int decisions)")
+
+
+def test_telemetry_sweep_grid_shapes():
+    tel = Telemetry()
+    out = run_sweep(Exponential(LAM), Exponential(MU), ThreePhaseKernel(),
+                    {"r": jnp.linspace(0.5, 3.0, 5)}, k=K, n_events=2_000,
+                    key=jax.random.key(0), n_seeds=2, rmax=4,
+                    telemetry=tel)
+    assert out["p99_wait"].shape == (5, 2)
+    assert out["wait_hist"].shape == (5, 2, tel.n_bins)
+    assert out["events"].shape == (5, 2, len(EVENT_TYPES))
+    # per-grid-point totals: every lane saw exactly n_events merged events
+    np.testing.assert_array_equal(out["events"].sum(-1),
+                                  np.full((5, 2), 2_000.0))
+
+
+# ---------------------------------------------------------------------------
+# Counter consistency against the base ledger
+# ---------------------------------------------------------------------------
+def test_counters_single_loop_ledger():
+    out = _run("single", "xla", TEL, n_events=6_000)
+    assert out["events"].sum() == 6_000
+    assert out["events"][2] == 0  # no preempt clock in the single loop
+    assert out["preempts_fired"] == 0 and out["notices_honored"] == 0
+    # spot legs started == base spot_served; ondemand splits into
+    # rejects (admission) + deadline_defects (budget expiry)
+    assert out["spot_starts"] == out["spot_served"]
+    assert out["rejects"] + out["deadline_defects"] == out["ondemand"]
+    # wait samples: one per serve + one per defect
+    assert out["wait_hist"].sum() == out["spot_served"] + \
+        out["deadline_defects"]
+    assert out["loc_defects"].sum() == out["deadline_defects"]
+
+
+def test_counters_market_loop_ledger():
+    out = run_market_sim(Exponential(LAM), _market(), NoticeAwareKernel(),
+                         {"r": jnp.float32(2.0)}, k=K, n_events=8_000,
+                         key=jax.random.key(3), rmax=4, telemetry=TEL)
+    assert out["events"].sum() == 8_000
+    # hazard firings >= hits on occupied pools (base preemptions)
+    assert out["preempts_fired"] >= out["preemptions"]
+    assert out["events"][2] == out["preempts_fired"]
+    assert out["notices_honored"] == out["resumed"]
+    assert out["loc_resumed"].sum() == out["resumed"]
+    assert out["spot_starts"] == out["spot_served"]
+    assert out["loc_defects"].sum() == out["deadline_defects"]
+
+
+def test_counters_chunking_invariant():
+    """Integer decisions are order-independent sums: chunked == one-shot."""
+    one = _run("market", "xla", TEL, n_events=4_000, chunk_events=None)
+    chunked = _run("market", "xla", TEL, n_events=4_000, chunk_events=512)
+    _assert_same(one, chunked, keys=TEL_INT_STATS, context="chunking")
+
+
+# ---------------------------------------------------------------------------
+# Sketch accuracy: P50/P90/P99 vs exact quantiles from the event trace
+# ---------------------------------------------------------------------------
+def _trace_waits(out) -> np.ndarray:
+    """Exact wait samples replayed from a full (never-wrapped) ring."""
+    trace = out["trace"]
+    n = np.asarray(trace["n"])
+    cap = np.asarray(trace["val"]).shape[-1]
+    assert n.max() <= cap, "ring wrapped; grow trace_cap for exact replay"
+    vals = []
+    for w in range(n.shape[-1]):
+        vals.append(np.asarray(trace["val"])[..., w, : int(n[..., w])])
+    v = np.concatenate([x.ravel() for x in vals])
+    return v[v >= 0.0]
+
+
+def _assert_quantiles_within_bound(out, tel: Telemetry, context: str):
+    waits = _trace_waits(out)
+    assert waits.size > 50, context
+    re = tel.rel_error()
+    n = waits.size
+    s = np.sort(waits)
+    for q, key in ((0.50, "p50_wait"), (0.90, "p90_wait"),
+                   (0.99, "p99_wait")):
+        # the sketch's rank rule: smallest value with cum count >= q*n
+        exact = s[max(int(np.ceil(q * n)) - 1, 0)]
+        est = float(out[key])
+        lo_ok = exact / (1.0 + re) - tel.wait_lo
+        hi_ok = exact * (1.0 + re) + tel.wait_lo
+        assert lo_ok <= est <= hi_ok, (
+            f"{context}: {key} estimate {est:.4g} outside "
+            f"[{lo_ok:.4g}, {hi_ok:.4g}] around exact {exact:.4g} "
+            f"(rel err bound {re:.3f})")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sketch_quantiles_market_random_configs(seed):
+    rng = np.random.default_rng(seed)
+    n_pools = int(rng.integers(1, 4))
+    market = SpotMarket(pools=tuple(
+        SpotPool(Exponential(float(rng.uniform(0.2, 0.6))),
+                 price=float(rng.uniform(0.2, 0.9)),
+                 hazard=float(rng.uniform(0.0, 0.3)),
+                 notice=float(rng.choice([0.0, 0.25, 0.5])))
+        for _ in range(n_pools)))
+    n_events = 4_000
+    tel = Telemetry(trace_cap=n_events)
+    out = run_market_sim(
+        Exponential(float(rng.uniform(0.8, 1.6))), market,
+        NoticeAwareKernel(), {"r": jnp.float32(rng.uniform(1.0, 4.0))},
+        k=K, n_events=n_events, key=jax.random.key(seed), rmax=8,
+        chunk_events=None, telemetry=tel)
+    _assert_quantiles_within_bound(out, tel, f"market[seed={seed}]")
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_sketch_quantiles_region_random_configs(seed):
+    rng = np.random.default_rng(100 + seed)
+    n_regions = int(rng.integers(2, 4))
+    topo = RegionTopology(regions=tuple(
+        Region(Exponential(float(rng.uniform(0.3, 0.8))),
+               Exponential(float(rng.uniform(0.2, 0.6))),
+               price=float(rng.uniform(0.2, 0.9)),
+               hazard=float(rng.uniform(0.0, 0.2)))
+        for _ in range(n_regions)))
+    n_events = 4_000
+    tel = Telemetry(trace_cap=n_events)
+    out = run_region_sim(topo, ThreePhaseKernel(),
+                         {"r": jnp.float32(rng.uniform(1.0, 4.0))}, k=K,
+                         n_events=n_events, key=jax.random.key(seed),
+                         chunk_events=None, telemetry=tel)
+    _assert_quantiles_within_bound(out, tel, f"region[seed={seed}]")
+
+
+def test_sketch_quantile_synthetic_exactness():
+    """Log-normal host data: the sketch read-off honours its error bound."""
+    tel = Telemetry()
+    rng = np.random.default_rng(7)
+    x = np.exp(rng.normal(0.5, 1.2, size=20_000)).astype(np.float64)
+    edges = tel.wait_edges()
+    idx = np.asarray(hist_bin(jnp.asarray(x, jnp.float32), tel.wait_lo,
+                              tel.wait_hi, tel.n_bins))
+    hist = np.bincount(idx, minlength=tel.n_bins)
+    re = tel.rel_error()
+    s = np.sort(x)
+    for q in (0.1, 0.5, 0.9, 0.99, 0.999):
+        exact = s[max(int(np.ceil(q * len(x))) - 1, 0)]
+        est = float(sketch_quantile(hist, edges, q))
+        assert exact / (1 + re) - 1e-9 <= est <= exact * (1 + re) + 1e-9, q
+
+
+def test_wait_distribution_split_vs_slab():
+    """Trace-replayed wait samples: rng='split' and rng='slab' draw from
+    the same law (KS, reusing the suite's helper)."""
+    tel = Telemetry(trace_cap=4_000)
+    kw = dict(k=K, n_events=4_000, key=jax.random.key(5), rmax=8,
+              chunk_events=None, telemetry=tel)
+    a = run_sim(Exponential(LAM), Exponential(MU), ThreePhaseKernel(),
+                {"r": jnp.float32(2.0)}, rng="split", **kw)
+    b = run_sim(Exponential(LAM), Exponential(MU), ThreePhaseKernel(),
+                {"r": jnp.float32(2.0)}, rng="slab", **kw)
+    assert_same_distribution(_trace_waits(a), _trace_waits(b),
+                             name="trace waits split vs slab")
+
+
+# ---------------------------------------------------------------------------
+# Trace: ring semantics, record schema, Perfetto export
+# ---------------------------------------------------------------------------
+def test_trace_ring_wrap_counts_drops():
+    tel = Telemetry(trace_cap=16)  # << events per window: must wrap
+    out = _run("single", "xla", tel, n_events=2_000, chunk_events=1_024)
+    trace = out["trace"]
+    n = np.asarray(trace["n"])
+    assert n.sum() == 2_000  # true per-window counts survive the wrap
+    records = device_trace_records(trace, trace["time_windows"])
+    assert len(records) == 16 * n.shape[-1]
+    assert sum(r.get("dropped", 0) for r in records) == 2_000 - len(records)
+
+
+def test_trace_records_schema_and_clock():
+    tel = Telemetry(trace_cap=2_048)
+    out = _run("market", "xla", tel, n_events=2_000, chunk_events=1_024)
+    records = device_trace_records(out["trace"],
+                                   out["trace"]["time_windows"])
+    assert len(records) == 2_000
+    ts = np.array([r["t"] for r in records])
+    # window re-timing lands every record on one non-decreasing clock
+    assert (np.diff(ts) >= 0).all()
+    assert abs(ts[-1] - float(out["time"])) < 1e-3
+    assert {r["type"] for r in records} <= set(EVENT_TYPES)
+    assert all(0 <= r["loc"] < 2 for r in records)
+
+
+def test_perfetto_export_schema():
+    recorder = TraceRecorder(cap=8)
+    for i in range(10):
+        recorder.record(0.5 * i, "job" if i % 2 else "spot", loc=i % 2,
+                        qlen=i, wait=0.1 * i)
+    assert recorder.dropped == 2
+    doc = to_perfetto(recorder.records, label="unit")
+    instants = [e for e in doc["traceEvents"] if e["ph"] == "i"]
+    counters = [e for e in doc["traceEvents"] if e["ph"] == "C"]
+    metas = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert len(instants) == len(counters) == 8
+    assert {m["args"]["name"] for m in metas} >= set(EVENT_TYPES)
+    assert instants[0]["ts"] == 0.0 and instants[1]["ts"] == 0.5e6
+
+
+def test_telemetry_rejects_wrong_type():
+    with pytest.raises(TypeError):
+        _run("single", "xla", telemetry="stats")

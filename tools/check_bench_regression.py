@@ -1,9 +1,11 @@
 """Perf-regression guard for the bench-smoke CI job.
 
-Compares a freshly-measured smoke BENCH json against the committed
-baseline copy (benchmarks/baselines/) and fails — nonzero exit — if any
-guarded throughput key drops more than ``--max-drop`` (default 30%) below
-the baseline.  Keys are dotted paths into the JSON; higher is better.
+Compares freshly-measured smoke BENCH jsons against the committed
+baseline copies (benchmarks/baselines/) and fails — nonzero exit — if any
+guarded throughput key drops more than its allowed fraction below the
+baseline.  Keys are dotted paths into the JSON; higher is better.
+
+Single-file mode (the original interface):
 
     python tools/check_bench_regression.py \
         --baseline benchmarks/baselines/BENCH_event_rng_smoke.json \
@@ -12,10 +14,19 @@ the baseline.  Keys are dotted paths into the JSON; higher is better.
         --key headline.region_slab_speedup_x \
         --max-drop 0.30
 
-Smoke runners are noisy; 30% headroom is deliberately generous — the guard
-exists to catch order-of-magnitude regressions (an accidentally retained
-per-event threefry ladder, a de-jitted hot path), not 5% jitter.  Refresh
-the baseline by re-running ``benchmarks/run.py --smoke --only event_rng``
+Suite mode — one manifest guards every smoke bench in one invocation:
+
+    python tools/check_bench_regression.py \
+        --suite benchmarks/baselines/suite_smoke.json
+
+The manifest is a JSON list of ``{"baseline", "fresh", "keys"}`` entries
+where each key is ``{"key": "dotted.path", "max_drop": 0.30}``
+(``max_drop`` optional, default 0.30).  Ratio-style keys (speedups,
+overhead factors) are machine-independent and get tight drops; absolute
+events/s floors are generous (60%) because smoke runners are noisy — the
+guard exists to catch order-of-magnitude regressions (an accidentally
+retained per-event threefry ladder, a de-jitted hot path), not 5% jitter.
+Refresh a baseline by re-running ``benchmarks/run.py --smoke --only ...``
 on a quiet machine and committing the new file.
 """
 from __future__ import annotations
@@ -23,6 +34,8 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+DEFAULT_MAX_DROP = 0.30
 
 
 def lookup(tree: dict, dotted: str):
@@ -34,35 +47,60 @@ def lookup(tree: dict, dotted: str):
     return float(node)
 
 
+def check_file(baseline_path: str, fresh_path: str,
+               keys: list[tuple[str, float]]) -> list[str]:
+    """Guard ``keys`` (dotted path, max_drop) of fresh vs baseline."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    failures = []
+    for key, max_drop in keys:
+        b, v = lookup(base, key), lookup(fresh, key)
+        floor = b * (1.0 - max_drop)
+        verdict = "OK" if v >= floor else "REGRESSION"
+        print(f"{verdict:>10}  {fresh_path}:{key}: fresh={v:.4g} "
+              f"baseline={b:.4g} floor={floor:.4g}")
+        if v < floor:
+            failures.append(f"{fresh_path}:{key}")
+    return failures
+
+
+def run_suite(manifest_path: str) -> list[str]:
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    failures = []
+    for entry in manifest:
+        keys = [(k["key"], float(k.get("max_drop", DEFAULT_MAX_DROP)))
+                for k in entry["keys"]]
+        failures += check_file(entry["baseline"], entry["fresh"], keys)
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", required=True)
-    ap.add_argument("--fresh", required=True)
-    ap.add_argument("--key", action="append", required=True,
-                    metavar="DOTTED.PATH",
+    ap.add_argument("--suite", metavar="MANIFEST.json",
+                    help="guard every entry of a suite manifest")
+    ap.add_argument("--baseline")
+    ap.add_argument("--fresh")
+    ap.add_argument("--key", action="append", metavar="DOTTED.PATH",
                     help="throughput key to guard (repeatable)")
-    ap.add_argument("--max-drop", type=float, default=0.30,
+    ap.add_argument("--max-drop", type=float, default=DEFAULT_MAX_DROP,
                     help="maximum allowed fractional drop vs baseline")
     args = ap.parse_args()
 
-    with open(args.baseline) as f:
-        base = json.load(f)
-    with open(args.fresh) as f:
-        fresh = json.load(f)
-
-    failures = []
-    for key in args.key:
-        b, v = lookup(base, key), lookup(fresh, key)
-        floor = b * (1.0 - args.max_drop)
-        verdict = "OK" if v >= floor else "REGRESSION"
-        print(f"{verdict:>10}  {key}: fresh={v:.4g} baseline={b:.4g} "
-              f"floor={floor:.4g}")
-        if v < floor:
-            failures.append(key)
+    if args.suite:
+        if args.baseline or args.fresh or args.key:
+            ap.error("--suite is exclusive with --baseline/--fresh/--key")
+        failures = run_suite(args.suite)
+    else:
+        if not (args.baseline and args.fresh and args.key):
+            ap.error("need --suite or all of --baseline/--fresh/--key")
+        failures = check_file(args.baseline, args.fresh,
+                              [(k, args.max_drop) for k in args.key])
     if failures:
-        print(f"perf regression: {failures} dropped more than "
-              f"{args.max_drop:.0%} below the committed smoke baseline",
-              file=sys.stderr)
+        print(f"perf regression: {failures} dropped below the committed "
+              f"smoke baseline floors", file=sys.stderr)
         return 1
     return 0
 

@@ -1,0 +1,93 @@
+"""Validate a Chrome/Perfetto trace JSON produced by tools/trace_export.py.
+
+Checks the structural contract that makes the file loadable by
+``ui.perfetto.dev`` / ``chrome://tracing`` and meaningful for this repo:
+
+  * top level: a ``traceEvents`` array (Chrome JSON object format);
+  * thread-name metadata ("ph": "M") for every event-type track and the
+    queue-length counter track;
+  * every instant event ("ph": "i"): a known event type in its name,
+    numeric non-negative ``ts``, and ``loc``/``qlen`` args;
+  * every counter event ("ph": "C"): a numeric ``jobs`` arg;
+  * timestamps non-decreasing per track is NOT required (merged streams
+    interleave), but the global min must be >= 0;
+  * at least ``--min-events`` instant events (sanity against an empty
+    export).
+
+    python tools/check_trace.py trace.json --min-events 100
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+EVENT_TYPES = ("job", "spot", "preempt", "deadline")
+
+
+def check(path: str, min_events: int) -> list[str]:
+    with open(path) as f:
+        doc = json.load(f)
+    errors = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return [f"{path}: no traceEvents array"]
+
+    named_tids = set()
+    n_instant = n_counter = 0
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph == "M":
+            if ev.get("name") == "thread_name":
+                named_tids.add(ev.get("tid"))
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errors.append(f"event {i}: bad ts {ts!r}")
+            continue
+        if ph == "i":
+            n_instant += 1
+            args = ev.get("args", {})
+            if not any(ev.get("name", "").startswith(t + "@")
+                       for t in EVENT_TYPES):
+                errors.append(f"event {i}: unknown type {ev.get('name')!r}")
+            for field in ("loc", "qlen"):
+                if not isinstance(args.get(field), int):
+                    errors.append(f"event {i}: missing arg {field!r}")
+        elif ph == "C":
+            n_counter += 1
+            if not isinstance(ev.get("args", {}).get("jobs"), int):
+                errors.append(f"event {i}: counter without jobs arg")
+        else:
+            errors.append(f"event {i}: unexpected phase {ph!r}")
+        if len(errors) > 20:
+            errors.append("... (truncated)")
+            break
+
+    if None in named_tids or not named_tids:
+        errors.append("missing thread_name metadata")
+    if n_instant < min_events:
+        errors.append(f"only {n_instant} instant events "
+                      f"(need >= {min_events})")
+    if n_counter != n_instant:
+        errors.append(f"counter/instant mismatch ({n_counter} vs "
+                      f"{n_instant})")
+    if not errors:
+        print(f"{path}: OK — {n_instant} events on {len(named_tids)} "
+              f"named tracks")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace")
+    ap.add_argument("--min-events", type=int, default=1)
+    args = ap.parse_args()
+    errors = check(args.trace, args.min_events)
+    for err in errors:
+        print(f"INVALID: {err}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,114 @@
+"""Export a Chrome/Perfetto trace from an engine sim with tracing on.
+
+Runs a small market sim with ``telemetry=Telemetry(trace_cap=...)``,
+drains the device event ring into global-time records
+(:func:`repro.obs.trace.device_trace_records`), and writes the Chrome
+``traceEvents`` JSON that ``ui.perfetto.dev`` / ``chrome://tracing``
+load directly:
+
+    PYTHONPATH=src python tools/trace_export.py --out trace.json
+
+``--loop region`` exports the multi-region loop instead; ``--host``
+replays the *host* orchestrator (:class:`repro.cluster.SpotCluster`)
+through a :class:`repro.obs.TraceRecorder` — same record schema, so both
+producers exercise the same exporter.  ``tools/check_trace.py`` validates
+the output shape in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def build_records(loop: str, *, n_events: int, trace_cap: int,
+                  host: bool, seed: int) -> tuple[list, dict]:
+    """Run the sim and return (records, summary-ish metadata)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import Exponential, ThreePhaseKernel
+    from repro.core.market import SpotMarket, SpotPool
+    from repro.core.regions import Region, RegionTopology
+    from repro.obs import Telemetry, TraceRecorder, device_trace_records
+
+    lam, mu = 1.2, 0.9
+    if host:
+        from repro.cluster.orchestrator import (OnlineAdmissionController,
+                                                SpotCluster)
+        tracer = TraceRecorder()
+        cluster = SpotCluster(
+            job_process=Exponential(lam),
+            market=SpotMarket(pools=(
+                SpotPool(Exponential(mu / 2), price=0.4, hazard=0.05,
+                         notice=0.5),
+                SpotPool(Exponential(mu / 2), price=0.7, hazard=0.01),
+            )),
+            controller=OnlineAdmissionController(delta=8.0),
+            tracer=tracer, seed=seed)
+        cluster.run(n_events)
+        meta = {"producer": "host", "n_records": len(tracer.records),
+                "dropped": tracer.dropped}
+        return tracer.records, meta
+
+    tel = Telemetry(trace_cap=trace_cap)
+    key = jax.random.key(seed)
+    params = {"r": jnp.float32(2.0)}
+    if loop == "market":
+        from repro.core.engine import run_market_sim
+        market = SpotMarket(pools=(
+            SpotPool(Exponential(mu / 2), price=0.4, hazard=0.05,
+                     notice=0.5),
+            SpotPool(Exponential(mu / 2), price=0.7, hazard=0.01),
+        ))
+        out = run_market_sim(Exponential(lam), market, ThreePhaseKernel(),
+                             params, k=10.0, n_events=n_events, key=key,
+                             telemetry=tel)
+    elif loop == "region":
+        from repro.core.engine import run_region_sim
+        topo = RegionTopology(regions=(
+            Region(Exponential(lam / 2), Exponential(mu / 2), price=0.4,
+                   hazard=0.05),
+            Region(Exponential(lam / 2), Exponential(mu / 2), price=0.8,
+                   hazard=0.01),
+        ))
+        out = run_region_sim(topo, ThreePhaseKernel(), params, k=10.0,
+                             n_events=n_events, key=key, telemetry=tel)
+    else:
+        from repro.core.engine import run_sim
+        out = run_sim(Exponential(lam), Exponential(mu), ThreePhaseKernel(),
+                      params, k=10.0, n_events=n_events, key=key,
+                      telemetry=tel)
+    trace = out["trace"]
+    records = device_trace_records(trace, trace["time_windows"])
+    meta = {"producer": f"device/{loop}", "n_records": len(records),
+            "events_total": int(sum(out["events"])),
+            "p99_wait": float(out["p99_wait"])}
+    return records, meta
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="trace.json")
+    ap.add_argument("--loop", default="market",
+                    choices=("single", "market", "region"))
+    ap.add_argument("--n-events", type=int, default=4_000)
+    ap.add_argument("--trace-cap", type=int, default=4_096)
+    ap.add_argument("--host", action="store_true",
+                    help="replay the host orchestrator instead of the "
+                         "device engine")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.obs import write_perfetto
+
+    records, meta = build_records(args.loop, n_events=args.n_events,
+                                  trace_cap=args.trace_cap, host=args.host,
+                                  seed=args.seed)
+    label = f"{meta['producer']} ({args.n_events} events)"
+    write_perfetto(args.out, records, label=label)
+    print(json.dumps({"out": args.out, **meta}, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
