@@ -1,0 +1,147 @@
+"""Environment-timeline overhead: the ``env=`` axis measured on vs off.
+
+The supply-shock contract is two-sided: ``env=None`` must compile the
+*identical* program (zero cost — frozen byte-for-byte in
+tests/test_env.py), and ``env=EnvTimeline(...)`` must stay cheap enough
+to sweep non-stationary scenarios at engine speed.  This bench measures
+the on-cost on the market sweep at three timeline densities:
+
+  * ``off``    — today's program, the stationary baseline path;
+  * ``const``  — a single open-ended segment (the timeline machinery is
+                 live but no boundary ever fires);
+  * ``storms`` — a Markov-modulated calm/storm timeline whose boundary
+                 events actually interleave with the clock race.
+
+Writes BENCH_env.json next to the repo root.  The headline is the
+constant-timeline throughput (events/s with the env axis on); CI's
+regression gate guards it via benchmarks/baselines/suite_smoke.json, and
+docs/robustness.md + EXPERIMENTS.md quote this file for the on-cost.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Exponential, NoticeAwareKernel, run_market_sweep
+from repro.core.env import EnvTimeline, Regime, SEG_STORM, markov_timeline
+from repro.core.market import SpotMarket, SpotPool
+from repro.obs.timing import provenance, time_compiled
+
+LAM, MU, K = 1 / 12, 1 / 24, 10.0
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+_SCALE = 1.0
+
+
+def set_scale(scale: float) -> None:
+    global _SCALE
+    _SCALE = scale
+
+
+def _bench_json_path() -> str:
+    name = "BENCH_env.json" if _SCALE == 1.0 else "BENCH_env_smoke.json"
+    return os.path.join(_REPO_ROOT, name)
+
+
+def _market() -> SpotMarket:
+    return SpotMarket(pools=(
+        SpotPool(Exponential(MU / 2), price=0.4, hazard=0.02, notice=0.5),
+        SpotPool(Exponential(MU / 2), price=0.7, hazard=0.005, notice=0.0),
+    ))
+
+
+def _storm_timeline(horizon: float) -> EnvTimeline:
+    """Calm/storm Markov modulator dense enough that boundaries land
+    inside the benched horizon (mean holds ~1% of it)."""
+    return markov_timeline(
+        (Regime(mean_hold=horizon / 60.0),
+         Regime(mean_hold=horizon / 200.0, hazard_mult=8.0, avail=0.5,
+                kind=SEG_STORM)),
+        horizon=horizon, seed=0)
+
+
+def measure_env_overhead(n_r: int = 16, n_seeds: int = 4,
+                         n_events: int | None = None,
+                         rmax: int = 32) -> dict:
+    """Time the market sweep env-off / constant-timeline / storm-timeline."""
+    if n_events is None:
+        n_events = max(2_000, int(50_000 * _SCALE))
+    job = Exponential(LAM)
+    market = _market()
+    kern = NoticeAwareKernel()
+    rs = jnp.linspace(0.25, 4.0, n_r)
+    key = jax.random.key(0)
+    common = dict(k=K, n_events=n_events, key=key, n_seeds=n_seeds,
+                  rmax=rmax)
+    # horizon estimate: merged event rate ~ job + spot arrivals
+    horizon = n_events / (LAM + MU)
+    modes = {
+        "off": None,
+        "const": EnvTimeline.constant(),
+        "storms": _storm_timeline(horizon),
+    }
+    timings, boundaries = {}, 0
+    for mode, env in modes.items():
+        out, timing = time_compiled(
+            lambda env=env: run_market_sweep(job, market, kern, {"r": rs},
+                                             env=env, **common))
+        timings[mode] = timing
+        if mode == "storms":
+            boundaries = int(jnp.sum(jnp.asarray(out["env_boundaries"])))
+
+    grid_points = n_r * n_seeds
+    total_events = grid_points * n_events
+    t_off = timings["off"]["t_run_s"]
+    t_const = timings["const"]["t_run_s"]
+    t_storm = timings["storms"]["t_run_s"]
+    result = {
+        "grid_points": grid_points,
+        "n_r": n_r,
+        "n_seeds": n_seeds,
+        "n_pools": market.n_pools,
+        "n_events_per_point": n_events,
+        "total_events": total_events,
+        "rmax": rmax,
+        "storm_segments": _storm_timeline(horizon).n_segments,
+        "storm_boundaries_observed": boundaries,
+        "t_off_s": t_off,
+        "t_const_s": t_const,
+        "t_storms_s": t_storm,
+        "off_events_per_s": total_events / t_off,
+        "const_events_per_s": total_events / t_const,
+        "storms_events_per_s": total_events / t_storm,
+        "const_overhead_x": t_const / t_off,
+        "storms_overhead_x": t_storm / t_off,
+        "backend": jax.default_backend(),
+        "provenance": provenance(seed=0, env="off/const/storms"),
+    }
+    with open(_bench_json_path(), "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def bench_env_overhead():
+    """Benchmark-harness entry: rows + headline (const-env events/s)."""
+    res = measure_env_overhead()
+    rows = [{
+        "name": f"env/{res['grid_points']}pt_market_grid",
+        "us_per_call": res["t_const_s"] * 1e6,
+        "derived": (
+            f"{res['grid_points']} points × {res['n_events_per_point']} ev: "
+            f"off={res['t_off_s']:.2f}s const={res['t_const_s']:.2f}s "
+            f"({res['const_overhead_x']:.2f}x) "
+            f"storms={res['t_storms_s']:.2f}s "
+            f"({res['storms_overhead_x']:.2f}x, "
+            f"{res['storm_boundaries_observed']} boundaries)"),
+    }]
+    return rows, res["const_events_per_s"]
+
+
+if __name__ == "__main__":
+    rows, headline = bench_env_overhead()
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']:.0f},{row['derived']}")
+    print(f"headline const_events_per_s={headline:.0f}")

@@ -27,6 +27,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import engine_kernel_bench
+    from benchmarks import env_bench
     from benchmarks import event_rng_bench
     from benchmarks import market_bench
     from benchmarks import obs_bench
@@ -43,6 +44,7 @@ def main() -> None:
         region_bench.set_scale(0.1)
         event_rng_bench.set_scale(0.1)
         obs_bench.set_scale(0.1)
+        env_bench.set_scale(0.1)
 
     benches = [
         pb.bench_theorem1_cost_law,
@@ -58,6 +60,7 @@ def main() -> None:
         region_bench.bench_region_engine,  # writes BENCH_region.json
         event_rng_bench.bench_event_rng,  # writes BENCH_event_rng.json
         obs_bench.bench_telemetry_overhead,  # writes BENCH_obs.json
+        env_bench.bench_env_overhead,  # writes BENCH_env.json
         bench_engine_roofline,  # reads them back
         bench_roofline,
     ]

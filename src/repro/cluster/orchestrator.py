@@ -93,20 +93,33 @@ class OnlineAdmissionController:
     def admit(self, queue_len: int, rng: np.random.Generator) -> bool:
         return rng.random() < three_phase_admit_prob(queue_len, self.r)
 
-    def choose_pool(self, market: SpotMarket,
-                    qlen_pool: list[int]) -> int:
-        """Pool-choice hook — cheapest price, the engine kernels' default."""
+    def choose_pool(self, market: SpotMarket, qlen_pool: list[int],
+                    alive=None) -> int:
+        """Pool-choice hook — cheapest price, the engine kernels' default.
+
+        ``alive`` (optional bool mask) restricts the choice to live pools
+        — the host twin of :class:`repro.core.market.PanicKernel`; all-dead
+        raises ``RuntimeError`` (the cluster's cue to run on-demand).
+        """
         del qlen_pool
-        return int(np.argmin(market.prices()))
+        prices = market.prices()
+        if alive is not None:
+            alive = np.asarray(alive, bool)
+            if not alive.any():
+                raise RuntimeError("choose_pool: no pool alive")
+            prices = np.where(alive, prices, np.inf)
+        return int(np.argmin(prices))
 
     def choose_region(self, topology: RegionTopology,
                       qlen_region: list[int], home: int = 0,
-                      rule: str = "cheapest") -> int:
+                      rule: str = "cheapest", alive=None) -> int:
         """Routing hook — the deterministic :func:`repro.core.regions.
-        host_route` rules (host twin of the engine's ``route`` hook)."""
+        host_route` rules (host twin of the engine's ``route`` hook).
+        ``alive`` forwards the region health mask (failover semantics in
+        :func:`repro.core.regions.host_route`)."""
         return host_route(rule, prices=topology.prices(),
                           rates=topology.rates(), qlens=qlen_region,
-                          home=home)
+                          home=home, alive=alive)
 
     def on_job_complete(self, delay: float) -> None:
         self._delays.append(delay)
@@ -143,6 +156,50 @@ def _sample_superposed_preempt(hazards,
             thinning_pick(hazards, rng.random()))
 
 
+@dataclasses.dataclass(frozen=True)
+class ExponentialBackoff:
+    """Retry schedule for re-admission after a preemption under supply
+    stress: a revoked job whose first re-admission draw fails waits
+    ``base_delay``, retries, and doubles the wait up to ``max_retries``
+    times before defecting to on-demand.  Host-side resilience knob —
+    the clusters take ``retry=ExponentialBackoff(...)``; the default
+    (``retry=None``) draws nothing and reproduces the historical event
+    stream bit-for-bit.
+    """
+
+    base_delay: float = 0.05
+    factor: float = 2.0
+    max_retries: int = 3
+
+    def __post_init__(self):
+        if self.base_delay <= 0 or self.factor < 1 or self.max_retries < 1:
+            raise ValueError("backoff needs base_delay>0, factor>=1, "
+                             "max_retries>=1")
+
+    def delays(self):
+        d = self.base_delay
+        for _ in range(self.max_retries):
+            yield d
+            d *= self.factor
+
+
+def _retry_admit(ctl, rng, retry: ExponentialBackoff, qlen: int,
+                 stats) -> tuple[bool, float]:
+    """Backed-off re-admission attempts: (admitted?, extra wait charged).
+
+    Shared by both clusters' preemption recovery: each attempt waits the
+    next backoff delay (charged to the job either way) and redraws the
+    admission law; exhaustion defects to on-demand.
+    """
+    extra = 0.0
+    for wait in retry.delays():
+        stats.retries += 1
+        extra += wait
+        if ctl.admit(qlen, rng):
+            return True, extra
+    return False, extra
+
+
 @dataclasses.dataclass
 class Job:
     job_id: int
@@ -163,6 +220,8 @@ class ClusterStats:
     total_cost: float = 0.0
     total_delay: float = 0.0
     spot_cost: float = 0.0  # spend on spot pools incl. partial legs
+    retries: int = 0  # backed-off re-admission attempts (retry= set)
+    degraded_jobs: int = 0  # forced on-demand: no live pool/region
 
     @property
     def avg_cost(self) -> float:
@@ -196,6 +255,7 @@ class SpotCluster:
                  on_ondemand_run: Optional[Callable] = None,
                  on_preempt: Optional[Callable] = None,
                  tracer: Optional[TraceRecorder] = None,
+                 retry: Optional[ExponentialBackoff] = None,
                  seed: int = 0):
         if (market is None) == (spot_process is None):
             raise ValueError("pass exactly one of spot_process / market")
@@ -213,13 +273,25 @@ class SpotCluster:
         self.on_ondemand_run = on_ondemand_run
         self.on_preempt = on_preempt
         self.tracer = tracer
+        self.retry = retry
         self.rng = np.random.default_rng(seed)
         self.queue: deque[Job] = deque()
         self.stats = ClusterStats()
         self.pool_served = [0] * market.n_pools
+        self.pool_alive = [True] * market.n_pools
         self._t = 0.0
         self._job_counter = 0
         self._step_times: dict[int, float] = {}  # pod EWMA
+
+    # --------------------------------------------------------------- health
+    def kill_pool(self, pool: int) -> None:
+        """Mark a pool dark (blackout): its slots stop serving and new
+        admissions route around it.  Queued jobs wait for :meth:`revive_pool`
+        (paused instances), exactly the engine's blackout semantics."""
+        self.pool_alive[pool] = False
+
+    def revive_pool(self, pool: int) -> None:
+        self.pool_alive[pool] = True
 
     # --------------------------------------------------------------- events
     def _sample(self, proc: ArrivalProcess) -> float:
@@ -267,7 +339,17 @@ class SpotCluster:
 
     def _job_arrival(self, work_steps: int) -> None:
         self._job_counter += 1
-        pool = self.ctl.choose_pool(self.market, self._qlen_pool())
+        if all(self.pool_alive):  # healthy path: the historical call shape
+            pool = self.ctl.choose_pool(self.market, self._qlen_pool())
+        else:
+            try:
+                pool = self.ctl.choose_pool(self.market, self._qlen_pool(),
+                                            alive=self.pool_alive)
+            except RuntimeError:  # every pool dark: degrade to on-demand
+                self.stats.degraded_jobs += 1
+                self._run_ondemand(Job(self._job_counter, self._t,
+                                       work_steps))
+                return
         job = Job(self._job_counter, self._t, work_steps, pool=pool)
         if self.ctl.admit(len(self.queue), self.rng):
             self.queue.append(job)  # Theorem 4: wait indefinitely
@@ -285,6 +367,8 @@ class SpotCluster:
         return None
 
     def _spot_arrival(self, pool_idx: int) -> None:
+        if not self.pool_alive[pool_idx]:
+            return  # dark pool: the slot never materializes
         job = self._pop_oldest(pool_idx)
         if self.tracer is not None:
             self.tracer.record(
@@ -357,14 +441,19 @@ class SpotCluster:
         within = checkpoint_within_notice(self.checkpoint_hours, pool.notice)
         if within:
             self.stats.checkpoints += 1
-        if within and self.ctl.admit(len(self.queue), self.rng):
+        admitted = within and self.ctl.admit(len(self.queue), self.rng)
+        extra = 0.0
+        if within and not admitted and self.retry is not None:
+            admitted, extra = _retry_admit(self.ctl, self.rng, self.retry,
+                                           len(self.queue), self.stats)
+        if admitted:
             self.stats.restores += 1
             self.queue.append(dataclasses.replace(job, arrival_time=self._t))
-            self.stats.total_delay += delay
+            self.stats.total_delay += delay + extra
             self.stats.jobs_completed += 1  # leg accounting
-            self.ctl.on_job_complete(delay)
+            self.ctl.on_job_complete(delay + extra)
         else:
-            self._run_ondemand(job, extra_delay=delay)
+            self._run_ondemand(job, extra_delay=delay + extra)
 
     def _run_ondemand(self, job: Job, extra_delay: float = 0.0) -> None:
         if self.on_ondemand_run is not None:
@@ -459,7 +548,8 @@ class MultiRegionCluster:
                  controller: OnlineAdmissionController,
                  k_cost: float = 10.0, route: str = "cheapest",
                  checkpoint_hours: float = 0.0,
-                 tracer: Optional[TraceRecorder] = None, seed: int = 0):
+                 tracer: Optional[TraceRecorder] = None,
+                 retry: Optional[ExponentialBackoff] = None, seed: int = 0):
         if route not in self.HOST_ROUTES:
             raise ValueError(
                 f"unknown host routing rule {route!r}; the live loop "
@@ -471,14 +561,36 @@ class MultiRegionCluster:
         self.route = route
         self.checkpoint_hours = checkpoint_hours
         self.tracer = tracer
+        self.retry = retry
         self.rng = np.random.default_rng(seed)
         self.queues: list[deque[Job]] = [deque()
                                          for _ in topology.regions]
         self.stats = RegionClusterStats(
             region_served=[0] * topology.n_regions,
             region_routed=[0] * topology.n_regions)
+        self.region_alive = [True] * topology.n_regions
         self._t = 0.0
         self._job_counter = 0
+
+    # --------------------------------------------------------------- health
+    def kill_region(self, region: int, *, drain: bool = False) -> None:
+        """Mark a region dark (blackout): its slots stop serving and new
+        admissions route around it (:func:`repro.core.regions.host_route`
+        with the alive mask).  Queued jobs wait for :meth:`revive_region`
+        (paused instances — the engine's blackout semantics); with
+        ``drain=True`` they defect to on-demand immediately instead.
+        """
+        self.region_alive[region] = False
+        if drain:
+            queue = self.queues[region]
+            while queue:
+                job = queue.popleft()
+                self.stats.degraded_jobs += 1
+                self._run_ondemand(job,
+                                   extra_delay=self._t - job.arrival_time)
+
+    def revive_region(self, region: int) -> None:
+        self.region_alive[region] = True
 
     # --------------------------------------------------------------- events
     def _sample(self, proc: ArrivalProcess) -> float:
@@ -523,8 +635,20 @@ class MultiRegionCluster:
 
     def _job_arrival(self, home: int) -> None:
         self._job_counter += 1
-        target = self.ctl.choose_region(self.topology, self.qlen_region(),
-                                        home=home, rule=self.route)
+        if all(self.region_alive):  # healthy path: historical call shape
+            target = self.ctl.choose_region(self.topology,
+                                            self.qlen_region(), home=home,
+                                            rule=self.route)
+        else:
+            try:
+                target = self.ctl.choose_region(
+                    self.topology, self.qlen_region(), home=home,
+                    rule=self.route, alive=self.region_alive)
+            except RuntimeError:  # every region dark: degrade to on-demand
+                self.stats.degraded_jobs += 1
+                self._run_ondemand(Job(self._job_counter, self._t,
+                                       work_steps=1, pool=home))
+                return
         job = Job(self._job_counter, self._t, work_steps=1, pool=target)
         region = self.topology.regions[target]
         qlen_t = len(self.queues[target])
@@ -541,6 +665,8 @@ class MultiRegionCluster:
                                qlen=sum(self.qlen_region()))
 
     def _spot_arrival(self, region_idx: int) -> None:
+        if not self.region_alive[region_idx]:
+            return  # dark region: the slot never materializes
         queue = self.queues[region_idx]
         if self.tracer is not None:
             self.tracer.record(
@@ -580,14 +706,19 @@ class MultiRegionCluster:
                                           region.notice)
         if within:
             self.stats.checkpoints += 1
-        if within and self.ctl.admit(len(queue), self.rng):
+        admitted = within and self.ctl.admit(len(queue), self.rng)
+        extra = 0.0
+        if within and not admitted and self.retry is not None:
+            admitted, extra = _retry_admit(self.ctl, self.rng, self.retry,
+                                           len(queue), self.stats)
+        if admitted:
             self.stats.restores += 1
             queue.append(dataclasses.replace(job, arrival_time=self._t))
-            self.stats.total_delay += delay
+            self.stats.total_delay += delay + extra
             self.stats.jobs_completed += 1  # leg accounting
-            self.ctl.on_job_complete(delay)
+            self.ctl.on_job_complete(delay + extra)
         else:
-            self._run_ondemand(job, extra_delay=delay)
+            self._run_ondemand(job, extra_delay=delay + extra)
 
     def _run_ondemand(self, job: Job, extra_delay: float = 0.0) -> None:
         del job

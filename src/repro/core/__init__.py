@@ -74,6 +74,7 @@ from repro.core.cost import (
 from repro.core.engine import (
     DEFAULT_CHUNK_EVENTS,
     EngineState,
+    NonFiniteStatsError,
     Telemetry,
     MarketState,
     MarketWindowStats,
@@ -90,6 +91,14 @@ from repro.core.engine import (
     summarize,
     summarize_market,
     summarize_region,
+)
+from repro.core.env import (
+    EnvTimeline,
+    Regime,
+    inject_blackout,
+    inject_price_spike,
+    inject_storm,
+    markov_timeline,
 )
 from repro.core.lp import (
     knapsack_lp,
@@ -109,6 +118,7 @@ from repro.core.regions import (
 from repro.core.market import (
     MarketPolicyKernel,
     NoticeAwareKernel,
+    PanicKernel,
     PoolChoiceKernel,
     PoolState,
     SpotMarket,
@@ -144,14 +154,17 @@ __all__ = [
     "cost_lower_bound", "market_cost_lower_bound", "pi0_from_cost",
     "region_cost_lower_bound", "theorem1_cost", "theorem1_market_cost",
     "theorem1_region_cost", "DEFAULT_CHUNK_EVENTS",
-    "EngineState", "MarketState", "Telemetry",
+    "EngineState", "EnvTimeline", "MarketState", "NonFiniteStatsError",
+    "Regime", "Telemetry",
     "MarketWindowStats", "PolicyKernel", "RegionState", "RegionWindowStats",
-    "WindowStats", "run_market_sim",
+    "WindowStats", "inject_blackout", "inject_price_spike", "inject_storm",
+    "markov_timeline", "run_market_sim",
     "run_market_sweep", "run_region_sim", "run_region_sweep", "run_sim",
     "run_sweep", "summarize",
     "summarize_market", "summarize_region", "knapsack_lp",
     "market_knapsack_lp", "region_knapsack_lp", "waittime_lp",
-    "MarketPolicyKernel", "NoticeAwareKernel", "PoolChoiceKernel",
+    "MarketPolicyKernel", "NoticeAwareKernel", "PanicKernel",
+    "PoolChoiceKernel",
     "PoolState", "SpotMarket", "SpotPool", "as_market",
     "checkpoint_within_notice", "choose_pool", "Region", "RegionTopology",
     "RegionView", "RoutingKernel", "as_topology", "choose_region",

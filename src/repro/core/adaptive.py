@@ -38,8 +38,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arrivals import ArrivalProcess
-from repro.core.engine import (_rebase_order, init_market_state,
+from repro.core.engine import (_check_env, _env_params, _rebase_order,
+                               _rebase_order_env, init_market_state,
                                run_market_window)
+from repro.core.env import init_env_state
 from repro.core.market import NoticeAwareKernel, SpotMarket, as_market
 from repro.core.policies import ThreePhaseKernel
 from repro.obs.timing import annotate
@@ -74,25 +76,52 @@ class AdaptiveTrace(NamedTuple):
 
 
 def _adaptive_core(job, market, kernel, rmax, window_events, n_windows,
-                   k_cost, delta, eta, eta_decay, r0, r_max, key):
-    """One learner's full trajectory (vmap-able over every traced arg)."""
+                   k_cost, delta, eta, eta_decay, r0, r_max, key, ep=None,
+                   max_step=None, shock_reset=False):
+    """One learner's full trajectory (vmap-able over every traced arg).
+
+    ``ep`` threads the environment-timeline axis through every window
+    (non-stationary prices/hazards/availability); ``max_step`` clamps the
+    per-window knob excursion and zeroes non-finite updates (poisoned
+    windows can't fling ``r``); ``shock_reset`` restarts the knob at
+    ``r0`` whenever a window crosses into a shock segment.  All three
+    default off, compiling the identical pre-env program.
+    """
     mp = market.params()
     preempt_on = market.preemptible
-    state0 = init_market_state(key, job, market, rmax, mp, preempt_on)
+    state0 = init_market_state(key, job, market, rmax, mp, preempt_on,
+                               ep=ep)
+    if ep is not None:
+        state0 = (state0, init_env_state(ep))
 
     def outer(sc, idx):
         state, r = sc
         state, s = run_market_window(job, market, kernel, rmax, preempt_on,
                                      state, {"r": r}, mp, k_cost,
-                                     window_events)
+                                     window_events, ep=ep)
+        if ep is not None:
+            s, es = s
         # learner horizons are unbounded (windows × events); rebase the
         # int32 join-sequence counters every window so they never wrap
-        state = _rebase_order(state)
+        state = _rebase_order(state) if ep is None else _rebase_order_env(
+            state)
         completed = jnp.maximum(s.jobs_completed, 1).astype(jnp.float32)
         d = s.delay_sum / completed
         c = s.cost_sum / completed
         step = eta / jnp.sqrt(1.0 + eta_decay * idx.astype(jnp.float32))
-        r_new = jnp.clip(r - step * (d - delta), 0.0, r_max)
+        upd = step * (d - delta)
+        if max_step is not None:
+            # guardrail: bound the excursion; a poisoned window (NaN/inf
+            # delay) contributes a zero step instead of destroying r
+            upd = jnp.clip(upd, -max_step, max_step)
+            upd = jnp.where(jnp.isfinite(upd), upd, 0.0)
+        r_new = jnp.clip(r - upd, 0.0, r_max)
+        if shock_reset and ep is not None:
+            # regime flip: the learned knob is stale under a new supply
+            # regime — restart from r0 when the window entered a shock
+            flipped = (es.storms_entered + es.blackouts_entered
+                       + es.spikes_entered) > 0
+            r_new = jnp.where(flipped, jnp.asarray(r0, jnp.float32), r_new)
         trace = AdaptiveTrace(
             r=r,
             window_delay=d,
@@ -119,26 +148,36 @@ def _adaptive_core(job, market, kernel, rmax, window_events, n_windows,
 @functools.partial(
     jax.jit,
     static_argnames=("job", "market", "kernel", "rmax", "window_events",
-                     "n_windows"),
+                     "n_windows", "max_step", "shock_reset"),
 )
 def _adaptive_jit(job, market, kernel, rmax, window_events, n_windows,
-                  k_cost, delta, eta, eta_decay, r0, r_max, key):
+                  k_cost, delta, eta, eta_decay, r0, r_max, key, ep=None,
+                  max_step=None, shock_reset=False):
     return _adaptive_core(job, market, kernel, rmax, window_events,
                           n_windows, k_cost, delta, eta, eta_decay, r0,
-                          r_max, key)
+                          r_max, key, ep=ep, max_step=max_step,
+                          shock_reset=shock_reset)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("job", "market", "kernel", "rmax", "window_events",
-                     "n_windows"),
+                     "n_windows", "max_step", "shock_reset"),
 )
 def _adaptive_batched_jit(job, market, kernel, rmax, window_events,
                           n_windows, k_cost, delta, eta, eta_decay, r0,
-                          r_max, keys):
+                          r_max, keys, ep=None, max_step=None,
+                          shock_reset=False):
     one = functools.partial(_adaptive_core, job, market, kernel, rmax,
                             window_events, n_windows)
-    return jax.vmap(one)(k_cost, delta, eta, eta_decay, r0, r_max, keys)
+
+    def learner(kc, de, et, ed, r0_, rm, ky):
+        # ep and the guardrail knobs are shared across the fleet (closed
+        # over, not vmapped)
+        return one(kc, de, et, ed, r0_, rm, ky, ep=ep, max_step=max_step,
+                   shock_reset=shock_reset)
+
+    return jax.vmap(learner)(k_cost, delta, eta, eta_decay, r0, r_max, keys)
 
 
 def _assemble(tr, r_final) -> dict:
@@ -197,6 +236,9 @@ def adaptive_admission_control(
     rmax_slots: int = 64,
     key: jax.Array,
     kernel=None,
+    env=None,
+    max_step: float | None = None,
+    shock_reset: bool = False,
 ) -> dict:
     """Run Algorithm 1; return the trajectory and running averages (float64).
 
@@ -207,6 +249,13 @@ def adaptive_admission_control(
     degenerate market, :class:`NoticeAwareKernel` otherwise); it must read
     the knob from ``params["r"]``.
 
+    Robustness knobs (all off by default, compiling the identical
+    program): ``env`` trains against a non-stationary
+    :class:`repro.core.env.EnvTimeline`; ``max_step`` clamps each window's
+    knob update to ``±max_step`` and zeroes non-finite updates;
+    ``shock_reset`` restarts the knob at ``r0`` whenever a window enters a
+    storm/blackout/spike segment.
+
     Returns a dict with per-window arrays: ``r`` (knob), ``window_delay``,
     ``window_cost``, and running averages ``running_cost`` / ``running_delay``
     (cumulative, matching the paper's C(r(n)) and d(r(n)) plots), plus the
@@ -214,12 +263,16 @@ def adaptive_admission_control(
     """
     market = as_market(spot)
     kernel = _default_kernel(market) if kernel is None else kernel
+    _check_env(env)
+    ep = _env_params(env, market.n_pools)
     with annotate("repro.adaptive_admission_control"):
         r_final, tr = _adaptive_jit(
             job, market, kernel, rmax_slots, window_events, n_windows,
             jnp.float32(k), jnp.float32(delta), jnp.float32(eta),
             jnp.float32(eta_decay), jnp.float32(r0), jnp.float32(r_max),
-            key,
+            key, ep=ep,
+            max_step=None if max_step is None else float(max_step),
+            shock_reset=bool(shock_reset),
         )
     return _assemble(tr, r_final)
 
@@ -240,6 +293,9 @@ def adaptive_admission_control_batched(
     key: jax.Array,
     independent_keys: bool = False,
     kernel=None,
+    env=None,
+    max_step: float | None = None,
+    shock_reset: bool = False,
 ) -> dict:
     """Run a fleet of Algorithm-1 learners in ONE jitted scan.
 
@@ -260,6 +316,8 @@ def adaptive_admission_control_batched(
     """
     market = as_market(spot)
     kernel = _default_kernel(market) if kernel is None else kernel
+    _check_env(env)
+    ep = _env_params(env, market.n_pools)
     args = [jnp.asarray(x, jnp.float32)
             for x in (k, delta, eta, eta_decay, r0, r_max)]
     batch = jnp.broadcast_shapes(*(a.shape for a in args), (1,))
@@ -270,7 +328,9 @@ def adaptive_admission_control_batched(
     with annotate("repro.adaptive_admission_control_batched"):
         r_final, tr = _adaptive_batched_jit(
             job, market, kernel, rmax_slots, window_events, n_windows,
-            *args, keys,
+            *args, keys, ep=ep,
+            max_step=None if max_step is None else float(max_step),
+            shock_reset=bool(shock_reset),
         )
     # restore multi-dimensional batch shapes (e.g. a delta × r0 meshgrid)
     r_final = r_final.reshape(batch)

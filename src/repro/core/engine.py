@@ -129,8 +129,11 @@ from repro.core.clocks import (SlabLayout, build_slab_layout, hazard_clock,
                                sample_clock_vector, sample_hazard_clocks,
                                split_event_keys, synth_key, tagged_keys,
                                thinning_pick, window_slab)
+from repro.core.env import (EnvState, EnvTimeline, clock_rescale, env_row,
+                            init_env_state, inv_avail)
 from repro.core.market import PoolState, SpotMarket, as_market
 from repro.core.regions import RegionTopology, RegionView, as_topology
+from repro.obs.shocks import env_update, env_zeros, summarize_env
 from repro.kernels.sweep import (batched_events, batched_event_windows_ref,
                                  default_interpret)
 from repro.obs.stats import (Telemetry, summarize_telemetry,
@@ -198,12 +201,18 @@ class EngineState(NamedTuple):
 
 
 def init_engine_state(key: jax.Array, job: ArrivalProcess,
-                      spot: ArrivalProcess, rmax: int) -> EngineState:
+                      spot: ArrivalProcess, rmax: int,
+                      ep: dict | None = None) -> EngineState:
     kj, ks, kc = jax.random.split(key, 3)
+    next_job = job.sample(kj)
+    next_spot = spot.sample(ks)
+    if ep is not None:
+        # initial spot clock runs under segment 0's availability
+        next_spot = next_spot * inv_avail(ep["avail"][0])[0]
     return EngineState(
         key=kc,
-        next_job=job.sample(kj),
-        next_spot=spot.sample(ks),
+        next_job=next_job,
+        next_spot=next_spot,
         ages=jnp.zeros((rmax,), jnp.float32),
         budgets=jnp.full((rmax,), INF, jnp.float32),
         occ=jnp.zeros((rmax,), jnp.bool_),
@@ -226,7 +235,8 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
                   kernel: PolicyKernel, rmax: int,
                   layout: SlabLayout | None, carry: EngineState,
                   stats: WindowStats, params, k_cost: jax.Array,
-                  x: jax.Array | None = None, tel: Telemetry | None = None
+                  x: jax.Array | None = None, tel: Telemetry | None = None,
+                  ep: dict | None = None
                   ) -> tuple[EngineState, WindowStats]:
     """Process one merged event (job arrival / spot slot / wait deadline).
 
@@ -243,7 +253,21 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
     the base expressions are untouched, the telemetry fold is a pure
     appendage over locals the body already computed (the module
     docstring's zero-cost-off / primary-stats-unchanged contract).
+
+    ``ep`` (traced; see :mod:`repro.core.env`) switches ``carry`` to an
+    ``(EngineState, EnvState)`` pair and ``stats`` to an outermost
+    ``(stats, EnvWindowStats)`` pair: segment boundaries join the clock
+    race as a highest-priority event, current-segment multipliers scale
+    the spot price and supply, and survived clocks are rescaled exactly
+    at each crossing.  A single open-ended segment reproduces the
+    ``ep=None`` arithmetic bit-for-bit (every mask statically False-
+    valued, every multiplier exactly 1.0).
     """
+    if ep is not None:
+        carry, env_c = carry
+        stats, estats = stats
+        seg = env_c.seg
+        avail_row = env_row(ep["avail"], seg)
     if tel is not None:
         stats, tstats = stats
     if layout is None:
@@ -260,6 +284,17 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
     is_spot = carry.next_spot <= jnp.minimum(carry.next_job, deadline)
     is_deadline = (~is_spot) & (deadline <= carry.next_job)
     is_job = (~is_spot) & (~is_deadline)
+    if ep is not None:
+        # boundary-as-event: the segment boundary wins the race outright
+        # (no queue activity; clocks age by dt), so dt never spans
+        # segments.  With one open-ended segment next_boundary is 3e38:
+        # is_boundary is identically False and dt is unchanged bitwise.
+        is_boundary = env_c.next_boundary <= dt
+        dt = jnp.minimum(dt, env_c.next_boundary)
+        not_b = ~is_boundary
+        is_spot = is_spot & not_b
+        is_deadline = is_deadline & not_b
+        is_job = is_job & not_b
 
     ages = carry.ages + dt
     budgets = jnp.where(carry.occ, carry.budgets - dt, INF)
@@ -299,10 +334,26 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
     else:
         job_draw = job.sample_u(layout.uniforms(x, layout.job))
         spot_draw = spot.sample_u(layout.uniforms(x, layout.spot))
+    next_job = jnp.where(is_job, job_draw, carry.next_job - dt)
+    next_spot = jnp.where(is_spot, spot_draw, carry.next_spot - dt)
+    if ep is not None:
+        # supply side: the spot clock runs at rate·avail, represented as
+        # base-draw × 1/avail (blackouts inflate by BLACKOUT_SCALE, kept
+        # finite).  Fresh draws use the post-event segment; a boundary
+        # re-expresses the survived clock under the new rate — in this
+        # representation a uniform × inv_new/inv_old, valid through
+        # blackouts in either direction.  Demand (the job clock) is not
+        # modulated.  All factors are exactly 1.0 on a constant timeline.
+        seg_new = seg + is_boundary.astype(jnp.int32)
+        inv_old = inv_avail(avail_row)[0]
+        inv_new = inv_avail(env_row(ep["avail"], seg_new))[0]
+        next_spot = jnp.where(is_spot, spot_draw * inv_new, next_spot)
+        next_spot = jnp.where(is_boundary, next_spot * (inv_new / inv_old),
+                              next_spot)
     new_carry = EngineState(
         key=key,
-        next_job=jnp.where(is_job, job_draw, carry.next_job - dt),
-        next_spot=jnp.where(is_spot, spot_draw, carry.next_spot - dt),
+        next_job=next_job,
+        next_spot=next_spot,
         ages=ages,
         budgets=budgets,
         occ=occ,
@@ -310,6 +361,16 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
         next_seq=carry.next_seq + jnp.where(admit, 1, 0),
         qlen=carry.qlen + jnp.where(admit, 1, 0) - jnp.where(leave, 1, 0),
     )
+    if ep is None:
+        # deferred so the op traces at its original position inside the
+        # stats constructor (the frozen-lowering contract is byte-exact)
+        cost_served = lambda: jnp.where(served, 1.0, 0.0)  # noqa: E731
+    else:
+        # spot price modulation: serves pay price_mult(seg) per unit;
+        # the on-demand premium k_cost is the stable fallback price and
+        # is NOT spiked (spikes are a spot-market phenomenon)
+        cost_served = lambda: jnp.where(  # noqa: E731
+            served, env_row(ep["price"], seg)[0], 0.0)
     new_stats = WindowStats(
         jobs_arrived=stats.jobs_arrived + is_job.astype(jnp.int32),
         jobs_completed=stats.jobs_completed
@@ -317,7 +378,7 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
         spot_served=stats.spot_served + served.astype(jnp.int32),
         ondemand=stats.ondemand + (od_now | defected).astype(jnp.int32),
         cost_sum=stats.cost_sum
-        + jnp.where(served, 1.0, 0.0)
+        + cost_served()
         + jnp.where(od_now | defected, k_cost, 0.0),
         delay_sum=stats.delay_sum
         + jnp.where(served, wait_served, 0.0)
@@ -339,8 +400,21 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
             cost_inc=jnp.where(served, np.float32(1.0), k_cost),
             cost_valid=served | od_now | defected,
             loc=jnp.zeros((), jnp.int32), n_locs=1, qlen=new_carry.qlen)
-        return new_carry, (new_stats, tstats)
-    return new_carry, new_stats
+    out_stats = (new_stats, tstats) if tel is not None else new_stats
+    if ep is not None:
+        estats = env_update(
+            estats, is_boundary=is_boundary,
+            kind_prev=env_row(ep["kind"], seg),
+            kind_next=env_row(ep["kind"], seg_new), dt=dt, is_job=is_job,
+            od_now=od_now, served=served, resumed=jnp.zeros((), jnp.bool_))
+        new_env = EnvState(
+            next_boundary=jnp.where(
+                is_boundary,
+                env_row(ep["t_end"], seg_new) - env_row(ep["t_end"], seg),
+                env_c.next_boundary - dt),
+            seg=seg_new)
+        return (new_carry, new_env), (out_stats, estats)
+    return new_carry, out_stats
 
 
 def _rebase_order(state):
@@ -363,6 +437,14 @@ def _rebase_order(state):
     )
 
 
+def _rebase_order_env(state):
+    """:func:`_rebase_order` for an ``(engine-state, EnvState)`` pair —
+    the window-boundary epilogue when the env axis is on (the timeline
+    cursor crosses windows untouched)."""
+    base, env_c = state
+    return (_rebase_order(base), env_c)
+
+
 def _scan_window(step, zeros, state, n_events: int):
     """Scan ``step`` for ``n_events`` events from fresh window accumulators.
 
@@ -380,24 +462,26 @@ def _scan_window(step, zeros, state, n_events: int):
     return state, stats
 
 
-def _scan_chunked(step, zeros, state, n_events: int, chunk_events: int):
+def _scan_chunked(step, zeros, state, n_events: int, chunk_events: int,
+                  rebase=_rebase_order):
     """Run exactly ``n_events`` events as stacked float32 chunk windows.
 
     Every window boundary rebases the join-sequence counters
-    (:func:`_rebase_order`) so int32 ``order``/``next_seq`` never wrap on
-    long horizons; the Pallas kernel path applies the same epilogue, so the
+    (:func:`_rebase_order` — or :func:`_rebase_order_env` when the state
+    is an env pair) so int32 ``order``/``next_seq`` never wrap on long
+    horizons; the Pallas kernel path applies the same epilogue, so the
     two impls carry bitwise-identical state between windows.
     """
     n_chunks, rem = divmod(n_events, chunk_events)
 
     def chunk(c, _):
         c, s = _scan_window(step, zeros, c, chunk_events)
-        return _rebase_order(c), s
+        return rebase(c), s
 
     state, stats = jax.lax.scan(chunk, state, None, length=n_chunks)
     if rem:
         state, tail = _scan_window(step, zeros, state, rem)
-        state = _rebase_order(state)
+        state = rebase(state)
         stats = jax.tree.map(
             lambda s, t: jnp.concatenate([s, t[None]]), stats,
             jax.tree.map(jnp.asarray, tail),
@@ -405,15 +489,25 @@ def _scan_chunked(step, zeros, state, n_events: int, chunk_events: int):
     return state, stats
 
 
-def _scan_window_slab(step, zeros, state, n_events: int, n_cols: int):
+def _scan_window_slab(step, zeros, state, n_events: int, n_cols: int,
+                      paired: bool = False):
     """Slab-stream window: ONE counter-based bits call generates the whole
     window's ``(n_events, n_cols)`` uint32 slab, the event scan consumes it
     row by row as ``xs``, and the lane key advances once per window (not
     per event).  :func:`repro.core.clocks.lane_window_slabs` walks the same
     ladder with the same shapes, so the Pallas/ref executors consume
-    bitwise-identical slabs."""
-    key, slab = window_slab(state.key, n_events, n_cols)
-    state = state._replace(key=key)
+    bitwise-identical slabs.
+
+    ``paired`` flags an ``(engine-state, EnvState)`` tuple state (env
+    axis on; NamedTuples are tuples, so this cannot be sniffed) — the
+    slab ladder walks the inner engine state's key either way."""
+    if paired:
+        base, env_c = state
+        key, slab = window_slab(base.key, n_events, n_cols)
+        state = (base._replace(key=key), env_c)
+    else:
+        key, slab = window_slab(state.key, n_events, n_cols)
+        state = state._replace(key=key)
 
     def body(sc, x):
         c, s = step(sc[0], sc[1], x)
@@ -424,19 +518,22 @@ def _scan_window_slab(step, zeros, state, n_events: int, n_cols: int):
 
 
 def _scan_chunked_slab(step, zeros, state, n_events: int, chunk_events: int,
-                       n_cols: int):
+                       n_cols: int, paired: bool = False,
+                       rebase=_rebase_order):
     """Slab-stream twin of :func:`_scan_chunked` (same chunk plan, same
     per-window order rebase)."""
     n_chunks, rem = divmod(n_events, chunk_events)
 
     def chunk(c, _):
-        c, s = _scan_window_slab(step, zeros, c, chunk_events, n_cols)
-        return _rebase_order(c), s
+        c, s = _scan_window_slab(step, zeros, c, chunk_events, n_cols,
+                                 paired=paired)
+        return rebase(c), s
 
     state, stats = jax.lax.scan(chunk, state, None, length=n_chunks)
     if rem:
-        state, tail = _scan_window_slab(step, zeros, state, rem, n_cols)
-        state = _rebase_order(state)
+        state, tail = _scan_window_slab(step, zeros, state, rem, n_cols,
+                                        paired=paired)
+        state = rebase(state)
         stats = jax.tree.map(
             lambda s, t: jnp.concatenate([s, t[None]]), stats,
             jax.tree.map(jnp.asarray, tail),
@@ -467,34 +564,38 @@ def _engine_layout(job: ArrivalProcess, spot: ArrivalProcess,
                              spot_udim=process_udim(spot))
 
 
-def _with_zeros(zeros, tel: Telemetry | None, n_locs: int):
-    """Pair base window zeros with telemetry zeros when the axis is on."""
-    if tel is None:
-        return zeros
-    return (zeros, telemetry_zeros(tel, n_locs))
+def _with_zeros(zeros, tel: Telemetry | None, n_locs: int,
+                env: bool = False):
+    """Pair base window zeros with telemetry zeros when that axis is on,
+    then (outermost) with shock-counter zeros when the env axis is on."""
+    if tel is not None:
+        zeros = (zeros, telemetry_zeros(tel, n_locs))
+    if env:
+        zeros = (zeros, env_zeros())
+    return zeros
 
 
 def run_window(job: ArrivalProcess, spot: ArrivalProcess,
                kernel: PolicyKernel, rmax: int, state: EngineState, params,
                k_cost: jax.Array, n_events: int,
                layout: SlabLayout | None = None,
-               tel: Telemetry | None = None
+               tel: Telemetry | None = None, ep: dict | None = None
                ) -> tuple[EngineState, WindowStats]:
     """Run ``n_events`` merged events; return state + one window of sums."""
     step = functools.partial(_engine_event, job, spot, kernel, rmax, layout,
-                             params=params, k_cost=k_cost, tel=tel)
-    zeros = _with_zeros(WindowStats.zeros(), tel, 1)
+                             params=params, k_cost=k_cost, tel=tel, ep=ep)
+    zeros = _with_zeros(WindowStats.zeros(), tel, 1, env=ep is not None)
     if layout is None:
         return _scan_window(lambda c, s: step(c, s), zeros, state, n_events)
     return _scan_window_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
-                             n_events, layout.n_cols)
+                             n_events, layout.n_cols, paired=ep is not None)
 
 
 def run_chunked(job: ArrivalProcess, spot: ArrivalProcess,
                 kernel: PolicyKernel, rmax: int, state: EngineState, params,
                 k_cost: jax.Array, n_events: int, chunk_events: int,
                 layout: SlabLayout | None = None,
-                tel: Telemetry | None = None
+                tel: Telemetry | None = None, ep: dict | None = None
                 ) -> tuple[EngineState, WindowStats]:
     """Run exactly ``n_events`` events as stacked float32 chunk windows.
 
@@ -502,13 +603,15 @@ def run_chunked(job: ArrivalProcess, spot: ArrivalProcess,
     float64 so long horizons do not hit float32 sum saturation.
     """
     step = functools.partial(_engine_event, job, spot, kernel, rmax, layout,
-                             params=params, k_cost=k_cost, tel=tel)
-    zeros = _with_zeros(WindowStats.zeros(), tel, 1)
+                             params=params, k_cost=k_cost, tel=tel, ep=ep)
+    zeros = _with_zeros(WindowStats.zeros(), tel, 1, env=ep is not None)
+    rebase = _rebase_order if ep is None else _rebase_order_env
     if layout is None:
         return _scan_chunked(lambda c, s: step(c, s), zeros, state,
-                             n_events, chunk_events)
+                             n_events, chunk_events, rebase=rebase)
     return _scan_chunked_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
-                              n_events, chunk_events, layout.n_cols)
+                              n_events, chunk_events, layout.n_cols,
+                              paired=ep is not None, rebase=rebase)
 
 
 @functools.partial(
@@ -517,17 +620,23 @@ def run_chunked(job: ArrivalProcess, spot: ArrivalProcess,
                      "chunk_events", "burn_in", "rng", "tel"),
 )
 def _run_sim_jit(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
-                 rng, params, k_cost, key, tel=None):
+                 rng, params, k_cost, key, tel=None, ep=None):
     """Single-point entry, compiled once per static signature at module scope
-    (the seed re-jitted its burn-in path on every call)."""
+    (the seed re-jitted its burn-in path on every call).
+
+    ``ep`` is traced (an env-params dict, or None — a leafless pytree, so
+    the ``env=None`` program is the same jaxpr as before the axis)."""
     layout = _engine_layout(job, spot, kernel) if rng == "slab" else None
-    state = init_engine_state(key, job, spot, rmax)
+    state = init_engine_state(key, job, spot, rmax, ep=ep)
+    if ep is not None:
+        state = (state, init_env_state(ep))
     if burn_in:
         state, _ = run_window(job, spot, kernel, rmax, state, params, k_cost,
-                              burn_in, layout=layout, tel=tel)
-        state = _rebase_order(state)
+                              burn_in, layout=layout, tel=tel, ep=ep)
+        state = (_rebase_order(state) if ep is None
+                 else _rebase_order_env(state))
     return run_chunked(job, spot, kernel, rmax, state, params, k_cost,
-                       n_events, chunk_events, layout=layout, tel=tel)
+                       n_events, chunk_events, layout=layout, tel=tel, ep=ep)
 
 
 def _check_rng(rng: str) -> None:
@@ -540,6 +649,66 @@ def _check_telemetry(telemetry) -> None:
         raise TypeError(
             f"telemetry must be a repro.obs.Telemetry or None, got "
             f"{telemetry!r}")
+
+
+def _check_env(env) -> None:
+    if env is not None and not isinstance(env, EnvTimeline):
+        raise TypeError(
+            f"env must be a repro.core.env.EnvTimeline or None, got "
+            f"{env!r}")
+
+
+def _env_params(env: EnvTimeline | None, n_locs: int):
+    return None if env is None else env.params(n_locs)
+
+
+def _check_run_shape(name: str, n_events: int, burn_in: int) -> None:
+    """Actionable errors for the host-side run plan (every entry point)."""
+    if n_events <= 0:
+        raise ValueError(
+            f"{name}: n_events must be a positive event count, got "
+            f"{n_events}")
+    if burn_in < 0:
+        raise ValueError(
+            f"{name}: burn_in must be >= 0 events, got {burn_in}")
+
+
+def _check_loc_overrides(name: str, n_locs: int, what: str, **arrays) -> None:
+    """Actionable errors for per-pool/per-region override grids: every
+    given array must be a scalar (fills every loc) or have a last axis
+    broadcastable to the scenario's loc count, and price/hazard/notice
+    values must be non-negative and finite."""
+    for field, arr in arrays.items():
+        if arr is None:
+            continue
+        a = np.asarray(arr)
+        if a.ndim > 0 and a.shape[-1] not in (1, n_locs):
+            raise ValueError(
+                f"{name}: {field} must be scalar or have last-axis length "
+                f"{n_locs} (one per {what}), got shape {a.shape}")
+        if not np.all(np.isfinite(a)):
+            raise ValueError(
+                f"{name}: {field} contains non-finite values")
+        if np.any(a < 0):
+            raise ValueError(
+                f"{name}: {field} must be non-negative, got min "
+                f"{a.min()}")
+
+
+class NonFiniteStatsError(ValueError):
+    """Raised by :func:`summarize` when a reduced statistic is NaN/inf —
+    poisoned windows fail loudly at the host boundary instead of leaking
+    silent NaN averages into sweeps and learners."""
+
+
+def _check_finite_stats(s) -> None:
+    for field in ("cost_sum", "delay_sum", "time_elapsed"):
+        v = getattr(s, field)
+        if not np.all(np.isfinite(v)):
+            raise NonFiniteStatsError(
+                f"summarize: window statistic {field!r} is non-finite "
+                f"(NaN/inf) — the run diverged (bad params, non-finite "
+                f"prices/hazards, or a poisoned window)")
 
 
 def _flat_lane_args(params_trees, k_cost, keys):
@@ -572,20 +741,25 @@ def _unflatten_lanes(stats, g: int, s: int):
                      "chunk_events", "burn_in", "rng", "tel"),
 )
 def _run_sweep_jit(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
-                   rng, params, k_cost, keys, tel=None):
+                   rng, params, k_cost, keys, tel=None, ep=None):
     """(grid × seeds) fleet as one nested-vmap XLA program (broadcast
-    ``in_axes`` — see :func:`_flat_lane_args` for why not flat lanes)."""
+    ``in_axes`` — see :func:`_flat_lane_args` for why not flat lanes).
+    ``ep`` is closed over by ``one`` (grid-constant, so the nested vmap
+    keeps it symbolically unbatched)."""
     layout = _engine_layout(job, spot, kernel) if rng == "slab" else None
 
     def one(p, kc, key):
-        state = init_engine_state(key, job, spot, rmax)
+        state = init_engine_state(key, job, spot, rmax, ep=ep)
+        if ep is not None:
+            state = (state, init_env_state(ep))
         if burn_in:
             state, _ = run_window(job, spot, kernel, rmax, state, p, kc,
-                                  burn_in, layout=layout, tel=tel)
-            state = _rebase_order(state)
+                                  burn_in, layout=layout, tel=tel, ep=ep)
+            state = (_rebase_order(state) if ep is None
+                     else _rebase_order_env(state))
         _, stats = run_chunked(job, spot, kernel, rmax, state, p, kc,
                                n_events, chunk_events, layout=layout,
-                               tel=tel)
+                               tel=tel, ep=ep)
         return stats
 
     per_seeds = jax.vmap(one, in_axes=(None, None, 0))
@@ -602,6 +776,19 @@ def _lane_slabs(state0, plan, layout: SlabLayout) -> jax.Array:
         lambda k: lane_window_slabs(k, plan, layout.n_cols))(state0.key)
 
 
+def _env_lane_blocks(ep: dict, lanes: int):
+    """Per-lane env inputs for the batched-event executors: the segment
+    tables broadcast per lane (they become VMEM-resident param blocks,
+    exactly like the PR-5 slab rides as an input block) plus each lane's
+    initial :class:`EnvState` cursor."""
+    ep_b = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (lanes,) + a.shape), ep)
+    es0 = EnvState(
+        next_boundary=jnp.broadcast_to(ep["t_end"][0], (lanes,)),
+        seg=jnp.zeros((lanes,), jnp.int32))
+    return ep_b, es0
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("job", "spot", "kernel", "rmax", "n_events",
@@ -610,7 +797,7 @@ def _lane_slabs(state0, plan, layout: SlabLayout) -> jax.Array:
 )
 def _run_sweep_pallas_jit(job, spot, kernel, rmax, n_events, chunk_events,
                           burn_in, tile, interpret, params, k_cost, keys,
-                          executor="pallas", rng="split", tel=None):
+                          executor="pallas", rng="split", tel=None, ep=None):
     """The (grid × seeds) fleet as ONE Pallas batched-event kernel call.
 
     Lanes are grid-major (seed fastest; :func:`_flat_lane_args`); per-lane
@@ -624,32 +811,41 @@ def _run_sweep_pallas_jit(job, spot, kernel, rmax, n_events, chunk_events,
     (params_f,), k_f, keys_f = _flat_lane_args((params,), k_cost, keys)
     params_b = {"params": params_f, "k": k_f}
     state0 = jax.vmap(
-        lambda key: init_engine_state(key, job, spot, rmax))(keys_f)
+        lambda key: init_engine_state(key, job, spot, rmax, ep=ep))(keys_f)
     plan = _window_plan(n_events, chunk_events, burn_in)
 
     if rng == "slab":
         layout = _engine_layout(job, spot, kernel)
         xs = _lane_slabs(state0, plan, layout)
-
-        def step(carry, stats, p, x):
-            return _engine_event(job, spot, kernel, rmax, layout, carry,
-                                 stats, p["params"], p["k"], x=x, tel=tel)
     else:
         layout, xs = None, None
+    if ep is not None:
+        # slabs above walk the bare engine key ladder; only now does the
+        # lane state become the (engine, env-cursor) pair
+        params_b["ep"], es0 = _env_lane_blocks(ep, keys_f.shape[0])
+        state0 = (state0, es0)
 
+    if rng == "slab":
+        def step(carry, stats, p, x):
+            return _engine_event(job, spot, kernel, rmax, layout, carry,
+                                 stats, p["params"], p["k"], x=x, tel=tel,
+                                 ep=p.get("ep"))
+    else:
         def step(carry, stats, p):
             return _engine_event(job, spot, kernel, rmax, None, carry,
-                                 stats, p["params"], p["k"], tel=tel)
+                                 stats, p["params"], p["k"], tel=tel,
+                                 ep=p.get("ep"))
 
-    zeros = _with_zeros(WindowStats.zeros(), tel, 1)
+    zeros = _with_zeros(WindowStats.zeros(), tel, 1, env=ep is not None)
+    epilogue = _rebase_order if ep is None else _rebase_order_env
     if executor == "ref":
         _, stats = batched_event_windows_ref(
             step, state0, params_b, zeros, plan, xs=xs,
-            epilogue=_rebase_order)
+            epilogue=epilogue)
     else:
         _, stats = batched_events(
             step, state0, params_b, zeros, plan, xs=xs,
-            tile=tile, interpret=interpret, epilogue=_rebase_order)
+            tile=tile, interpret=interpret, epilogue=epilogue)
     if burn_in:
         stats = jax.tree.map(lambda x: x[:, 1:], stats)
     return _unflatten_lanes(stats, g, s)
@@ -680,7 +876,8 @@ def _merge_telemetry(out: dict, telemetry: Telemetry, tstats,
     return out
 
 
-def summarize(stats: WindowStats, telemetry: Telemetry | None = None) -> dict:
+def summarize(stats: WindowStats, telemetry: Telemetry | None = None,
+              env=None) -> dict:
     """Reduce chunked (…, n_chunks) sums in float64; derive long-run stats.
 
     Leading batch axes (grid, seeds) pass through: every value in the
@@ -688,11 +885,20 @@ def summarize(stats: WindowStats, telemetry: Telemetry | None = None) -> dict:
     With ``telemetry``, ``stats`` is the engine's ``(base, telemetry)``
     pair and the dict gains the :func:`repro.obs.summarize_telemetry`
     fields (P50/P99 wait, event counters, …) — base keys unchanged.
+    With ``env`` (truthy), ``stats`` is additionally wrapped in an
+    outermost ``(stats, EnvWindowStats)`` pair and the dict gains the
+    :func:`repro.obs.summarize_env` shock/degradation counters.
+    Raises :class:`NonFiniteStatsError` when a reduced base statistic is
+    NaN/inf (silent poisoned stats fail loudly at the host boundary).
     """
+    estats = None
+    if env is not None:
+        stats, estats = stats
     tstats = None
     if telemetry is not None:
         stats, tstats = stats
     s = jax.tree.map(lambda x: np.asarray(x, np.float64).sum(axis=-1), stats)
+    _check_finite_stats(s)
     completed = np.maximum(s.jobs_completed, 1.0)
     arrived = np.maximum(s.jobs_arrived, 1.0)
     time = np.maximum(s.time_elapsed, 1e-12)
@@ -711,7 +917,9 @@ def summarize(stats: WindowStats, telemetry: Telemetry | None = None) -> dict:
         "arrival_rate": arrived / time,
     }
     if telemetry is not None:
-        return _merge_telemetry(out, telemetry, tstats, stats.time_elapsed)
+        out = _merge_telemetry(out, telemetry, tstats, stats.time_elapsed)
+    if estats is not None:
+        out.update(summarize_env(estats))
     return out
 
 
@@ -754,6 +962,7 @@ def run_sim(
     tile: int = 256,
     interpret: bool | None = None,
     telemetry: Telemetry | None = None,
+    env: EnvTimeline | None = None,
 ) -> dict:
     """Run one policy at one parameter point; return long-run scalar stats.
 
@@ -768,10 +977,17 @@ def run_sim(
     "Randomness").  ``telemetry`` (a :class:`repro.obs.Telemetry`) adds
     streaming P50/P99 wait/cost sketches, event counters, and optionally
     an event trace to the returned dict (module docstring, "Telemetry").
+    ``env`` (a :class:`repro.core.env.EnvTimeline`) runs the horizon
+    through a piecewise-constant environment — price/hazard/availability
+    segments, storms, blackouts — and adds the shock counters to the
+    returned dict (module docstring of :mod:`repro.core.env`).
     """
     params = {} if params is None else params
     _check_rng(rng)
     _check_telemetry(telemetry)
+    _check_env(env)
+    _check_run_shape("run_sim", n_events, burn_in)
+    ep = _env_params(env, 1)
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
     with annotate(f"repro.run_sim[{impl}]"):
         if impl in ("pallas", "ref"):
@@ -780,17 +996,17 @@ def run_sim(
                 default_interpret() if interpret is None else interpret,
                 jax.tree.map(lambda x: jnp.asarray(x)[None], params),
                 jnp.float32(k)[None], _raw_keys(key)[None], executor=impl,
-                rng=rng, tel=telemetry)
+                rng=rng, tel=telemetry, ep=ep)
             stats = jax.tree.map(lambda x: x[0, 0], stats)
         elif impl == "xla":
             _, stats = _run_sim_jit(job, spot, kernel, rmax, n_events, chunk,
                                     burn_in, rng, params, jnp.float32(k),
-                                    key, tel=telemetry)
+                                    key, tel=telemetry, ep=ep)
         else:
             raise ValueError(
                 f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
     return {name: _scalar_or_array(v)
-            for name, v in summarize(stats, telemetry).items()}
+            for name, v in summarize(stats, telemetry, env=env).items()}
 
 
 def run_sweep(
@@ -811,6 +1027,7 @@ def run_sweep(
     tile: int = 256,
     interpret: bool | None = None,
     telemetry: Telemetry | None = None,
+    env: EnvTimeline | None = None,
 ) -> dict:
     """Run a whole policy grid × seed fleet as ONE jitted call.
 
@@ -839,6 +1056,9 @@ def run_sweep(
     params = {} if params is None else params
     _check_rng(rng)
     _check_telemetry(telemetry)
+    _check_env(env)
+    _check_run_shape("run_sweep", n_events, burn_in)
+    ep = _env_params(env, 1)
     params = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params)
     k = jnp.asarray(k, jnp.float32)
     grid_shape = jnp.broadcast_shapes(
@@ -855,15 +1075,16 @@ def run_sweep(
                 job, spot, kernel, rmax, n_events, chunk, burn_in, tile,
                 default_interpret() if interpret is None else interpret,
                 params_flat, k_flat, _raw_keys(keys), executor=impl,
-                rng=rng, tel=telemetry)
+                rng=rng, tel=telemetry, ep=ep)
         elif impl == "xla":
             stats = _run_sweep_jit(job, spot, kernel, rmax, n_events, chunk,
                                    burn_in, rng, params_flat, k_flat, keys,
-                                   tel=telemetry)
+                                   tel=telemetry, ep=ep)
         else:
             raise ValueError(
                 f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
-    out = summarize(stats, telemetry)  # values shaped (grid_points, n_seeds)
+    # values shaped (grid_points, n_seeds)
+    out = summarize(stats, telemetry, env=env)
     return _reshape_sweep(out, grid_shape, n_seeds)
 
 
@@ -965,25 +1186,34 @@ def _slab_spot_clocks(procs: tuple, u: jax.Array,
 def init_market_state(key: jax.Array, job: ArrivalProcess,
                       market: SpotMarket, rmax: int, mp: dict,
                       preempt_on: bool,
-                      scalar_preempt: bool = False) -> MarketState:
+                      scalar_preempt: bool = False,
+                      ep: dict | None = None) -> MarketState:
     """``scalar_preempt`` (the ``rng="slab"`` representation) carries ONE
     superposed preemption clock instead of the (P,) vector: the min of the
-    per-pool init draws — exactly ``Exp(Σ h_p)``, the superposition law."""
+    per-pool init draws — exactly ``Exp(Σ h_p)``, the superposition law.
+    ``ep`` places the initial clocks under segment 0's effective hazard
+    and availability (exact ×1.0 no-ops on a constant timeline)."""
     kj, ks, kc = jax.random.split(key, 3)
     n = market.n_pools
+    hazard0 = (mp["hazard"] if ep is None
+               else mp["hazard"] * ep["hazard"][0])
     if preempt_on:
         next_preempt = sample_hazard_clocks(
             _market_tags(market), jax.random.fold_in(ks, 2**31 - 1),
-            mp["hazard"])
+            hazard0)
         if scalar_preempt:
             next_preempt = jnp.min(next_preempt, keepdims=True)
     else:
         next_preempt = jnp.full((1 if scalar_preempt else n,), INF,
                                 jnp.float32)
+    next_job = job.sample(kj)
+    next_spot = _sample_spot_clocks(market, ks, mp)
+    if ep is not None:
+        next_spot = next_spot * inv_avail(ep["avail"][0])
     return MarketState(
         key=kc,
-        next_job=job.sample(kj),
-        next_spot=_sample_spot_clocks(market, ks, mp),
+        next_job=next_job,
+        next_spot=next_spot,
         next_preempt=next_preempt,
         ages=jnp.zeros((rmax,), jnp.float32),
         budgets=jnp.full((rmax,), INF, jnp.float32),
@@ -1044,7 +1274,8 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
                   preempt_on: bool, layout: SlabLayout | None,
                   carry: MarketState, stats: MarketWindowStats, params,
                   mp: dict, k_cost: jax.Array,
-                  x: jax.Array | None = None, tel: Telemetry | None = None
+                  x: jax.Array | None = None, tel: Telemetry | None = None,
+                  ep: dict | None = None
                   ) -> tuple[MarketState, MarketWindowStats]:
     """One merged event: job arrival / pool spot slot / pool preemption /
     wait deadline.  Same dense one-hot-select style as :func:`_engine_event`
@@ -1056,8 +1287,24 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
     pick of the firing pool (exact; see :mod:`repro.core.clocks`).
     ``tel`` appends the telemetry fold exactly as in :func:`_engine_event`
     (base expressions untouched); the event locus is the firing pool.
+    ``ep`` threads the environment-timeline axis exactly as in
+    :func:`_engine_event`, here with per-pool multiplier rows: effective
+    price/hazard = base × segment row, spot supply scaled by per-pool
+    availability (0 = blackout, clocks inflated finite), and the kernel's
+    :class:`PoolState` sees the *effective* market — a zero ``rate`` entry
+    is the blackout signal failover kernels key on.
     """
     n_pools = market.n_pools
+    if ep is not None:
+        carry, env_c = carry
+        stats, estats = stats
+        seg = env_c.seg
+        avail_row = env_row(ep["avail"], seg)
+        eff_hazard = mp["hazard"] * env_row(ep["hazard"], seg)
+        eff_price = mp["price"] * env_row(ep["price"], seg)
+    else:
+        eff_hazard = mp["hazard"]
+        eff_price = mp["price"]
     if tel is not None:
         stats, tstats = stats
     if layout is None:
@@ -1080,7 +1327,7 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
             pre_pool = jnp.argmin(carry.next_preempt).astype(jnp.int32)
         else:
             min_pre = carry.next_preempt[0]
-            pre_pool = thinning_pick(mp["hazard"],
+            pre_pool = thinning_pick(eff_hazard,
                                      layout.uniforms(x, layout.preempt)[1])
         dt = jnp.minimum(jnp.minimum(carry.next_job, min_spot),
                          jnp.minimum(deadline, min_pre))
@@ -1097,6 +1344,16 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
         is_pre = jnp.zeros((), jnp.bool_)
         is_deadline = (~is_spot) & (deadline <= carry.next_job)
         is_job = (~is_spot) & (~is_deadline)
+    if ep is not None:
+        # boundary-as-event (see _engine_event): the crossing outranks
+        # every queue clock, so dt never spans segments
+        is_boundary = env_c.next_boundary <= dt
+        dt = jnp.minimum(dt, env_c.next_boundary)
+        not_b = ~is_boundary
+        is_spot = is_spot & not_b
+        is_pre = is_pre & not_b
+        is_deadline = is_deadline & not_b
+        is_job = is_job & not_b
 
     ages = carry.ages + dt
     budgets = jnp.where(carry.occ, carry.budgets - dt, INF)
@@ -1106,7 +1363,9 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
         (carry.occ[:, None] & (carry.pool[:, None] == iota_p[None, :]))
         .astype(jnp.int32), axis=0)
     rates = mp["rate"] / mp["spot_scale"]
-    pool_state = PoolState(price=mp["price"], hazard=mp["hazard"],
+    if ep is not None:
+        rates = rates * avail_row  # 0 on blacked-out pools: the signal
+    pool_state = PoolState(price=eff_price, hazard=eff_hazard,
                            notice=mp["notice"], rate=rates,
                            qlen_pool=qlen_pool)
     if layout is None:
@@ -1126,7 +1385,7 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
     has_elig = jnp.any(eligible_s)
     served = is_spot & has_elig
     wait_served = jnp.sum(jnp.where(iota == serve_slot, ages, 0.0))
-    price_s = mp["price"][spot_pool]
+    price_s = eff_price[spot_pool]
 
     # ---- pool preemption: revoke the FIFO-oldest job on that pool ----
     if preempt_on:
@@ -1147,7 +1406,7 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
                                                  qlen_wo, layout, x)
         resume = pre_hit & resume_raw
         defect_pre = pre_hit & (~resume)
-        price_p = mp["price"][pre_pool]
+        price_p = eff_price[pre_pool]
     else:
         pre_slot = jnp.zeros((), jnp.int32)
         pre_hit = jnp.zeros((), jnp.bool_)
@@ -1183,22 +1442,46 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
             tuple(p.arrival for p in market.pools),
             layout.uniforms(x, layout.spot), mp["spot_scale"])
         job_draw = job.sample_u(layout.uniforms(x, layout.job))
+    if ep is not None:
+        # refresh draws live under the POST-event segment; boundary
+        # crossings rescale the survived clocks exactly (memorylessness)
+        seg_new = seg + is_boundary.astype(jnp.int32)
+        inv_old = inv_avail(avail_row)
+        inv_new = inv_avail(env_row(ep["avail"], seg_new))
+        eff_hazard_new = mp["hazard"] * env_row(ep["hazard"], seg_new)
+        spot_draws = spot_draws * inv_new
+    else:
+        eff_hazard_new = mp["hazard"]
     next_spot = jnp.where(fire_s, spot_draws, carry.next_spot - dt)
+    if ep is not None:
+        next_spot = jnp.where(is_boundary, next_spot * (inv_new / inv_old),
+                              next_spot)
     if not preempt_on:
         next_preempt = carry.next_preempt
     elif layout is None:
         fire_p = is_pre & (iota_p == pre_pool)
         next_preempt = jnp.where(
             fire_p, sample_hazard_clocks(_market_tags(market), k_pre,
-                                         mp["hazard"]),
+                                         eff_hazard_new),
             carry.next_preempt - dt)
+        if ep is not None:
+            next_preempt = jnp.where(
+                is_boundary,
+                next_preempt * clock_rescale(eff_hazard, eff_hazard_new),
+                next_preempt)
     else:
         # scalar superposed clock: refresh Exp(Σ h_p) whenever ANY pool
         # fires (memorylessness makes the non-firing residuals fresh draws)
         next_preempt = jnp.where(
-            is_pre, hazard_clock(mp["hazard"],
+            is_pre, hazard_clock(eff_hazard_new,
                                  layout.uniforms(x, layout.preempt)[0]),
             carry.next_preempt - dt)
+        if ep is not None:
+            next_preempt = jnp.where(
+                is_boundary,
+                next_preempt * clock_rescale(jnp.sum(eff_hazard),
+                                             jnp.sum(eff_hazard_new)),
+                next_preempt)
 
     new_carry = MarketState(
         key=key,
@@ -1262,8 +1545,21 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
             + jnp.where(pre_hit, price_p, 0.0),
             cost_valid=served | od_now | defected | pre_hit,
             loc=loc, n_locs=n_pools, qlen=new_carry.qlen)
-        return new_carry, (new_stats, tstats)
-    return new_carry, new_stats
+    out_stats = (new_stats, tstats) if tel is not None else new_stats
+    if ep is not None:
+        estats = env_update(
+            estats, is_boundary=is_boundary,
+            kind_prev=env_row(ep["kind"], seg),
+            kind_next=env_row(ep["kind"], seg_new), dt=dt, is_job=is_job,
+            od_now=od_now, served=served, resumed=resume)
+        new_env = EnvState(
+            next_boundary=jnp.where(
+                is_boundary,
+                env_row(ep["t_end"], seg_new) - env_row(ep["t_end"], seg),
+                env_c.next_boundary - dt),
+            seg=seg_new)
+        return (new_carry, new_env), (out_stats, estats)
+    return new_carry, out_stats
 
 
 def _market_layout(job: ArrivalProcess, market: SpotMarket, kernel,
@@ -1281,35 +1577,38 @@ def run_market_window(job: ArrivalProcess, market: SpotMarket, kernel,
                       rmax: int, preempt_on: bool, state: MarketState,
                       params, mp: dict, k_cost: jax.Array, n_events: int,
                       layout: SlabLayout | None = None,
-                      tel: Telemetry | None = None
+                      tel: Telemetry | None = None, ep: dict | None = None
                       ) -> tuple[MarketState, MarketWindowStats]:
     """Run ``n_events`` merged market events; one window of float32 sums."""
     step = functools.partial(_market_event, job, market, kernel, rmax,
                              preempt_on, layout, params=params, mp=mp,
-                             k_cost=k_cost, tel=tel)
+                             k_cost=k_cost, tel=tel, ep=ep)
     zeros = _with_zeros(MarketWindowStats.zeros(market.n_pools), tel,
-                        market.n_pools)
+                        market.n_pools, env=ep is not None)
     if layout is None:
         return _scan_window(step, zeros, state, n_events)
     return _scan_window_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
-                             n_events, layout.n_cols)
+                             n_events, layout.n_cols, paired=ep is not None)
 
 
 def run_market_chunked(job: ArrivalProcess, market: SpotMarket, kernel,
                        rmax: int, preempt_on: bool, state: MarketState,
                        params, mp: dict, k_cost: jax.Array, n_events: int,
                        chunk_events: int, layout: SlabLayout | None = None,
-                       tel: Telemetry | None = None
+                       tel: Telemetry | None = None, ep: dict | None = None
                        ) -> tuple[MarketState, MarketWindowStats]:
     step = functools.partial(_market_event, job, market, kernel, rmax,
                              preempt_on, layout, params=params, mp=mp,
-                             k_cost=k_cost, tel=tel)
+                             k_cost=k_cost, tel=tel, ep=ep)
     zeros = _with_zeros(MarketWindowStats.zeros(market.n_pools), tel,
-                        market.n_pools)
+                        market.n_pools, env=ep is not None)
+    rebase = _rebase_order if ep is None else _rebase_order_env
     if layout is None:
-        return _scan_chunked(step, zeros, state, n_events, chunk_events)
+        return _scan_chunked(step, zeros, state, n_events, chunk_events,
+                             rebase=rebase)
     return _scan_chunked_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
-                              n_events, chunk_events, layout.n_cols)
+                              n_events, chunk_events, layout.n_cols,
+                              paired=ep is not None, rebase=rebase)
 
 
 @functools.partial(
@@ -1319,19 +1618,22 @@ def run_market_chunked(job: ArrivalProcess, market: SpotMarket, kernel,
 )
 def _run_market_sim_jit(job, market, kernel, rmax, preempt_on, n_events,
                         chunk_events, burn_in, rng, params, mp, k_cost, key,
-                        tel=None):
+                        tel=None, ep=None):
     layout = (_market_layout(job, market, kernel, preempt_on)
               if rng == "slab" else None)
     state = init_market_state(key, job, market, rmax, mp, preempt_on,
-                              scalar_preempt=layout is not None)
+                              scalar_preempt=layout is not None, ep=ep)
+    if ep is not None:
+        state = (state, init_env_state(ep))
     if burn_in:
         state, _ = run_market_window(job, market, kernel, rmax, preempt_on,
                                      state, params, mp, k_cost, burn_in,
-                                     layout=layout, tel=tel)
-        state = _rebase_order(state)
+                                     layout=layout, tel=tel, ep=ep)
+        state = (_rebase_order(state) if ep is None
+                 else _rebase_order_env(state))
     return run_market_chunked(job, market, kernel, rmax, preempt_on, state,
                               params, mp, k_cost, n_events, chunk_events,
-                              layout=layout, tel=tel)
+                              layout=layout, tel=tel, ep=ep)
 
 
 @functools.partial(
@@ -1341,7 +1643,7 @@ def _run_market_sim_jit(job, market, kernel, rmax, preempt_on, n_events,
 )
 def _run_market_sweep_jit(job, market, kernel, rmax, preempt_on, n_events,
                           chunk_events, burn_in, rng, params, mp, k_cost,
-                          keys, tel=None):
+                          keys, tel=None, ep=None):
     """(grid × pools-config × seeds) fleet as one nested-vmap XLA program
     (broadcast ``in_axes``; see :func:`_flat_lane_args`)."""
     layout = (_market_layout(job, market, kernel, preempt_on)
@@ -1349,15 +1651,20 @@ def _run_market_sweep_jit(job, market, kernel, rmax, preempt_on, n_events,
 
     def one(p, m, kc, key):
         state = init_market_state(key, job, market, rmax, m, preempt_on,
-                                  scalar_preempt=layout is not None)
+                                  scalar_preempt=layout is not None, ep=ep)
+        if ep is not None:
+            state = (state, init_env_state(ep))
         if burn_in:
             state, _ = run_market_window(job, market, kernel, rmax,
                                          preempt_on, state, p, m, kc,
-                                         burn_in, layout=layout, tel=tel)
-            state = _rebase_order(state)
+                                         burn_in, layout=layout, tel=tel,
+                                         ep=ep)
+            state = (_rebase_order(state) if ep is None
+                     else _rebase_order_env(state))
         _, stats = run_market_chunked(job, market, kernel, rmax, preempt_on,
                                       state, p, m, kc, n_events,
-                                      chunk_events, layout=layout, tel=tel)
+                                      chunk_events, layout=layout, tel=tel,
+                                      ep=ep)
         return stats
 
     per_seeds = jax.vmap(one, in_axes=(None, None, None, 0))
@@ -1374,7 +1681,8 @@ def _run_market_sweep_jit(job, market, kernel, rmax, preempt_on, n_events,
 def _run_market_sweep_pallas_jit(job, market, kernel, rmax, preempt_on,
                                  n_events, chunk_events, burn_in, tile,
                                  interpret, params, mp, k_cost, keys,
-                                 executor="pallas", rng="split", tel=None):
+                                 executor="pallas", rng="split", tel=None,
+                                 ep=None):
     """The market fleet through the same batched-event kernel family: the
     per-pool ``next_spot``/``next_preempt`` clock vectors become
     (tile, n_pools) VMEM blocks and :func:`_market_event` is the vmap-ed
@@ -1392,41 +1700,48 @@ def _run_market_sweep_pallas_jit(job, market, kernel, rmax, preempt_on,
     state0 = jax.vmap(
         lambda key, m: init_market_state(
             key, job, market, rmax, m, preempt_on,
-            scalar_preempt=layout is not None))(keys_f, mp_f)
+            scalar_preempt=layout is not None,
+            ep=ep))(keys_f, mp_f)
     plan = _window_plan(n_events, chunk_events, burn_in)
 
     if layout is not None:
         xs = _lane_slabs(state0, plan, layout)
+    else:
+        xs = None
+    if ep is not None:
+        params_b["ep"], es0 = _env_lane_blocks(ep, keys_f.shape[0])
+        state0 = (state0, es0)
 
+    if layout is not None:
         def step(carry, stats, p, x):
             return _market_event(job, market, kernel, rmax, preempt_on,
                                  layout, carry, stats, p["params"], p["mp"],
-                                 p["k"], x=x, tel=tel)
+                                 p["k"], x=x, tel=tel, ep=p.get("ep"))
     else:
-        xs = None
-
         def step(carry, stats, p):
             return _market_event(job, market, kernel, rmax, preempt_on,
                                  None, carry, stats, p["params"], p["mp"],
-                                 p["k"], tel=tel)
+                                 p["k"], tel=tel, ep=p.get("ep"))
 
     zeros = _with_zeros(MarketWindowStats.zeros(market.n_pools), tel,
-                        market.n_pools)
+                        market.n_pools, env=ep is not None)
+    epilogue = _rebase_order if ep is None else _rebase_order_env
     if executor == "ref":
         _, stats = batched_event_windows_ref(
             step, state0, params_b, zeros, plan, xs=xs,
-            epilogue=_rebase_order)
+            epilogue=epilogue)
     else:
         _, stats = batched_events(
             step, state0, params_b, zeros, plan, xs=xs, tile=tile,
-            interpret=interpret, epilogue=_rebase_order)
+            interpret=interpret, epilogue=epilogue)
     if burn_in:
         stats = jax.tree.map(lambda x: x[:, 1:], stats)
     return _unflatten_lanes(stats, g, s)
 
 
 def summarize_market(stats: MarketWindowStats,
-                     telemetry: Telemetry | None = None) -> dict:
+                     telemetry: Telemetry | None = None,
+                     env: EnvTimeline | None = None) -> dict:
     """Float64 chunk reduction + market-specific derived statistics.
 
     Extends :func:`summarize`'s dict with preemption counters, spot spend,
@@ -1434,8 +1749,12 @@ def summarize_market(stats: MarketWindowStats,
     The chunk axis is the last axis for scalar accumulators and the
     second-to-last for per-pool vectors.  With ``telemetry``, ``stats`` is
     the ``(base, telemetry)`` pair and the telemetry fields are appended
-    (base keys unchanged; see :func:`summarize`).
+    (base keys unchanged; see :func:`summarize`).  With ``env``, the env
+    block rides outermost and the shock counters are appended.
     """
+    estats = None
+    if env is not None:
+        stats, estats = stats
     tstats = None
     if telemetry is not None:
         stats, tstats = stats
@@ -1473,7 +1792,9 @@ def summarize_market(stats: MarketWindowStats,
         "pool_utilization": pool_served / np.maximum(pool_arrivals, 1.0),
     })
     if telemetry is not None:
-        return _merge_telemetry(out, telemetry, tstats, stats.time_elapsed)
+        out = _merge_telemetry(out, telemetry, tstats, stats.time_elapsed)
+    if estats is not None:
+        out.update(summarize_env(estats))
     return out
 
 
@@ -1523,18 +1844,24 @@ def run_market_sim(
     tile: int = 256,
     interpret: bool | None = None,
     telemetry: Telemetry | None = None,
+    env: EnvTimeline | None = None,
 ) -> dict:
     """Run one market policy at one parameter point; scalar long-run stats.
 
     A degenerate market (:meth:`SpotMarket.is_degenerate`) with a legacy
     kernel reproduces :func:`run_sim` bit-for-bit per seed.  ``chunk_events``
-    / ``impl`` / ``rng`` behave exactly as in :func:`run_sim`.
+    / ``impl`` / ``rng`` behave exactly as in :func:`run_sim`; ``env``
+    attaches an :class:`~repro.core.env.EnvTimeline` (per-pool price /
+    hazard / availability segments) exactly as in :func:`run_sim`.
     """
     market = as_market(market)
     params = {} if params is None else params
     _check_rng(rng)
     _check_telemetry(telemetry)
+    _check_env(env)
+    _check_run_shape("run_market_sim", n_events, burn_in)
     mp = market.params()
+    ep = _env_params(env, market.n_pools)
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
     with annotate(f"repro.run_market_sim[{impl}]"):
         if impl in ("pallas", "ref"):
@@ -1545,19 +1872,20 @@ def run_market_sim(
                 jax.tree.map(lambda x: jnp.asarray(x)[None], params),
                 jax.tree.map(lambda x: jnp.asarray(x)[None], mp),
                 jnp.float32(k)[None], _raw_keys(key)[None], executor=impl,
-                rng=rng, tel=telemetry)
+                rng=rng, tel=telemetry, ep=ep)
             stats = jax.tree.map(lambda x: x[0, 0], stats)
         elif impl == "xla":
             _, stats = _run_market_sim_jit(job, market, kernel, rmax,
                                            market.preemptible, n_events,
                                            chunk, burn_in, rng, params, mp,
                                            jnp.float32(k), key,
-                                           tel=telemetry)
+                                           tel=telemetry, ep=ep)
         else:
             raise ValueError(
                 f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
     return {name: _scalar_or_array(v)
-            for name, v in summarize_market(stats, telemetry).items()}
+            for name, v in summarize_market(stats, telemetry,
+                                            env=env).items()}
 
 
 def run_market_sweep(
@@ -1582,6 +1910,7 @@ def run_market_sweep(
     tile: int = 256,
     interpret: bool | None = None,
     telemetry: Telemetry | None = None,
+    env: EnvTimeline | None = None,
 ) -> dict:
     """Run a (params × k × pools-config × seeds) grid as ONE jitted call.
 
@@ -1607,6 +1936,12 @@ def run_market_sweep(
     params = {} if params is None else params
     _check_rng(rng)
     _check_telemetry(telemetry)
+    _check_env(env)
+    _check_run_shape("run_market_sweep", n_events, burn_in)
+    _check_loc_overrides("run_market_sweep", n, "pool", prices=prices,
+                         hazards=hazards, notices=notices,
+                         spot_scales=spot_scales)
+    ep = _env_params(env, n)
     params = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params)
     k = jnp.asarray(k, jnp.float32)
     overrides = {"price": prices, "hazard": hazards, "notice": notices,
@@ -1632,16 +1967,16 @@ def run_market_sweep(
                 burn_in, tile,
                 default_interpret() if interpret is None else interpret,
                 params_flat, mp_flat, k_flat, _raw_keys(keys), executor=impl,
-                rng=rng, tel=telemetry)
+                rng=rng, tel=telemetry, ep=ep)
         elif impl == "xla":
             stats = _run_market_sweep_jit(job, market, kernel, rmax,
                                           preempt_on, n_events, chunk,
                                           burn_in, rng, params_flat, mp_flat,
-                                          k_flat, keys, tel=telemetry)
+                                          k_flat, keys, tel=telemetry, ep=ep)
         else:
             raise ValueError(
                 f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
-    out = summarize_market(stats, telemetry)
+    out = summarize_market(stats, telemetry, env=env)
     return _reshape_sweep(out, grid_shape, n_seeds)
 
 
@@ -1766,25 +2101,34 @@ def _sample_region_spot_clocks(topo: RegionTopology, k_spot: jax.Array,
 
 def init_region_state(key: jax.Array, topo: RegionTopology, rp: dict,
                       preempt_on: bool,
-                      scalar_preempt: bool = False) -> RegionState:
+                      scalar_preempt: bool = False,
+                      ep: dict | None = None) -> RegionState:
     """``scalar_preempt`` (the ``rng="slab"`` representation) carries ONE
     superposed preemption clock — min of the per-region init draws, exactly
-    ``Exp(Σ h_r)``; see :func:`init_market_state`."""
+    ``Exp(Σ h_r)``; see :func:`init_market_state`.  ``ep`` places the
+    initial supply clocks under segment 0 (exact no-op on a constant
+    timeline); job clocks are never modulated."""
     kj, ks, kc = jax.random.split(key, 3)
     n, s = topo.n_regions, topo.total_slots
+    hazard0 = (rp["hazard"] if ep is None
+               else rp["hazard"] * ep["hazard"][0])
     if preempt_on:
         next_preempt = sample_hazard_clocks(
             _region_tags(topo), jax.random.fold_in(ks, 2**31 - 1),
-            rp["hazard"])
+            hazard0)
         if scalar_preempt:
             next_preempt = jnp.min(next_preempt, keepdims=True)
     else:
         next_preempt = jnp.full((1 if scalar_preempt else n,), INF,
                                 jnp.float32)
+    next_job = _sample_job_clocks(topo, kj, rp)
+    next_spot = _sample_region_spot_clocks(topo, ks, rp)
+    if ep is not None:
+        next_spot = next_spot * inv_avail(ep["avail"][0])
     return RegionState(
         key=kc,
-        next_job=_sample_job_clocks(topo, kj, rp),
-        next_spot=_sample_region_spot_clocks(topo, ks, rp),
+        next_job=next_job,
+        next_spot=next_spot,
         next_preempt=next_preempt,
         ages=jnp.zeros((s,), jnp.float32),
         budgets=jnp.full((s,), INF, jnp.float32),
@@ -1842,7 +2186,7 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
                   layout: SlabLayout | None, carry: RegionState,
                   stats: RegionWindowStats, params, rp: dict,
                   k_cost: jax.Array, x: jax.Array | None = None,
-                  tel: Telemetry | None = None
+                  tel: Telemetry | None = None, ep: dict | None = None
                   ) -> tuple[RegionState, RegionWindowStats]:
     """One merged event: job arrival (in some region) / region spot slot /
     region preemption / wait deadline.  Same dense one-hot-select style as
@@ -1852,9 +2196,23 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
     slab stream's superposed scalar preemption clock (``layout`` not None).
     ``tel`` appends the telemetry fold exactly as in :func:`_engine_event`
     (base expressions untouched); the event locus is the firing region.
+    ``ep`` threads the environment timeline exactly as in
+    :func:`_market_event` (regions are the locations; the demand-side
+    ``next_job`` clocks are deliberately NOT modulated — supply shocks
+    perturb the market, not the workload).
     """
     n_regions, n_slots = topo.n_regions, topo.total_slots
     has_route = hasattr(kernel, "route")
+    if ep is not None:
+        carry, env_c = carry
+        stats, estats = stats
+        seg = env_c.seg
+        avail_row = env_row(ep["avail"], seg)
+        eff_hazard = rp["hazard"] * env_row(ep["hazard"], seg)
+        eff_price = rp["price"] * env_row(ep["price"], seg)
+    else:
+        eff_hazard = rp["hazard"]
+        eff_price = rp["price"]
     if tel is not None:
         stats, tstats = stats
     if layout is None:
@@ -1881,7 +2239,7 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
         else:
             min_pre = carry.next_preempt[0]
             pre_region = thinning_pick(
-                rp["hazard"], layout.uniforms(x, layout.preempt)[1])
+                eff_hazard, layout.uniforms(x, layout.preempt)[1])
         dt = jnp.minimum(jnp.minimum(min_job, min_spot),
                          jnp.minimum(deadline, min_pre))
         is_spot = min_spot <= jnp.minimum(min_job,
@@ -1897,14 +2255,28 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
         is_deadline = (~is_spot) & (deadline <= min_job)
         is_job = (~is_spot) & (~is_deadline)
 
+    if ep is not None:
+        # segment boundary joins the race with highest priority: no queue
+        # activity, clocks age by dt, the segment index advances
+        is_boundary = env_c.next_boundary <= dt
+        dt = jnp.minimum(dt, env_c.next_boundary)
+        not_b = ~is_boundary
+        is_spot = is_spot & not_b
+        is_pre = is_pre & not_b
+        is_deadline = is_deadline & not_b
+        is_job = is_job & not_b
+
     ages = carry.ages + dt
     budgets = jnp.where(carry.occ, carry.budgets - dt, INF)
 
     # ---- job arrival in region `home`: route, then ask the admission law --
+    rates = rp["rate"] / rp["spot_scale"]
+    if ep is not None:
+        rates = rates * avail_row  # rate == 0 marks a blacked-out region
     view = RegionView(
         home=home,
-        price=rp["price"], hazard=rp["hazard"], notice=rp["notice"],
-        rate=rp["rate"] / rp["spot_scale"],
+        price=eff_price, hazard=eff_hazard, notice=rp["notice"],
+        rate=rates,
         job_rate=rp["job_rate"] / rp["job_scale"],
         qlen_region=carry.qlen,
         free_slots=jnp.maximum(rp["rmax"] - carry.qlen, 0),
@@ -1938,7 +2310,7 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
     has_elig = jnp.any(eligible_s)
     served = is_spot & has_elig
     wait_served = jnp.sum(jnp.where(iota_s == serve_slot, ages, 0.0))
-    price_s = rp["price"][spot_region]
+    price_s = eff_price[spot_region]
 
     # ---- region preemption: revoke the FIFO-oldest job in that region ----
     if preempt_on:
@@ -1960,7 +2332,7 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
                                                  qlen_wo, layout, x)
         resume = pre_hit & resume_raw
         defect_pre = pre_hit & (~resume)
-        price_p = rp["price"][pre_region]
+        price_p = eff_price[pre_region]
     else:
         pre_slot = jnp.zeros((), jnp.int32)
         pre_hit = jnp.zeros((), jnp.bool_)
@@ -1999,22 +2371,48 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
         spot_draws = _slab_spot_clocks(tuple(r.spot for r in topo.regions),
                                        layout.uniforms(x, layout.spot),
                                        rp["spot_scale"])
+    if ep is not None:
+        # availability scales fresh supply draws; on a boundary, survived
+        # spot clocks are rescaled by the availability ratio and survived
+        # hazard clocks by the hazard ratio — exact by memorylessness.
+        # Demand (job) clocks are deliberately untouched.
+        seg_new = seg + is_boundary.astype(jnp.int32)
+        inv_old = inv_avail(avail_row)
+        inv_new = inv_avail(env_row(ep["avail"], seg_new))
+        eff_hazard_new = rp["hazard"] * env_row(ep["hazard"], seg_new)
+        spot_draws = spot_draws * inv_new
+    else:
+        eff_hazard_new = rp["hazard"]
     next_job = jnp.where(fire_j, job_draws, carry.next_job - dt)
     next_spot = jnp.where(fire_s, spot_draws, carry.next_spot - dt)
+    if ep is not None:
+        next_spot = jnp.where(is_boundary, next_spot * (inv_new / inv_old),
+                              next_spot)
     if not preempt_on:
         next_preempt = carry.next_preempt
     elif layout is None:
         fire_p = is_pre & (iota_r == pre_region)
         next_preempt = jnp.where(
             fire_p, sample_hazard_clocks(_region_tags(topo), k_pre,
-                                         rp["hazard"]),
+                                         eff_hazard_new),
             carry.next_preempt - dt)
+        if ep is not None:
+            next_preempt = jnp.where(
+                is_boundary,
+                next_preempt * clock_rescale(eff_hazard, eff_hazard_new),
+                next_preempt)
     else:
         # superposed scalar clock (see _market_event)
         next_preempt = jnp.where(
-            is_pre, hazard_clock(rp["hazard"],
+            is_pre, hazard_clock(eff_hazard_new,
                                  layout.uniforms(x, layout.preempt)[0]),
             carry.next_preempt - dt)
+        if ep is not None:
+            next_preempt = jnp.where(
+                is_boundary,
+                next_preempt * clock_rescale(jnp.sum(eff_hazard),
+                                             jnp.sum(eff_hazard_new)),
+                next_preempt)
 
     new_carry = RegionState(
         key=key,
@@ -2086,8 +2484,23 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
             + jnp.where(pre_hit, price_p, 0.0),
             cost_valid=served | od_now | defected | pre_hit,
             loc=loc, n_locs=n_regions, qlen=jnp.sum(new_carry.qlen))
-        return new_carry, (new_stats, tstats)
-    return new_carry, new_stats
+        out_stats = (new_stats, tstats)
+    else:
+        out_stats = new_stats
+    if ep is not None:
+        estats = env_update(
+            estats, is_boundary=is_boundary,
+            kind_prev=env_row(ep["kind"], seg),
+            kind_next=env_row(ep["kind"], seg_new), dt=dt, is_job=is_job,
+            od_now=od_now, served=served, resumed=resume)
+        new_env = EnvState(
+            next_boundary=jnp.where(
+                is_boundary,
+                env_row(ep["t_end"], seg_new) - env_row(ep["t_end"], seg),
+                env_c.next_boundary - dt),
+            seg=seg_new)
+        return (new_carry, new_env), (out_stats, estats)
+    return new_carry, out_stats
 
 
 def _region_layout(topo: RegionTopology, kernel,
@@ -2106,33 +2519,38 @@ def run_region_window(topo: RegionTopology, kernel, preempt_on: bool,
                       state: RegionState, params, rp: dict,
                       k_cost: jax.Array, n_events: int,
                       layout: SlabLayout | None = None,
-                      tel: Telemetry | None = None
+                      tel: Telemetry | None = None, ep: dict | None = None
                       ) -> tuple[RegionState, RegionWindowStats]:
     """Run ``n_events`` merged region events; one window of float32 sums."""
     step = functools.partial(_region_event, topo, kernel, preempt_on, layout,
-                             params=params, rp=rp, k_cost=k_cost, tel=tel)
+                             params=params, rp=rp, k_cost=k_cost, tel=tel,
+                             ep=ep)
     zeros = _with_zeros(RegionWindowStats.zeros(topo.n_regions), tel,
-                        topo.n_regions)
+                        topo.n_regions, env=ep is not None)
     if layout is None:
         return _scan_window(step, zeros, state, n_events)
     return _scan_window_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
-                             n_events, layout.n_cols)
+                             n_events, layout.n_cols, paired=ep is not None)
 
 
 def run_region_chunked(topo: RegionTopology, kernel, preempt_on: bool,
                        state: RegionState, params, rp: dict,
                        k_cost: jax.Array, n_events: int, chunk_events: int,
                        layout: SlabLayout | None = None,
-                       tel: Telemetry | None = None
+                       tel: Telemetry | None = None, ep: dict | None = None
                        ) -> tuple[RegionState, RegionWindowStats]:
     step = functools.partial(_region_event, topo, kernel, preempt_on, layout,
-                             params=params, rp=rp, k_cost=k_cost, tel=tel)
+                             params=params, rp=rp, k_cost=k_cost, tel=tel,
+                             ep=ep)
     zeros = _with_zeros(RegionWindowStats.zeros(topo.n_regions), tel,
-                        topo.n_regions)
+                        topo.n_regions, env=ep is not None)
+    rebase = _rebase_order if ep is None else _rebase_order_env
     if layout is None:
-        return _scan_chunked(step, zeros, state, n_events, chunk_events)
+        return _scan_chunked(step, zeros, state, n_events, chunk_events,
+                             rebase=rebase)
     return _scan_chunked_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
-                              n_events, chunk_events, layout.n_cols)
+                              n_events, chunk_events, layout.n_cols,
+                              paired=ep is not None, rebase=rebase)
 
 
 @functools.partial(
@@ -2141,19 +2559,23 @@ def run_region_chunked(topo: RegionTopology, kernel, preempt_on: bool,
                      "chunk_events", "burn_in", "rng", "tel"),
 )
 def _run_region_sim_jit(topo, kernel, preempt_on, n_events, chunk_events,
-                        burn_in, rng, params, rp, k_cost, key, tel=None):
+                        burn_in, rng, params, rp, k_cost, key, tel=None,
+                        ep=None):
     layout = (_region_layout(topo, kernel, preempt_on)
               if rng == "slab" else None)
     state = init_region_state(key, topo, rp, preempt_on,
-                              scalar_preempt=layout is not None)
+                              scalar_preempt=layout is not None, ep=ep)
+    if ep is not None:
+        state = (state, init_env_state(ep))
     if burn_in:
         state, _ = run_region_window(topo, kernel, preempt_on, state, params,
                                      rp, k_cost, burn_in, layout=layout,
-                                     tel=tel)
-        state = _rebase_order(state)
+                                     tel=tel, ep=ep)
+        state = (_rebase_order(state) if ep is None
+                 else _rebase_order_env(state))
     return run_region_chunked(topo, kernel, preempt_on, state, params, rp,
                               k_cost, n_events, chunk_events, layout=layout,
-                              tel=tel)
+                              tel=tel, ep=ep)
 
 
 @functools.partial(
@@ -2162,7 +2584,8 @@ def _run_region_sim_jit(topo, kernel, preempt_on, n_events, chunk_events,
                      "chunk_events", "burn_in", "rng", "tel"),
 )
 def _run_region_sweep_jit(topo, kernel, preempt_on, n_events, chunk_events,
-                          burn_in, rng, params, rp, k_cost, keys, tel=None):
+                          burn_in, rng, params, rp, k_cost, keys, tel=None,
+                          ep=None):
     """(grid × regions-config × seeds) fleet as one nested-vmap XLA program
     (broadcast ``in_axes``; see :func:`_flat_lane_args`)."""
     layout = (_region_layout(topo, kernel, preempt_on)
@@ -2170,15 +2593,18 @@ def _run_region_sweep_jit(topo, kernel, preempt_on, n_events, chunk_events,
 
     def one(p, r, kc, key):
         state = init_region_state(key, topo, r, preempt_on,
-                                  scalar_preempt=layout is not None)
+                                  scalar_preempt=layout is not None, ep=ep)
+        if ep is not None:
+            state = (state, init_env_state(ep))
         if burn_in:
             state, _ = run_region_window(topo, kernel, preempt_on, state, p,
                                          r, kc, burn_in, layout=layout,
-                                         tel=tel)
-            state = _rebase_order(state)
+                                         tel=tel, ep=ep)
+            state = (_rebase_order(state) if ep is None
+                     else _rebase_order_env(state))
         _, stats = run_region_chunked(topo, kernel, preempt_on, state, p, r,
                                       kc, n_events, chunk_events,
-                                      layout=layout, tel=tel)
+                                      layout=layout, tel=tel, ep=ep)
         return stats
 
     per_seeds = jax.vmap(one, in_axes=(None, None, None, 0))
@@ -2195,7 +2621,8 @@ def _run_region_sweep_jit(topo, kernel, preempt_on, n_events, chunk_events,
 def _run_region_sweep_pallas_jit(topo, kernel, preempt_on, n_events,
                                  chunk_events, burn_in, tile, interpret,
                                  params, rp, k_cost, keys,
-                                 executor="pallas", rng="split", tel=None):
+                                 executor="pallas", rng="split", tel=None,
+                                 ep=None):
     """The region fleet through the same batched-event kernel family: the
     engine-state blocks grow a region axis — (tile, R) clock vectors,
     (tile, sum rmax_r) packed slot arrays — and :func:`_region_event` is
@@ -2213,41 +2640,47 @@ def _run_region_sweep_pallas_jit(topo, kernel, preempt_on, n_events,
     state0 = jax.vmap(
         lambda key, r: init_region_state(
             key, topo, r, preempt_on,
-            scalar_preempt=layout is not None))(keys_f, rp_f)
+            scalar_preempt=layout is not None, ep=ep))(keys_f, rp_f)
     plan = _window_plan(n_events, chunk_events, burn_in)
 
     if layout is not None:
         xs = _lane_slabs(state0, plan, layout)
+    else:
+        xs = None
+    if ep is not None:
+        params_b["ep"], es0 = _env_lane_blocks(ep, keys_f.shape[0])
+        state0 = (state0, es0)
 
+    if layout is not None:
         def step(carry, stats, p, x):
             return _region_event(topo, kernel, preempt_on, layout, carry,
                                  stats, p["params"], p["rp"], p["k"], x=x,
-                                 tel=tel)
+                                 tel=tel, ep=p.get("ep"))
     else:
-        xs = None
-
         def step(carry, stats, p):
             return _region_event(topo, kernel, preempt_on, None, carry,
                                  stats, p["params"], p["rp"], p["k"],
-                                 tel=tel)
+                                 tel=tel, ep=p.get("ep"))
 
     zeros = _with_zeros(RegionWindowStats.zeros(topo.n_regions), tel,
-                        topo.n_regions)
+                        topo.n_regions, env=ep is not None)
+    epilogue = _rebase_order if ep is None else _rebase_order_env
     if executor == "ref":
         _, stats = batched_event_windows_ref(
             step, state0, params_b, zeros, plan, xs=xs,
-            epilogue=_rebase_order)
+            epilogue=epilogue)
     else:
         _, stats = batched_events(
             step, state0, params_b, zeros, plan, xs=xs, tile=tile,
-            interpret=interpret, epilogue=_rebase_order)
+            interpret=interpret, epilogue=epilogue)
     if burn_in:
         stats = jax.tree.map(lambda x: x[:, 1:], stats)
     return _unflatten_lanes(stats, g, s)
 
 
 def summarize_region(stats: RegionWindowStats,
-                     telemetry: Telemetry | None = None) -> dict:
+                     telemetry: Telemetry | None = None,
+                     env: EnvTimeline | None = None) -> dict:
     """Float64 chunk reduction + region-specific derived statistics.
 
     Extends :func:`summarize`'s dict with preemption counters, spot spend,
@@ -2259,7 +2692,12 @@ def summarize_region(stats: RegionWindowStats,
     of admitted jobs the routing hook sent away from home).  With
     ``telemetry``, ``stats`` is the ``(base, telemetry)`` pair and the
     telemetry fields are appended (base keys unchanged; :func:`summarize`).
+    With ``env``, the env block rides outermost and the shock counters are
+    appended.
     """
+    estats = None
+    if env is not None:
+        stats, estats = stats
     tstats = None
     if telemetry is not None:
         stats, tstats = stats
@@ -2302,7 +2740,9 @@ def summarize_region(stats: RegionWindowStats,
                                                          1.0),
     })
     if telemetry is not None:
-        return _merge_telemetry(out, telemetry, tstats, stats.time_elapsed)
+        out = _merge_telemetry(out, telemetry, tstats, stats.time_elapsed)
+    if estats is not None:
+        out.update(summarize_env(estats))
     return out
 
 
@@ -2321,19 +2761,25 @@ def run_region_sim(
     tile: int = 256,
     interpret: bool | None = None,
     telemetry: Telemetry | None = None,
+    env: EnvTimeline | None = None,
 ) -> dict:
     """Run one routing policy on one topology point; scalar long-run stats.
 
     A degenerate topology (:attr:`RegionTopology.is_degenerate`) with a
     non-routing kernel reproduces :func:`run_sim` (and the 1-pool
     :func:`run_market_sim`) bit-for-bit per seed.  ``chunk_events`` /
-    ``impl`` / ``rng`` behave exactly as in :func:`run_sim`.
+    ``impl`` / ``rng`` behave exactly as in :func:`run_sim`; ``env``
+    attaches an :class:`~repro.core.env.EnvTimeline` (per-region price /
+    hazard / availability segments) exactly as in :func:`run_sim`.
     """
     topology = as_topology(topology)
     params = {} if params is None else params
     _check_rng(rng)
     _check_telemetry(telemetry)
+    _check_env(env)
+    _check_run_shape("run_region_sim", n_events, burn_in)
     rp = topology.params()
+    ep = _env_params(env, topology.n_regions)
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
     with annotate(f"repro.run_region_sim[{impl}]"):
         if impl in ("pallas", "ref"):
@@ -2344,19 +2790,20 @@ def run_region_sim(
                 jax.tree.map(lambda x: jnp.asarray(x)[None], params),
                 jax.tree.map(lambda x: jnp.asarray(x)[None], rp),
                 jnp.float32(k)[None], _raw_keys(key)[None], executor=impl,
-                rng=rng, tel=telemetry)
+                rng=rng, tel=telemetry, ep=ep)
             stats = jax.tree.map(lambda x: x[0, 0], stats)
         elif impl == "xla":
             _, stats = _run_region_sim_jit(topology, kernel,
                                            topology.preemptible, n_events,
                                            chunk, burn_in, rng, params, rp,
                                            jnp.float32(k), key,
-                                           tel=telemetry)
+                                           tel=telemetry, ep=ep)
         else:
             raise ValueError(
                 f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
     return {name: _scalar_or_array(v)
-            for name, v in summarize_region(stats, telemetry).items()}
+            for name, v in summarize_region(stats, telemetry,
+                                            env=env).items()}
 
 
 def run_region_sweep(
@@ -2381,6 +2828,7 @@ def run_region_sweep(
     tile: int = 256,
     interpret: bool | None = None,
     telemetry: Telemetry | None = None,
+    env: EnvTimeline | None = None,
 ) -> dict:
     """Run a (params × k × regions-config × seeds) grid as ONE jitted call.
 
@@ -2415,6 +2863,12 @@ def run_region_sweep(
     params = {} if params is None else params
     _check_rng(rng)
     _check_telemetry(telemetry)
+    _check_env(env)
+    _check_run_shape("run_region_sweep", n_events, burn_in)
+    _check_loc_overrides("run_region_sweep", n, "region", prices=prices,
+                         hazards=hazards, notices=notices,
+                         spot_scales=spot_scales, job_scales=job_scales)
+    ep = _env_params(env, n)
     params = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params)
     vparams = {} if vector_params is None else jax.tree.map(
         lambda x: jnp.asarray(x, jnp.float32), dict(vector_params))
@@ -2449,14 +2903,14 @@ def run_region_sweep(
                 topology, kernel, preempt_on, n_events, chunk, burn_in, tile,
                 default_interpret() if interpret is None else interpret,
                 params_flat, rp_flat, k_flat, _raw_keys(keys), executor=impl,
-                rng=rng, tel=telemetry)
+                rng=rng, tel=telemetry, ep=ep)
         elif impl == "xla":
             stats = _run_region_sweep_jit(topology, kernel, preempt_on,
                                           n_events, chunk, burn_in, rng,
                                           params_flat, rp_flat, k_flat, keys,
-                                          tel=telemetry)
+                                          tel=telemetry, ep=ep)
         else:
             raise ValueError(
                 f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
-    out = summarize_region(stats, telemetry)
+    out = summarize_region(stats, telemetry, env=env)
     return _reshape_sweep(out, grid_shape, n_seeds)

@@ -1,0 +1,404 @@
+"""Environment timelines: piecewise-constant non-stationary supply.
+
+The engine through PR 6 holds every pool's price, preemption hazard,
+and spot availability constant per run.  This module adds the traced
+**environment-timeline axis**: a host-side descriptor
+(:class:`EnvTimeline`) of piecewise-constant segments — per-pool or
+per-region price multipliers, hazard multipliers, and availability —
+plus a Markov-modulated regime generator and chaos injectors
+(:func:`inject_storm` / :func:`inject_blackout` /
+:func:`inject_price_spike`) for sweeps.
+
+Device-side contract (how the engine consumes a timeline)
+---------------------------------------------------------
+
+``EnvTimeline.params(n_locs)`` lowers the descriptor to a small dict of
+arrays (``ep``) that rides through every executor exactly like the PR-5
+RNG slab: a plain traced input (broadcast per lane into the Pallas
+VMEM param block), looked up per event with the capture-free one-hot
+select :func:`env_row`.  The per-lane cursor is :class:`EnvState` — a
+*countdown* ``next_boundary`` clock in the engine's relative-time
+numerics plus the current segment index.
+
+**Boundary-as-event.**  Segment boundaries join the merged-renewal race
+as a fourth (highest-priority) clock: when ``next_boundary`` wins the
+``dt`` race the event is a pure boundary crossing — no queue activity,
+clocks age by ``dt``, the segment index advances, and the survived
+exponential clocks are rescaled by the old/new rate ratio (exact by
+memorylessness).  Because ``dt`` intervals therefore never span a
+segment boundary, storm/blackout time attribution is exact.  A
+single-segment timeline has ``next_boundary = 3e38``: the boundary
+clock never wins, every mask stays identically ``False``, every
+multiplier is exactly ``1.0`` — bit-for-bit the PR-6 engine (frozen
+test), and ``env=None`` skips all of it at trace time (lowered HLO
+byte-identical, like ``telemetry=None``).
+
+Blackouts keep arithmetic finite: availability 0 maps to a
+``BLACKOUT_SCALE``-inflated clock, not ``inf``, so recovery at the next
+boundary is a well-defined rescale.  Storms are *multiplicative* on the
+base hazard — a pool whose base hazard is 0 stays un-preemptible
+through a storm (document, don't surprise).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+INF = np.float32(3e38)
+
+# availability 0 inflates (not infinitizes) the spot clock: the clock
+# stays finite so the next boundary's old/new-rate rescale is exact and
+# recovery works; 1e15 × any draw still never wins a dt race
+BLACKOUT_SCALE = np.float32(1e15)
+
+SEG_NORMAL = 0
+SEG_STORM = 1
+SEG_BLACKOUT = 2
+SEG_SPIKE = 3
+
+_KINDS = (SEG_NORMAL, SEG_STORM, SEG_BLACKOUT, SEG_SPIKE)
+_KIND_NAMES = {SEG_NORMAL: "normal", SEG_STORM: "storm",
+               SEG_BLACKOUT: "blackout", SEG_SPIKE: "spike"}
+
+
+def _norm_value(v, field, si):
+    """Normalize one segment's value to a float scalar or per-loc tuple."""
+    if isinstance(v, (list, tuple, np.ndarray)):
+        vals = tuple(float(x) for x in np.asarray(v).reshape(-1))
+        if not vals:
+            raise ValueError(f"EnvTimeline.{field}[{si}] is empty")
+        bad = [x for x in vals if not math.isfinite(x) or x < 0]
+        if bad:
+            raise ValueError(
+                f"EnvTimeline.{field}[{si}] must be finite and >= 0, "
+                f"got {bad}")
+        return vals
+    v = float(v)
+    if not math.isfinite(v) or v < 0:
+        raise ValueError(
+            f"EnvTimeline.{field}[{si}] must be finite and >= 0, got {v}")
+    return v
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvTimeline:
+    """Piecewise-constant environment: segment ``i`` covers
+    ``[t_end[i-1], t_end[i])`` (with ``t_end[-1]`` open-ended at 3e38).
+
+    ``price_mult`` / ``hazard_mult`` / ``avail`` hold one entry per
+    segment, each a scalar (applies to every pool/region) or a per-loc
+    tuple; ``kind`` tags each segment ``SEG_NORMAL`` / ``SEG_STORM`` /
+    ``SEG_BLACKOUT`` / ``SEG_SPIKE`` for the `repro.obs` shock counters.
+    Hashable (nested tuples only) so it can sit beside the other static
+    descriptors, but the engine consumes only :meth:`params` — the
+    timeline itself never becomes a static jit argument.
+    """
+
+    t_end: tuple
+    price_mult: tuple = (1.0,)
+    hazard_mult: tuple = (1.0,)
+    avail: tuple = (1.0,)
+    kind: tuple = (SEG_NORMAL,)
+
+    def __post_init__(self):
+        t_end = tuple(float(t) for t in self.t_end)
+        if not t_end:
+            raise ValueError("EnvTimeline needs at least one segment")
+        if not (math.isinf(t_end[-1]) or t_end[-1] >= float(INF)):
+            raise ValueError(
+                "EnvTimeline's last segment must be open-ended: pass "
+                f"t_end[-1]=float('inf'), got {t_end[-1]} (append a "
+                "trailing segment holding the final regime)")
+        t_end = t_end[:-1] + (float(INF),)
+        for a, b in zip(t_end, t_end[1:]):
+            if not a < b:
+                raise ValueError(
+                    f"EnvTimeline.t_end must be strictly increasing, "
+                    f"got {a} before {b}")
+        if t_end[0] <= 0:
+            raise ValueError(
+                f"EnvTimeline.t_end[0] must be > 0, got {t_end[0]}")
+        s = len(t_end)
+        fields = {}
+        for name in ("price_mult", "hazard_mult", "avail"):
+            vals = getattr(self, name)
+            if not isinstance(vals, (list, tuple)):
+                vals = (vals,) * s
+            if len(vals) != s:
+                raise ValueError(
+                    f"EnvTimeline.{name} has {len(vals)} entries for "
+                    f"{s} segments")
+            fields[name] = tuple(
+                _norm_value(v, name, i) for i, v in enumerate(vals))
+        kind = self.kind
+        if not isinstance(kind, (list, tuple)):
+            kind = (kind,) * s
+        if len(kind) != s:
+            raise ValueError(
+                f"EnvTimeline.kind has {len(kind)} entries for {s} segments")
+        kind = tuple(int(k) for k in kind)
+        bad = [k for k in kind if k not in _KINDS]
+        if bad:
+            raise ValueError(
+                f"EnvTimeline.kind entries must be in {_KINDS} "
+                f"(normal/storm/blackout/spike), got {bad}")
+        object.__setattr__(self, "t_end", t_end)
+        object.__setattr__(self, "kind", kind)
+        for name, vals in fields.items():
+            object.__setattr__(self, name, vals)
+
+    # ---------------------------------------------------------------- host
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.t_end)
+
+    @staticmethod
+    def constant(price_mult=1.0, hazard_mult=1.0, avail=1.0) -> "EnvTimeline":
+        """One open-ended segment (the stationary PR-6 world)."""
+        return EnvTimeline(t_end=(float("inf"),), price_mult=(price_mult,),
+                           hazard_mult=(hazard_mult,), avail=(avail,))
+
+    def span(self) -> float:
+        """Time of the last finite boundary (0.0 for a single segment)."""
+        return 0.0 if self.n_segments == 1 else self.t_end[-2]
+
+    def count(self, kind: int) -> int:
+        return sum(1 for k in self.kind if k == kind)
+
+    def count_storms(self) -> int:
+        return self.count(SEG_STORM)
+
+    def count_blackouts(self) -> int:
+        return self.count(SEG_BLACKOUT)
+
+    def count_spikes(self) -> int:
+        return self.count(SEG_SPIKE)
+
+    def segments(self):
+        """Host iterator of (t_start, t_end, price, hazard, avail, kind)."""
+        t0 = 0.0
+        for i, t1 in enumerate(self.t_end):
+            yield (t0, t1, self.price_mult[i], self.hazard_mult[i],
+                   self.avail[i], self.kind[i])
+            t0 = t1
+
+    # -------------------------------------------------------------- device
+
+    def params(self, n_locs: int) -> dict:
+        """Lower to the traced ``ep`` dict consumed by the event loops.
+
+        ``t_end (S,) f32``, ``kind (S,) i32``, and ``(S, n_locs) f32``
+        grids for price / hazard / avail (scalars broadcast across locs).
+        """
+        def grid(vals, name):
+            rows = []
+            for si, v in enumerate(vals):
+                if isinstance(v, tuple):
+                    if len(v) != n_locs:
+                        raise ValueError(
+                            f"EnvTimeline.{name}[{si}] has {len(v)} "
+                            f"per-loc entries but the scenario has "
+                            f"{n_locs} pools/regions")
+                    rows.append(np.asarray(v, np.float32))
+                else:
+                    rows.append(np.full((n_locs,), v, np.float32))
+            return jnp.asarray(np.stack(rows))
+
+        return {
+            "t_end": jnp.asarray(np.asarray(self.t_end, np.float32)),
+            "price": grid(self.price_mult, "price_mult"),
+            "hazard": grid(self.hazard_mult, "hazard_mult"),
+            "avail": grid(self.avail, "avail"),
+            "kind": jnp.asarray(np.asarray(self.kind, np.int32)),
+        }
+
+
+class EnvState(NamedTuple):
+    """Per-lane timeline cursor: countdown to the next boundary (the
+    engine works in relative time; an absolute-t cursor would lose
+    float32 precision as t grows) + current segment index."""
+
+    next_boundary: jnp.ndarray   # f32, counts down with every dt
+    seg: jnp.ndarray             # i32 segment index
+
+
+def init_env_state(ep) -> EnvState:
+    return EnvState(next_boundary=ep["t_end"][0], seg=jnp.int32(0))
+
+
+def env_row(arr, seg):
+    """Segment lookup as a capture-free one-hot reduce (Pallas-safe:
+    no gather, no captured constants; works under vmap)."""
+    onehot = jax.lax.iota(jnp.int32, arr.shape[0]) == seg
+    if arr.ndim == 1:
+        return jnp.sum(jnp.where(onehot, arr, jnp.zeros((), arr.dtype)))
+    return jnp.sum(jnp.where(onehot[:, None], arr, jnp.zeros((), arr.dtype)),
+                   axis=0)
+
+
+def inv_avail(avail_row):
+    """1/avail with blackout (avail == 0) mapped to BLACKOUT_SCALE.
+
+    Spot inter-arrival clocks scale by this: avail 1 → exactly ×1.0
+    (bitwise no-op), avail 0 → clocks too large to win any dt race but
+    finite, so the boundary rescale back to avail > 0 is exact.
+    """
+    safe = jnp.where(avail_row > 0, avail_row, jnp.ones((), avail_row.dtype))
+    return jnp.where(avail_row > 0, 1.0 / safe, BLACKOUT_SCALE)
+
+
+def clock_rescale(old_rate_mult, new_rate_mult):
+    """Exponential-clock ratio for a boundary crossing: a survived
+    Exp(r_old) residual re-expressed under r_new is t·(r_old/r_new)
+    (memorylessness).  Zero rates on either side leave the clock
+    untouched — the inflated/zero-rate representation handles those."""
+    both = (old_rate_mult > 0) & (new_rate_mult > 0)
+    safe_new = jnp.where(both, new_rate_mult,
+                         jnp.ones((), new_rate_mult.dtype))
+    return jnp.where(both, old_rate_mult / safe_new,
+                     jnp.ones((), new_rate_mult.dtype))
+
+
+# --------------------------------------------------------------------------
+# generators + chaos injectors (host-side; compose before .params())
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Regime:
+    """One state of the Markov modulator."""
+
+    price_mult: float = 1.0
+    hazard_mult: float = 1.0
+    avail: float = 1.0
+    kind: int = SEG_NORMAL
+    mean_hold: float = 1.0
+
+
+def markov_timeline(regimes, *, horizon, seed=0, transition=None,
+                    start=0) -> EnvTimeline:
+    """Markov-modulated regime switching: exponential holding times per
+    regime, jump matrix ``transition`` (row-stochastic; default uniform
+    over the *other* regimes), truncated at ``horizon`` with the regime
+    then active held open-ended."""
+    regs = tuple(regimes)
+    if len(regs) < 2:
+        raise ValueError("markov_timeline needs >= 2 regimes")
+    r = len(regs)
+    if transition is None:
+        transition = (np.ones((r, r)) - np.eye(r)) / (r - 1)
+    transition = np.asarray(transition, float)
+    if transition.shape != (r, r) or not np.allclose(
+            transition.sum(axis=1), 1.0):
+        raise ValueError(
+            f"transition must be a row-stochastic ({r}, {r}) matrix")
+    if horizon <= 0:
+        raise ValueError(f"horizon must be > 0, got {horizon}")
+    rng = np.random.default_rng(seed)
+    t, cur = 0.0, int(start)
+    t_end, pm, hm, av, kd = [], [], [], [], []
+    while t < horizon:
+        g = regs[cur]
+        t = t + rng.exponential(g.mean_hold)
+        t_end.append(min(t, float(horizon)) if t < horizon else float("inf"))
+        pm.append(g.price_mult)
+        hm.append(g.hazard_mult)
+        av.append(g.avail)
+        kd.append(g.kind)
+        cur = int(rng.choice(r, p=transition[cur]))
+    if not math.isinf(t_end[-1]):     # pragma: no cover - defensive
+        t_end[-1] = float("inf")
+    return EnvTimeline(t_end=tuple(t_end), price_mult=tuple(pm),
+                       hazard_mult=tuple(hm), avail=tuple(av),
+                       kind=tuple(kd))
+
+
+def _edit_loc(value, loc, n_locs, fn):
+    """Apply ``fn`` at one loc (expanding scalars) or everywhere."""
+    if loc is None:
+        if isinstance(value, tuple):
+            return tuple(fn(v) for v in value)
+        return fn(value)
+    if not isinstance(value, tuple):
+        if n_locs is None:
+            raise ValueError(
+                "loc-targeted injection on a scalar-valued timeline "
+                "needs n_locs= to expand it to per-loc values")
+        value = (value,) * n_locs
+    if not 0 <= loc < len(value):
+        raise ValueError(f"loc {loc} out of range for {len(value)} locs")
+    return tuple(fn(v) if i == loc else v for i, v in enumerate(value))
+
+
+def _splice(tl: EnvTimeline, t0: float, t1: float, kind: int,
+            edit) -> EnvTimeline:
+    """Cut ``[t0, t1)`` into the timeline and apply ``edit`` inside it."""
+    if not (0 <= t0 < t1):
+        raise ValueError(f"need 0 <= t0 < t1, got t0={t0}, t1={t1}")
+    if not math.isfinite(t1):
+        raise ValueError("injection windows must be finite (t1 < inf)")
+    t_end, pm, hm, av, kd = [], [], [], [], []
+
+    def emit(end, p, h, a, k):
+        t_end.append(end)
+        pm.append(p)
+        hm.append(h)
+        av.append(a)
+        kd.append(k)
+
+    for s0, s1, p, h, a, k in tl.segments():
+        cuts = sorted({s1, *(c for c in (t0, t1) if s0 < c < s1)})
+        lo = s0
+        for hi in cuts:
+            if t0 <= lo and hi <= t1:
+                emit(hi, *edit(p, h, a), kind)
+            else:
+                emit(hi, p, h, a, k)
+            lo = hi
+    return EnvTimeline(t_end=tuple(t_end), price_mult=tuple(pm),
+                       hazard_mult=tuple(hm), avail=tuple(av),
+                       kind=tuple(kd))
+
+
+def inject_storm(tl: EnvTimeline, t0: float, t1: float, *,
+                 hazard_mult: float = 10.0, loc=None,
+                 n_locs=None) -> EnvTimeline:
+    """Preemption storm: multiply the hazard by ``hazard_mult`` over
+    ``[t0, t1)`` (at one loc, or everywhere) and tag it SEG_STORM.
+    Multiplicative: a pool with base hazard 0 stays un-preemptible."""
+    if hazard_mult <= 0:
+        raise ValueError(f"hazard_mult must be > 0, got {hazard_mult}")
+    return _splice(
+        tl, t0, t1, SEG_STORM,
+        lambda p, h, a: (p, _edit_loc(h, loc, n_locs,
+                                      lambda v: v * hazard_mult), a))
+
+
+def inject_blackout(tl: EnvTimeline, t0: float, t1: float, *, loc=None,
+                    n_locs=None) -> EnvTimeline:
+    """Capacity blackout: availability 0 over ``[t0, t1)`` (at one loc,
+    or everywhere), tagged SEG_BLACKOUT."""
+    return _splice(
+        tl, t0, t1, SEG_BLACKOUT,
+        lambda p, h, a: (p, h, _edit_loc(a, loc, n_locs, lambda v: 0.0)))
+
+
+def inject_price_spike(tl: EnvTimeline, t0: float, t1: float, *,
+                       price_mult: float = 3.0, loc=None,
+                       n_locs=None) -> EnvTimeline:
+    """Price spike: multiply spot price by ``price_mult`` over
+    ``[t0, t1)``, tagged SEG_SPIKE."""
+    if price_mult <= 0:
+        raise ValueError(f"price_mult must be > 0, got {price_mult}")
+    return _splice(
+        tl, t0, t1, SEG_SPIKE,
+        lambda p, h, a: (_edit_loc(p, loc, n_locs,
+                                   lambda v: v * price_mult), h, a))

@@ -373,3 +373,108 @@ class NoticeAwareKernel:
         within = checkpoint_within_notice(ckpt, notice)
         readmit = u[0] < three_phase_admit_prob(qlen, params["r"])
         return within & readmit
+
+
+def _failover_alive(target, alive, price):
+    """Re-target a dead loc to the cheapest alive one (identity when the
+    chosen loc is alive; position 0 when nothing is — callers gate on
+    ``jnp.any(alive)``)."""
+    cheapest_alive = jnp.argmin(jnp.where(alive, price, _INF)).astype(
+        jnp.int32)
+    return jnp.where(alive[target], jnp.asarray(target, jnp.int32),
+                     cheapest_alive)
+
+
+@dataclasses.dataclass(frozen=True)
+class PanicKernel:
+    """Blackout-failover wrapper: degrade gracefully when supply goes dark.
+
+    A blacked-out pool/region's slot rate is exactly zero (the environment
+    timeline multiplies rates by availability before the kernel sees them),
+    so ``rate > 0`` is the kernel-visible liveness signal.  PanicKernel
+    delegates every decision to ``base`` and then repairs it:
+
+      * an admission targeting a dead pool is re-routed to the cheapest
+        alive pool;
+      * when EVERY pool is dark the job is rejected outright, falling back
+        to on-demand at cost ``k`` — the engine's degraded mode;
+      * region routing re-targets dead regions the same way (wrapping a
+        routing base repairs its rule; wrapping a non-routing base adds a
+        home-unless-dead rule, so any kernel becomes blackout-tolerant).
+
+    The failover consumes no randomness — slab layouts are the base
+    kernel's — and with no blackout in the timeline ``alive`` is all-True,
+    making every repair the identity: stats are bitwise the base kernel's
+    (frozen in tests/test_env.py).
+    """
+
+    base: object  # any PolicyKernel / MarketPolicyKernel / routing kernel
+
+    # --------------------------------------------------------- admission
+    def admit_market(self, params, qlen, pool_state, key):
+        if hasattr(self.base, "admit_market"):
+            admit, budget, pool = self.base.admit_market(
+                params, qlen, pool_state, key)
+        else:  # legacy two-tuple kernel: engine would pin it to pool 0
+            admit, budget = self.base.admit(params, qlen, key)
+            pool = jnp.zeros((), jnp.int32)
+        alive = pool_state.rate > 0.0
+        pool = _failover_alive(pool, alive, pool_state.price)
+        return admit & jnp.any(alive), budget, pool
+
+    def on_preempt(self, params, age, notice, qlen, key):
+        if hasattr(self.base, "on_preempt"):
+            return self.base.on_preempt(params, age, notice, qlen, key)
+        return jnp.zeros((), jnp.bool_)
+
+    # ----------------------------------------------------------- routing
+    def route(self, params, qlens, region_state, key):
+        if hasattr(self.base, "route"):
+            target = self.base.route(params, qlens, region_state, key)
+        else:
+            target = region_state.home
+        alive = region_state.rate > 0.0
+        return _failover_alive(target, alive, region_state.price)
+
+    # -------------------------------------------------- slab-stream twins
+    def slab_cols(self, hook, n):
+        if hook == "route":
+            if not hasattr(self.base, "route"):
+                return 0  # home fallback draws nothing
+            return kernel_slab_cols(self.base, "route", n)
+        if hook == "admit_market" and not hasattr(self.base, "admit_market"):
+            return kernel_slab_cols(self.base, "admit", n)
+        if hook == "on_preempt" and not hasattr(self.base, "on_preempt"):
+            return 0  # defect fallback draws nothing
+        return kernel_slab_cols(self.base, hook, n)
+
+    def admit_market_u(self, params, qlen, pool_state, u):
+        if hasattr(self.base, "admit_market"):
+            admit, budget, pool = self.base.admit_market_u(
+                params, qlen, pool_state, u)
+        else:
+            admit, budget = self.base.admit_u(params, qlen, u)
+            pool = jnp.zeros((), jnp.int32)
+        alive = pool_state.rate > 0.0
+        pool = _failover_alive(pool, alive, pool_state.price)
+        return admit & jnp.any(alive), budget, pool
+
+    def on_preempt_u(self, params, age, notice, qlen, u):
+        if hasattr(self.base, "on_preempt"):
+            return self.base.on_preempt_u(params, age, notice, qlen, u)
+        return jnp.zeros((), jnp.bool_)
+
+    def route_u(self, params, qlens, region_state, u):
+        if hasattr(self.base, "route"):
+            target = self.base.route_u(params, qlens, region_state, u)
+        else:
+            target = region_state.home
+        alive = region_state.rate > 0.0
+        return _failover_alive(target, alive, region_state.price)
+
+    def __getattr__(self, name):
+        # delegate the hooks the wrapper doesn't repair, so the engine's
+        # hasattr dispatch sees the base's protocol for them
+        if name in ("admit", "admit_u", "init_params"):
+            return getattr(object.__getattribute__(self, "base"), name)
+        raise AttributeError(name)

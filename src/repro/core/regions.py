@@ -278,22 +278,42 @@ def choose_region_u(choice: str, view: RegionView, params,
     return choose_region(choice, view, params, key=None)
 
 
-def host_route(choice: str, *, prices, rates, qlens, home: int = 0) -> int:
+def host_route(choice: str, *, prices, rates, qlens, home: int = 0,
+               alive=None) -> int:
     """Host-scalar twin of the deterministic :func:`choose_region` rules.
 
     The cluster orchestrator routes one live job at a time; an un-jitted
     jnp round-trip costs ~1 ms per call (same dual-backend reasoning as
     ``three_phase_admit_prob``).  Randomized rules (uniform/weighted) stay
     on the traced path — the host consumer passes its own rng draw instead.
+
+    ``alive`` (optional bool mask) restricts every rule to live regions —
+    the host twin of :class:`repro.core.market.PanicKernel`'s failover: a
+    dead ``home`` falls back to the cheapest alive region, and argmin/argmax
+    rules never pick a dead one.  All-dead raises ``RuntimeError`` (the
+    orchestrator's cue to run the job on-demand).
     """
+    prices = np.asarray(prices, np.float64)
+    rates = np.asarray(rates, np.float64)
+    qlens = np.asarray(qlens, np.float64)
+    if alive is not None:
+        alive = np.asarray(alive, bool)
+        if not alive.any():
+            raise RuntimeError("host_route: no region alive")
+        dead = ~alive
+        if choice == "home" and dead[int(home)]:
+            choice = "cheapest"  # failover: home is dark
+        prices = np.where(dead, np.inf, prices)
+        rates = np.where(dead, -np.inf, rates)
+        qlens = np.where(dead, np.inf, qlens)
     if choice == "home":
         return int(home)
     if choice == "cheapest":
-        return int(np.argmin(np.asarray(prices)))
+        return int(np.argmin(prices))
     if choice == "fastest":
-        return int(np.argmax(np.asarray(rates)))
+        return int(np.argmax(rates))
     if choice == "least_loaded":
-        return int(np.argmin(np.asarray(qlens)))
+        return int(np.argmin(qlens))
     raise ValueError(f"unknown host routing rule {choice!r}")
 
 

@@ -11,11 +11,16 @@ blocks as the base stats, through all three executors.  ``telemetry=None``
 zero cost, bitwise-reproduced stats (frozen in tests/test_obs.py).
 
 * :mod:`repro.obs.stats` — device accumulators + host summaries.
+* :mod:`repro.obs.shocks` — shock/degradation counters for the
+  environment-timeline axis (``env=``): boundaries crossed, storms /
+  blackouts / spikes entered, shock dwell times, degraded admissions.
 * :mod:`repro.obs.trace` — event tracing (device rings / host recorder)
   and the Chrome/Perfetto exporter.
 * :mod:`repro.obs.timing` — compile-vs-steady timing, BENCH provenance
   stamps, profiler trace scopes.
 """
+from .shocks import (ENV_INT_STATS, EnvWindowStats, env_update, env_zeros,
+                     summarize_env)
 from .stats import (EVENT_TYPES, TEL_INT_STATS, Telemetry,
                     TelemetryWindowStats, sketch_quantile,
                     summarize_telemetry, telemetry_update, telemetry_zeros)
@@ -24,13 +29,18 @@ from .trace import (TraceRecorder, device_trace_records, to_perfetto,
                     write_perfetto)
 
 __all__ = [
+    "ENV_INT_STATS",
     "EVENT_TYPES",
+    "EnvWindowStats",
     "TEL_INT_STATS",
     "Telemetry",
     "TelemetryWindowStats",
     "TraceRecorder",
     "annotate",
     "device_trace_records",
+    "env_update",
+    "env_zeros",
+    "summarize_env",
     "provenance",
     "sketch_quantile",
     "summarize_telemetry",

@@ -1,0 +1,124 @@
+"""The frozen lowering matrix for the env=None zero-cost contract.
+
+Shared by ``tools/freeze_hlo_baseline.py`` (which writes
+``tests/data/hlo_pr6.json`` from the pre-env tree) and
+``tests/test_env.py`` (which re-lowers the same matrix and compares
+sha256 digests byte-for-byte).  Lowered StableHLO text is
+compiler-version specific, so the baseline records the jax version and
+default backend; the comparison is skipped when either differs — inside
+the pinned container (and any matching CI runner) it is exact.
+
+Every entry lowers one of the engine's module-scope jit wrappers with
+``env``/``telemetry`` off: if threading the environment-timeline axis
+through the engine perturbs even one op in the ``env=None`` program, the
+digest moves and the frozen test fails.
+"""
+from __future__ import annotations
+
+import hashlib
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core.arrivals import Exponential
+from repro.core.market import NoticeAwareKernel, SpotMarket, SpotPool
+from repro.core.policies import ThreePhaseKernel
+from repro.core.regions import Region, RegionTopology, RoutingKernel
+
+_N_EVENTS, _CHUNK, _BURN = 3000, 1024, 512
+
+# jit entry names embed the wrapper's function name; normalize them so a
+# pure rename (no program change) cannot masquerade as a lowering change
+_NAME = re.compile(r"jit__\w+")
+
+
+def _digest(lowered) -> str:
+    text = _NAME.sub("jit_ENTRY", lowered.as_text())
+    return hashlib.sha256(text.encode()).hexdigest()
+
+
+def _market() -> SpotMarket:
+    return SpotMarket(pools=(
+        SpotPool(arrival=Exponential(0.9), price=1.0, hazard=0.3, notice=0.1),
+        SpotPool(arrival=Exponential(0.5), price=0.6, hazard=0.8, notice=0.3),
+    ))
+
+
+def _topo() -> RegionTopology:
+    return RegionTopology(regions=(
+        Region(job=Exponential(1.2), spot=Exponential(0.9), price=1.0,
+               hazard=0.3, notice=0.1, rmax=4),
+        Region(job=Exponential(0.7), spot=Exponential(0.5), price=0.6,
+               hazard=0.8, notice=0.3, rmax=4),
+    ))
+
+
+def lowering_digests() -> dict:
+    """sha256 of the lowered text for every (loop × executor × rng) cell."""
+    job, spot = Exponential(1.2), Exponential(0.9)
+    kern = ThreePhaseKernel()
+    mkern = NoticeAwareKernel(checkpoint_time=0.05)
+    rkern = RoutingKernel(base=mkern, choice="cheapest")
+    market, topo = _market(), _topo()
+    mp, rp = market.params(), topo.params()
+    params = {"r": jnp.float32(2.0)}
+    k = jnp.float32(12.0)
+    key = jax.random.key(0)
+    keys = jax.random.split(key, 2)
+    rkeys = jax.random.key_data(keys)
+    pflat = {"r": jnp.full((3,), 2.0, jnp.float32)}
+    kflat = jnp.full((3,), 12.0, jnp.float32)
+    mp_f = jax.tree.map(lambda a: jnp.broadcast_to(a, (3,) + a.shape), mp)
+    rp_f = jax.tree.map(lambda a: jnp.broadcast_to(a, (3,) + a.shape), rp)
+
+    out = {}
+    for rng in ("split", "slab"):
+        out[f"sim/{rng}"] = _digest(engine._run_sim_jit.lower(
+            job, spot, kern, 4, _N_EVENTS, _CHUNK, 0, rng, params, k, key))
+        out[f"sweep/{rng}"] = _digest(engine._run_sweep_jit.lower(
+            job, spot, kern, 4, _N_EVENTS, _CHUNK, _BURN, rng, pflat, kflat,
+            keys))
+        out[f"market_sim/{rng}"] = _digest(engine._run_market_sim_jit.lower(
+            job, market, mkern, 4, True, _N_EVENTS, _CHUNK, 0, rng, params,
+            mp, k, key))
+        out[f"market_sweep/{rng}"] = _digest(
+            engine._run_market_sweep_jit.lower(
+                job, market, mkern, 4, True, _N_EVENTS, _CHUNK, _BURN, rng,
+                pflat, mp_f, kflat, keys))
+        out[f"region_sim/{rng}"] = _digest(engine._run_region_sim_jit.lower(
+            topo, rkern, True, _N_EVENTS, _CHUNK, 0, rng, params, rp, k, key))
+        out[f"region_sweep/{rng}"] = _digest(
+            engine._run_region_sweep_jit.lower(
+                topo, rkern, True, _N_EVENTS, _CHUNK, _BURN, rng, pflat,
+                rp_f, kflat, keys))
+        for ex in ("pallas", "ref"):
+            out[f"sweep_{ex}/{rng}"] = _digest(
+                engine._run_sweep_pallas_jit.lower(
+                    job, spot, kern, 4, _N_EVENTS, _CHUNK, _BURN, 2, True,
+                    pflat, kflat, rkeys, executor=ex, rng=rng))
+            out[f"market_sweep_{ex}/{rng}"] = _digest(
+                engine._run_market_sweep_pallas_jit.lower(
+                    job, market, mkern, 4, True, _N_EVENTS, _CHUNK, _BURN, 2,
+                    True, pflat, mp_f, kflat, rkeys, executor=ex, rng=rng))
+            out[f"region_sweep_{ex}/{rng}"] = _digest(
+                engine._run_region_sweep_pallas_jit.lower(
+                    topo, rkern, True, _N_EVENTS, _CHUNK, _BURN, 2, True,
+                    pflat, rp_f, kflat, rkeys, executor=ex, rng=rng))
+    return out
+
+
+def environment_tag() -> dict:
+    return {"jax_version": jax.__version__,
+            "backend": jax.default_backend()}
+
+if __name__ == "__main__":
+    # subprocess entry for tests/test_env.py: lowering must happen in a
+    # fresh interpreter because other test modules mutate process-global
+    # backend state (XLA_FLAGS device-count overrides) that perturbs
+    # lowered text
+    import json
+
+    print(json.dumps({"tag": environment_tag(),
+                      "digests": lowering_digests()}))

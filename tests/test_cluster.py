@@ -93,3 +93,38 @@ def test_controller_r_moves_toward_delay_budget():
     for _ in range(12):
         ctl.on_job_complete(0.0)
     assert ctl.r > r_low
+
+
+def test_region_kill_mid_run_routes_around_and_revives():
+    """Supply-shock regression: kill the cheapest region mid-run — its
+    slots stop serving, new admissions route to the live region, and
+    revival resumes service of the stranded queue.  One region is always
+    alive, so nothing is ever force-degraded."""
+    from repro.cluster.orchestrator import MultiRegionCluster
+    from repro.core import Region, RegionTopology
+
+    topo = RegionTopology(regions=(
+        Region(job=Exponential(1.0), spot=Exponential(1.5), price=1.0,
+               rmax=8),
+        Region(job=Exponential(1.0), spot=Exponential(1.5), price=0.6,
+               rmax=8),
+    ))
+    ctl = OnlineAdmissionController(delta=5.0, eta=0.0, r0=6.0,
+                                    window_jobs=64)
+    cluster = MultiRegionCluster(topology=topo, controller=ctl, k_cost=K,
+                                 route="cheapest", seed=11)
+    cluster.run(3000)
+    before = list(cluster.stats.region_served)
+    assert before[1] > 0  # cheapest routing favours region 1
+
+    cluster.kill_region(1)
+    cluster.run(3000)
+    mid = list(cluster.stats.region_served)
+    assert mid[1] == before[1]  # dark region serves nothing
+    assert mid[0] > before[0]  # live region absorbs the routed work
+
+    cluster.revive_region(1)
+    cluster.run(3000)
+    after = list(cluster.stats.region_served)
+    assert after[1] > mid[1]  # revived region drains its stranded queue
+    assert cluster.stats.degraded_jobs == 0  # a live region always existed

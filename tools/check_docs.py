@@ -18,7 +18,8 @@ import re
 import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
-DEFAULT_FILES = ["README.md", "docs/kernels.md", "docs/observability.md"]
+DEFAULT_FILES = ["README.md", "docs/kernels.md", "docs/observability.md",
+                 "docs/robustness.md"]
 
 _FENCE = re.compile(r"```(\w+)?\n(.*?)```", re.DOTALL)
 

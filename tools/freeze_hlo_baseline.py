@@ -1,0 +1,34 @@
+"""Freeze the env=None lowering digests to tests/data/hlo_pr6.json.
+
+    PYTHONPATH=src python tools/freeze_hlo_baseline.py
+
+Run from a tree whose ``env=None`` program is the reference (the PR-6
+engine, or any tree whose env-off lowering is known-good); the frozen
+test tests/test_env.py::test_env_none_lowering_unchanged then pins every
+subsequent tree's env-off lowering against it byte-for-byte (same jax
+version + backend only — the digests are compiler-version specific).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tests"))
+
+from _hlo_matrix import environment_tag, lowering_digests  # noqa: E402
+
+
+def main() -> None:
+    payload = {**environment_tag(), "digests": lowering_digests()}
+    out = REPO / "tests" / "data" / "hlo_pr6.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"[freeze_hlo_baseline] wrote {len(payload['digests'])} digests "
+          f"to {out} (jax {payload['jax_version']}, "
+          f"backend {payload['backend']})")
+
+
+if __name__ == "__main__":
+    main()
