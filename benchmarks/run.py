@@ -29,6 +29,7 @@ def main() -> None:
     from benchmarks import engine_kernel_bench
     from benchmarks import env_bench
     from benchmarks import event_rng_bench
+    from benchmarks import fleet_bench
     from benchmarks import market_bench
     from benchmarks import obs_bench
     from benchmarks import paper_benches as pb
@@ -45,6 +46,7 @@ def main() -> None:
         event_rng_bench.set_scale(0.1)
         obs_bench.set_scale(0.1)
         env_bench.set_scale(0.1)
+        fleet_bench.set_scale(0.1)
 
     benches = [
         pb.bench_theorem1_cost_law,
@@ -61,6 +63,7 @@ def main() -> None:
         event_rng_bench.bench_event_rng,  # writes BENCH_event_rng.json
         obs_bench.bench_telemetry_overhead,  # writes BENCH_obs.json
         env_bench.bench_env_overhead,  # writes BENCH_env.json
+        fleet_bench.bench_fleet_scaling,  # writes BENCH_fleet.json
         bench_engine_roofline,  # reads them back
         bench_roofline,
     ]

@@ -466,7 +466,8 @@ class SpotCluster:
 
     # ---------------------------------------------------- on-device what-if
     def what_if_sweep(self, rs, *, n_events: int = 20_000, n_seeds: int = 2,
-                      k=None, key=None, telemetry=None) -> dict:
+                      k=None, key=None, telemetry=None, shard: str = "none",
+                      mesh=None) -> dict:
         """Sweep admission knobs against THIS cluster's market, on-device.
 
         Runs :func:`repro.core.engine.run_market_sweep` with the cluster's
@@ -474,7 +475,10 @@ class SpotCluster:
         what-if grid for "where should the controller's r sit" is one
         compiled program, not a host loop.  ``telemetry=`` forwards a
         :class:`repro.obs.Telemetry` so the grid also reports P50/P99
-        waits and per-pool counters.
+        waits and per-pool counters.  ``shard="lanes"`` (with an optional
+        ``mesh``) partitions the what-if lane axis across devices exactly
+        as in :func:`repro.core.engine.run_sweep` — wide grids answer at
+        fleet scale (docs/scaling.md).
         """
         import jax
         import jax.numpy as jnp
@@ -489,7 +493,7 @@ class SpotCluster:
                 self.jobs, self.market, kern,
                 {"r": jnp.asarray(rs, jnp.float32)},
                 k=self.k if k is None else k, n_events=n_events, key=key,
-                n_seeds=n_seeds, telemetry=telemetry,
+                n_seeds=n_seeds, telemetry=telemetry, shard=shard, mesh=mesh,
             )
 
     # ----------------------------------------------------------- stragglers
@@ -731,14 +735,16 @@ class MultiRegionCluster:
     # ---------------------------------------------------- on-device what-if
     def what_if_sweep(self, rs, *, n_events: int = 20_000, n_seeds: int = 2,
                       k=None, key=None, choice: str | None = None,
-                      telemetry=None) -> dict:
+                      telemetry=None, shard: str = "none", mesh=None) -> dict:
         """Sweep admission knobs against THIS cluster's topology, on-device.
 
         Runs :func:`repro.core.engine.run_region_sweep` with the cluster's
         topology, routing rule, and recovery parameters — one compiled
         program for the whole what-if grid, not a host loop.  ``telemetry=``
         forwards a :class:`repro.obs.Telemetry` so the grid also reports
-        P50/P99 waits and per-region counters.
+        P50/P99 waits and per-region counters.  ``shard="lanes"`` (with an
+        optional ``mesh=``) partitions the what-if grid's lane axis across
+        local devices — same contract as the engine entry points.
         """
         import jax
         import jax.numpy as jnp
@@ -755,5 +761,5 @@ class MultiRegionCluster:
             return run_region_sweep(
                 self.topology, kern, {"r": jnp.asarray(rs, jnp.float32)},
                 k=self.k if k is None else k, n_events=n_events, key=key,
-                n_seeds=n_seeds, telemetry=telemetry,
+                n_seeds=n_seeds, telemetry=telemetry, shard=shard, mesh=mesh,
             )

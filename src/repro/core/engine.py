@@ -133,6 +133,8 @@ from repro.core.env import (EnvState, EnvTimeline, clock_rescale, env_row,
                             init_env_state, inv_avail)
 from repro.core.market import PoolState, SpotMarket, as_market
 from repro.core.regions import RegionTopology, RegionView, as_topology
+from repro.distributed.sharding import (lane_mesh, lane_spec, pad_lanes,
+                                        shard_map_1d)
 from repro.obs.shocks import env_update, env_zeros, summarize_env
 from repro.kernels.sweep import (batched_events, batched_event_windows_ref,
                                  default_interpret)
@@ -851,6 +853,138 @@ def _run_sweep_pallas_jit(job, spot, kernel, rmax, n_events, chunk_events,
     return _unflatten_lanes(stats, g, s)
 
 
+def _check_shard(name: str, shard: str, mesh) -> None:
+    """Actionable errors for the ``shard=`` axis (every sweep entry point)."""
+    if shard not in ("none", "lanes"):
+        raise ValueError(
+            f"{name}: unknown shard {shard!r} (expected 'none'|'lanes')")
+    if mesh is not None:
+        if shard == "none":
+            raise ValueError(
+                f"{name}: mesh= requires shard='lanes' (shard='none' runs "
+                f"unsharded)")
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"{name}: lane sharding needs a 1-D mesh, got axes "
+                f"{mesh.axis_names}")
+
+
+def _pad_count(lanes: int, mesh) -> int:
+    """Lanes to add so the flat lane axis divides the mesh evenly."""
+    return -lanes % mesh.size
+
+
+def _sweep_lanes(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
+                 tile, interpret, params_f, k_f, keys_f, *, executor, rng,
+                 tel=None, ep=None):
+    """One shard's worth of flat lanes through the requested executor.
+
+    The per-shard body of the ``shard="lanes"`` dispatch: arguments are
+    already flat lane-leading (grid-major, seed fastest — the
+    :func:`_flat_lane_args` layout; ``keys_f`` are raw uint32 key words),
+    and the returned stats leaves are ``(lanes, windows, ...)``.  The
+    ``"pallas"``/``"ref"`` branches mirror :func:`_run_sweep_pallas_jit`'s
+    body op-for-op, so per-lane trajectories are bitwise the unsharded
+    ones.  The ``"xla"`` branch runs the same per-lane program as
+    :func:`_run_sweep_jit`'s ``one`` but under a single flat vmap —
+    materialized lanes instead of broadcast nesting, which keeps integer
+    stats bitwise and float sums within ~ulp of the unsharded nested-vmap
+    program (the PR-3 layout caveat; see :func:`_flat_lane_args`).
+    """
+    layout = _engine_layout(job, spot, kernel) if rng == "slab" else None
+    if executor == "xla":
+        def one(p, kc, key):
+            state = init_engine_state(key, job, spot, rmax, ep=ep)
+            if ep is not None:
+                state = (state, init_env_state(ep))
+            if burn_in:
+                state, _ = run_window(job, spot, kernel, rmax, state, p, kc,
+                                      burn_in, layout=layout, tel=tel, ep=ep)
+                state = (_rebase_order(state) if ep is None
+                         else _rebase_order_env(state))
+            _, stats = run_chunked(job, spot, kernel, rmax, state, p, kc,
+                                   n_events, chunk_events, layout=layout,
+                                   tel=tel, ep=ep)
+            return stats
+
+        return jax.vmap(one)(params_f, k_f, keys_f)
+
+    params_b = {"params": params_f, "k": k_f}
+    state0 = jax.vmap(
+        lambda key: init_engine_state(key, job, spot, rmax, ep=ep))(keys_f)
+    plan = _window_plan(n_events, chunk_events, burn_in)
+    xs = _lane_slabs(state0, plan, layout) if layout is not None else None
+    if ep is not None:
+        params_b["ep"], es0 = _env_lane_blocks(ep, keys_f.shape[0])
+        state0 = (state0, es0)
+
+    if layout is not None:
+        def step(carry, stats, p, x):
+            return _engine_event(job, spot, kernel, rmax, layout, carry,
+                                 stats, p["params"], p["k"], x=x, tel=tel,
+                                 ep=p.get("ep"))
+    else:
+        def step(carry, stats, p):
+            return _engine_event(job, spot, kernel, rmax, None, carry,
+                                 stats, p["params"], p["k"], tel=tel,
+                                 ep=p.get("ep"))
+
+    zeros = _with_zeros(WindowStats.zeros(), tel, 1, env=ep is not None)
+    epilogue = _rebase_order if ep is None else _rebase_order_env
+    if executor == "ref":
+        _, stats = batched_event_windows_ref(
+            step, state0, params_b, zeros, plan, xs=xs, epilogue=epilogue)
+    else:
+        _, stats = batched_events(
+            step, state0, params_b, zeros, plan, xs=xs, tile=tile,
+            interpret=interpret, epilogue=epilogue)
+    if burn_in:
+        stats = jax.tree.map(lambda x: x[:, 1:], stats)
+    return stats
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("job", "spot", "kernel", "rmax", "n_events",
+                     "chunk_events", "burn_in", "tile", "interpret", "mesh",
+                     "executor", "rng", "tel"),
+)
+def _run_sweep_sharded_jit(job, spot, kernel, rmax, n_events, chunk_events,
+                           burn_in, tile, interpret, mesh, params, k_cost,
+                           keys, executor="xla", rng="split", tel=None,
+                           ep=None):
+    """The (grid × seeds) fleet lane-partitioned across a 1-D device mesh.
+
+    Flatten to grid-major lanes, pad to a mesh-size multiple with copies
+    of lane 0 (:func:`repro.distributed.sharding.pad_lanes`), run
+    :func:`_sweep_lanes` per shard under ``shard_map`` (env tables ride
+    replicated), slice the pad lanes off, and unflatten.  No cross-lane
+    communication exists in the event loop — lane keys are independent in
+    both rng streams — so each shard's trajectories are the unsharded
+    ones by construction; the host-side summaries then reduce int32
+    windows with integer addition (no float reduction-order hazard on the
+    ledger's exact set).
+    """
+    g, s = k_cost.shape[0], keys.shape[0]
+    (params_f,), k_f, keys_f = _flat_lane_args((params,), k_cost, keys)
+    lanes = g * s
+    params_f, k_f, keys_f = pad_lanes((params_f, k_f, keys_f),
+                                      _pad_count(lanes, mesh))
+    spec, rspec = lane_spec(mesh), jax.sharding.PartitionSpec()
+
+    def local(pf, kf, keysf, ep_):
+        return _sweep_lanes(job, spot, kernel, rmax, n_events, chunk_events,
+                            burn_in, tile, interpret, pf, kf, keysf,
+                            executor=executor, rng=rng, tel=tel, ep=ep_)
+
+    stats = shard_map_1d(local, mesh=mesh,
+                         in_specs=(spec, spec, spec, rspec),
+                         out_specs=spec)(params_f, k_f, keys_f, ep)
+    if lanes != keys_f.shape[0]:
+        stats = jax.tree.map(lambda x: x[:lanes], stats)
+    return _unflatten_lanes(stats, g, s)
+
+
 #: Statistics that count events (int32 window accumulators and their
 #: per-pool variants).  Event *decisions* never differ between executors,
 #: so these are bitwise identical across impl="xla"/"pallas"/"ref" on any
@@ -1028,6 +1162,8 @@ def run_sweep(
     interpret: bool | None = None,
     telemetry: Telemetry | None = None,
     env: EnvTimeline | None = None,
+    shard: str = "none",
+    mesh=None,
 ) -> dict:
     """Run a whole policy grid × seed fleet as ONE jitted call.
 
@@ -1050,6 +1186,15 @@ def run_sweep(
     for new sweeps; the default ``"split"`` is the frozen seed-compatible
     stream.
 
+    ``shard="lanes"`` partitions the flattened (grid × seeds) lane axis
+    across a 1-D device mesh with ``shard_map`` (``mesh`` defaults to
+    :func:`repro.distributed.sharding.lane_mesh` over every local device);
+    uneven lane counts pad with copies of lane 0 and mask the pad off.
+    Lane trajectories are unchanged by construction — integer stats and
+    telemetry histograms match the unsharded run bitwise, float sums to
+    ~ulp (the sharding-equivalence ledger, tests/test_fleet.py; see
+    docs/scaling.md).
+
     Returns :func:`summarize`'s dict with every value shaped
     ``grid_shape + (n_seeds,)``.
     """
@@ -1057,6 +1202,7 @@ def run_sweep(
     _check_rng(rng)
     _check_telemetry(telemetry)
     _check_env(env)
+    _check_shard("run_sweep", shard, mesh)
     _check_run_shape("run_sweep", n_events, burn_in)
     ep = _env_params(env, 1)
     params = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params)
@@ -1070,7 +1216,17 @@ def run_sweep(
     keys = jax.random.split(key, n_seeds)
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
     with annotate(f"repro.run_sweep[{impl}]"):
-        if impl in ("pallas", "ref"):
+        if shard == "lanes":
+            if impl not in ("xla", "pallas", "ref"):
+                raise ValueError(
+                    f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
+            stats = _run_sweep_sharded_jit(
+                job, spot, kernel, rmax, n_events, chunk, burn_in, tile,
+                default_interpret() if interpret is None else interpret,
+                lane_mesh() if mesh is None else mesh, params_flat, k_flat,
+                _raw_keys(keys), executor=impl, rng=rng, tel=telemetry,
+                ep=ep)
+        elif impl in ("pallas", "ref"):
             stats = _run_sweep_pallas_jit(
                 job, spot, kernel, rmax, n_events, chunk, burn_in, tile,
                 default_interpret() if interpret is None else interpret,
@@ -1739,6 +1895,110 @@ def _run_market_sweep_pallas_jit(job, market, kernel, rmax, preempt_on,
     return _unflatten_lanes(stats, g, s)
 
 
+def _market_sweep_lanes(job, market, kernel, rmax, preempt_on, n_events,
+                        chunk_events, burn_in, tile, interpret, params_f,
+                        mp_f, k_f, keys_f, *, executor, rng, tel=None,
+                        ep=None):
+    """One shard of flat market lanes through any executor (cf.
+    :func:`_sweep_lanes`; the pools-config tree ``mp_f`` is a per-lane
+    grid axis exactly as in :func:`_run_market_sweep_pallas_jit`)."""
+    layout = (_market_layout(job, market, kernel, preempt_on)
+              if rng == "slab" else None)
+    if executor == "xla":
+        def one(p, m, kc, key):
+            state = init_market_state(key, job, market, rmax, m, preempt_on,
+                                      scalar_preempt=layout is not None,
+                                      ep=ep)
+            if ep is not None:
+                state = (state, init_env_state(ep))
+            if burn_in:
+                state, _ = run_market_window(job, market, kernel, rmax,
+                                             preempt_on, state, p, m, kc,
+                                             burn_in, layout=layout, tel=tel,
+                                             ep=ep)
+                state = (_rebase_order(state) if ep is None
+                         else _rebase_order_env(state))
+            _, stats = run_market_chunked(job, market, kernel, rmax,
+                                          preempt_on, state, p, m, kc,
+                                          n_events, chunk_events,
+                                          layout=layout, tel=tel, ep=ep)
+            return stats
+
+        return jax.vmap(one)(params_f, mp_f, k_f, keys_f)
+
+    params_b = {"params": params_f, "mp": mp_f, "k": k_f}
+    state0 = jax.vmap(
+        lambda key, m: init_market_state(
+            key, job, market, rmax, m, preempt_on,
+            scalar_preempt=layout is not None, ep=ep))(keys_f, mp_f)
+    plan = _window_plan(n_events, chunk_events, burn_in)
+    xs = _lane_slabs(state0, plan, layout) if layout is not None else None
+    if ep is not None:
+        params_b["ep"], es0 = _env_lane_blocks(ep, keys_f.shape[0])
+        state0 = (state0, es0)
+
+    if layout is not None:
+        def step(carry, stats, p, x):
+            return _market_event(job, market, kernel, rmax, preempt_on,
+                                 layout, carry, stats, p["params"], p["mp"],
+                                 p["k"], x=x, tel=tel, ep=p.get("ep"))
+    else:
+        def step(carry, stats, p):
+            return _market_event(job, market, kernel, rmax, preempt_on,
+                                 None, carry, stats, p["params"], p["mp"],
+                                 p["k"], tel=tel, ep=p.get("ep"))
+
+    zeros = _with_zeros(MarketWindowStats.zeros(market.n_pools), tel,
+                        market.n_pools, env=ep is not None)
+    epilogue = _rebase_order if ep is None else _rebase_order_env
+    if executor == "ref":
+        _, stats = batched_event_windows_ref(
+            step, state0, params_b, zeros, plan, xs=xs, epilogue=epilogue)
+    else:
+        _, stats = batched_events(
+            step, state0, params_b, zeros, plan, xs=xs, tile=tile,
+            interpret=interpret, epilogue=epilogue)
+    if burn_in:
+        stats = jax.tree.map(lambda x: x[:, 1:], stats)
+    return stats
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("job", "market", "kernel", "rmax", "preempt_on",
+                     "n_events", "chunk_events", "burn_in", "tile",
+                     "interpret", "mesh", "executor", "rng", "tel"),
+)
+def _run_market_sweep_sharded_jit(job, market, kernel, rmax, preempt_on,
+                                  n_events, chunk_events, burn_in, tile,
+                                  interpret, mesh, params, mp, k_cost, keys,
+                                  executor="xla", rng="split", tel=None,
+                                  ep=None):
+    """The market fleet lane-partitioned across a 1-D device mesh (cf.
+    :func:`_run_sweep_sharded_jit`)."""
+    g, s = k_cost.shape[0], keys.shape[0]
+    (params_f, mp_f), k_f, keys_f = _flat_lane_args((params, mp), k_cost,
+                                                    keys)
+    lanes = g * s
+    params_f, mp_f, k_f, keys_f = pad_lanes((params_f, mp_f, k_f, keys_f),
+                                            _pad_count(lanes, mesh))
+    spec, rspec = lane_spec(mesh), jax.sharding.PartitionSpec()
+
+    def local(pf, mf, kf, keysf, ep_):
+        return _market_sweep_lanes(job, market, kernel, rmax, preempt_on,
+                                   n_events, chunk_events, burn_in, tile,
+                                   interpret, pf, mf, kf, keysf,
+                                   executor=executor, rng=rng, tel=tel,
+                                   ep=ep_)
+
+    stats = shard_map_1d(local, mesh=mesh,
+                         in_specs=(spec, spec, spec, spec, rspec),
+                         out_specs=spec)(params_f, mp_f, k_f, keys_f, ep)
+    if lanes != keys_f.shape[0]:
+        stats = jax.tree.map(lambda x: x[:lanes], stats)
+    return _unflatten_lanes(stats, g, s)
+
+
 def summarize_market(stats: MarketWindowStats,
                      telemetry: Telemetry | None = None,
                      env: EnvTimeline | None = None) -> dict:
@@ -1911,6 +2171,8 @@ def run_market_sweep(
     interpret: bool | None = None,
     telemetry: Telemetry | None = None,
     env: EnvTimeline | None = None,
+    shard: str = "none",
+    mesh=None,
 ) -> dict:
     """Run a (params × k × pools-config × seeds) grid as ONE jitted call.
 
@@ -1925,7 +2187,9 @@ def run_market_sweep(
     :func:`run_sweep`; the Pallas path widens the VMEM-resident state tile
     with the (tile, n_pools) clock vectors — bit-for-bit the ``"ref"``
     oracle, integer stats bitwise / float sums to ~ulp vs ``"xla"`` (see
-    the module docstring's executor contract).
+    the module docstring's executor contract).  ``shard="lanes"``
+    partitions the flattened lane axis across a 1-D device mesh exactly
+    as in :func:`run_sweep` (pools-config lanes ride along).
 
     Returns :func:`summarize_market`'s dict; scalar statistics are shaped
     ``grid_shape + (n_seeds,)`` and per-pool statistics
@@ -1937,6 +2201,7 @@ def run_market_sweep(
     _check_rng(rng)
     _check_telemetry(telemetry)
     _check_env(env)
+    _check_shard("run_market_sweep", shard, mesh)
     _check_run_shape("run_market_sweep", n_events, burn_in)
     _check_loc_overrides("run_market_sweep", n, "pool", prices=prices,
                          hazards=hazards, notices=notices,
@@ -1961,7 +2226,18 @@ def run_market_sweep(
     keys = jax.random.split(key, n_seeds)
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
     with annotate(f"repro.run_market_sweep[{impl}]"):
-        if impl in ("pallas", "ref"):
+        if shard == "lanes":
+            if impl not in ("xla", "pallas", "ref"):
+                raise ValueError(
+                    f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
+            stats = _run_market_sweep_sharded_jit(
+                job, market, kernel, rmax, preempt_on, n_events, chunk,
+                burn_in, tile,
+                default_interpret() if interpret is None else interpret,
+                lane_mesh() if mesh is None else mesh, params_flat, mp_flat,
+                k_flat, _raw_keys(keys), executor=impl, rng=rng,
+                tel=telemetry, ep=ep)
+        elif impl in ("pallas", "ref"):
             stats = _run_market_sweep_pallas_jit(
                 job, market, kernel, rmax, preempt_on, n_events, chunk,
                 burn_in, tile,
@@ -2678,6 +2954,106 @@ def _run_region_sweep_pallas_jit(topo, kernel, preempt_on, n_events,
     return _unflatten_lanes(stats, g, s)
 
 
+def _region_sweep_lanes(topo, kernel, preempt_on, n_events, chunk_events,
+                        burn_in, tile, interpret, params_f, rp_f, k_f,
+                        keys_f, *, executor, rng, tel=None, ep=None):
+    """One shard of flat region lanes through any executor (cf.
+    :func:`_sweep_lanes`; the regions-config tree ``rp_f`` is a per-lane
+    grid axis exactly as in :func:`_run_region_sweep_pallas_jit`)."""
+    layout = (_region_layout(topo, kernel, preempt_on)
+              if rng == "slab" else None)
+    if executor == "xla":
+        def one(p, r, kc, key):
+            state = init_region_state(key, topo, r, preempt_on,
+                                      scalar_preempt=layout is not None,
+                                      ep=ep)
+            if ep is not None:
+                state = (state, init_env_state(ep))
+            if burn_in:
+                state, _ = run_region_window(topo, kernel, preempt_on, state,
+                                             p, r, kc, burn_in, layout=layout,
+                                             tel=tel, ep=ep)
+                state = (_rebase_order(state) if ep is None
+                         else _rebase_order_env(state))
+            _, stats = run_region_chunked(topo, kernel, preempt_on, state, p,
+                                          r, kc, n_events, chunk_events,
+                                          layout=layout, tel=tel, ep=ep)
+            return stats
+
+        return jax.vmap(one)(params_f, rp_f, k_f, keys_f)
+
+    params_b = {"params": params_f, "rp": rp_f, "k": k_f}
+    state0 = jax.vmap(
+        lambda key, r: init_region_state(
+            key, topo, r, preempt_on,
+            scalar_preempt=layout is not None, ep=ep))(keys_f, rp_f)
+    plan = _window_plan(n_events, chunk_events, burn_in)
+    xs = _lane_slabs(state0, plan, layout) if layout is not None else None
+    if ep is not None:
+        params_b["ep"], es0 = _env_lane_blocks(ep, keys_f.shape[0])
+        state0 = (state0, es0)
+
+    if layout is not None:
+        def step(carry, stats, p, x):
+            return _region_event(topo, kernel, preempt_on, layout, carry,
+                                 stats, p["params"], p["rp"], p["k"], x=x,
+                                 tel=tel, ep=p.get("ep"))
+    else:
+        def step(carry, stats, p):
+            return _region_event(topo, kernel, preempt_on, None, carry,
+                                 stats, p["params"], p["rp"], p["k"],
+                                 tel=tel, ep=p.get("ep"))
+
+    zeros = _with_zeros(RegionWindowStats.zeros(topo.n_regions), tel,
+                        topo.n_regions, env=ep is not None)
+    epilogue = _rebase_order if ep is None else _rebase_order_env
+    if executor == "ref":
+        _, stats = batched_event_windows_ref(
+            step, state0, params_b, zeros, plan, xs=xs, epilogue=epilogue)
+    else:
+        _, stats = batched_events(
+            step, state0, params_b, zeros, plan, xs=xs, tile=tile,
+            interpret=interpret, epilogue=epilogue)
+    if burn_in:
+        stats = jax.tree.map(lambda x: x[:, 1:], stats)
+    return stats
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("topo", "kernel", "preempt_on", "n_events",
+                     "chunk_events", "burn_in", "tile", "interpret", "mesh",
+                     "executor", "rng", "tel"),
+)
+def _run_region_sweep_sharded_jit(topo, kernel, preempt_on, n_events,
+                                  chunk_events, burn_in, tile, interpret,
+                                  mesh, params, rp, k_cost, keys,
+                                  executor="xla", rng="split", tel=None,
+                                  ep=None):
+    """The region fleet lane-partitioned across a 1-D device mesh (cf.
+    :func:`_run_sweep_sharded_jit`)."""
+    g, s = k_cost.shape[0], keys.shape[0]
+    (params_f, rp_f), k_f, keys_f = _flat_lane_args((params, rp), k_cost,
+                                                    keys)
+    lanes = g * s
+    params_f, rp_f, k_f, keys_f = pad_lanes((params_f, rp_f, k_f, keys_f),
+                                            _pad_count(lanes, mesh))
+    spec, rspec = lane_spec(mesh), jax.sharding.PartitionSpec()
+
+    def local(pf, rf, kf, keysf, ep_):
+        return _region_sweep_lanes(topo, kernel, preempt_on, n_events,
+                                   chunk_events, burn_in, tile, interpret,
+                                   pf, rf, kf, keysf, executor=executor,
+                                   rng=rng, tel=tel, ep=ep_)
+
+    stats = shard_map_1d(local, mesh=mesh,
+                         in_specs=(spec, spec, spec, spec, rspec),
+                         out_specs=spec)(params_f, rp_f, k_f, keys_f, ep)
+    if lanes != keys_f.shape[0]:
+        stats = jax.tree.map(lambda x: x[:lanes], stats)
+    return _unflatten_lanes(stats, g, s)
+
+
 def summarize_region(stats: RegionWindowStats,
                      telemetry: Telemetry | None = None,
                      env: EnvTimeline | None = None) -> dict:
@@ -2829,6 +3205,8 @@ def run_region_sweep(
     interpret: bool | None = None,
     telemetry: Telemetry | None = None,
     env: EnvTimeline | None = None,
+    shard: str = "none",
+    mesh=None,
 ) -> dict:
     """Run a (params × k × regions-config × seeds) grid as ONE jitted call.
 
@@ -2852,7 +3230,9 @@ def run_region_sweep(
     with the (tile, R) clock vectors and the (tile, sum rmax_r) packed slot
     partition — bit-for-bit the ``"ref"`` oracle, integer stats bitwise /
     float sums to ~ulp vs ``"xla"`` (the module docstring's executor
-    contract).
+    contract).  ``shard="lanes"`` partitions the flattened lane axis
+    across a 1-D device mesh exactly as in :func:`run_sweep`
+    (regions-config and vector-param lanes ride along).
 
     Returns :func:`summarize_region`'s dict; scalar statistics are shaped
     ``grid_shape + (n_seeds,)`` and per-region statistics
@@ -2864,6 +3244,7 @@ def run_region_sweep(
     _check_rng(rng)
     _check_telemetry(telemetry)
     _check_env(env)
+    _check_shard("run_region_sweep", shard, mesh)
     _check_run_shape("run_region_sweep", n_events, burn_in)
     _check_loc_overrides("run_region_sweep", n, "region", prices=prices,
                          hazards=hazards, notices=notices,
@@ -2898,7 +3279,17 @@ def run_region_sweep(
     keys = jax.random.split(key, n_seeds)
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
     with annotate(f"repro.run_region_sweep[{impl}]"):
-        if impl in ("pallas", "ref"):
+        if shard == "lanes":
+            if impl not in ("xla", "pallas", "ref"):
+                raise ValueError(
+                    f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
+            stats = _run_region_sweep_sharded_jit(
+                topology, kernel, preempt_on, n_events, chunk, burn_in, tile,
+                default_interpret() if interpret is None else interpret,
+                lane_mesh() if mesh is None else mesh, params_flat, rp_flat,
+                k_flat, _raw_keys(keys), executor=impl, rng=rng,
+                tel=telemetry, ep=ep)
+        elif impl in ("pallas", "ref"):
             stats = _run_region_sweep_pallas_jit(
                 topology, kernel, preempt_on, n_events, chunk, burn_in, tile,
                 default_interpret() if interpret is None else interpret,

@@ -1,5 +1,12 @@
 """Logical→physical sharding rules (GSPMD PartitionSpecs by tree path).
 
+Two families live here: the seed's LM-layer GSPMD rules (param / batch /
+cache / ZeRO-1 specs below) and the event engine's lane-axis helpers
+(:func:`lane_mesh` / :func:`lane_spec` / :func:`pad_lanes` +
+:func:`shard_map_1d`), which back the sweep entry points' ``shard="lanes"``
+dispatch — the flattened (grid × seeds) lane axis partitioned across a
+1-D device mesh (docs/scaling.md).
+
 Axis convention (production mesh, DESIGN.md §5):
   batch        → ("pod", "data")   (DP across pods and within a pod)
   heads / FFN hidden / experts / vocab / d_inner → "model"  (TP / EP)
@@ -19,8 +26,79 @@ from __future__ import annotations
 from typing import Any
 
 import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 from jax.tree_util import DictKey, GetAttrKey, SequenceKey
+
+# jax.shard_map graduated from jax.experimental.shard_map (and renamed its
+# replication-check kwarg check_rep -> check_vma) in jax 0.6; support both.
+# Same shim as repro.layers.moe — duplicated here so the event engine's
+# sharded sweeps never import the LM layer stack.
+if hasattr(jax, "shard_map"):
+    def shard_map_1d(f, *, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:  # jax < 0.6
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map_1d(f, *, mesh, in_specs, out_specs):
+        return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+
+
+#: Mesh axis name for the engine's flattened sweep lane axis.
+LANE_AXIS = "lanes"
+
+
+def lane_mesh(devices: int | list | None = None, *,
+              axis: str = LANE_AXIS) -> Mesh:
+    """1-D device mesh over the sweep engine's flattened lane axis.
+
+    ``devices`` is a device count (the first N local devices), an explicit
+    device sequence, or None for every local device.  Simulated host
+    devices come from ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    set before the JAX backend initializes (see docs/scaling.md).
+    """
+    if devices is None:
+        devs = jax.devices()
+    elif isinstance(devices, int):
+        local = jax.devices()
+        if devices < 1 or devices > len(local):
+            raise ValueError(
+                f"lane_mesh: requested {devices} devices but "
+                f"{len(local)} are available (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count=N before the "
+                f"backend initializes to simulate more on CPU)")
+        devs = local[:devices]
+    else:
+        devs = list(devices)
+    return Mesh(np.array(devs), (axis,))
+
+
+def lane_spec(mesh: Mesh) -> P:
+    """PartitionSpec placing a leading lane axis on ``mesh``'s only axis."""
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            f"lane sharding needs a 1-D mesh, got axes {mesh.axis_names}")
+    return P(mesh.axis_names[0])
+
+
+def pad_lanes(tree, n_pad: int):
+    """Pad every lane-leading leaf with ``n_pad`` copies of lane 0.
+
+    Lane 0 is a real lane, so the pad lanes run valid simulations (no
+    NaN/inf hazards from zero-filled params); the caller slices them off
+    after the sharded run.  The lane count becomes divisible by the mesh
+    size — the pad half of the sharded sweeps' pad-and-mask contract.
+    """
+    if n_pad == 0:
+        return tree
+    return jax.tree.map(
+        lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (n_pad,) + x.shape[1:])], axis=0),
+        tree)
 
 
 def _path_names(path) -> list[str]:

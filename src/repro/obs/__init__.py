@@ -19,11 +19,12 @@ zero cost, bitwise-reproduced stats (frozen in tests/test_obs.py).
 * :mod:`repro.obs.timing` — compile-vs-steady timing, BENCH provenance
   stamps, profiler trace scopes.
 """
-from .shocks import (ENV_INT_STATS, EnvWindowStats, env_update, env_zeros,
-                     summarize_env)
+from .shocks import (ENV_INT_STATS, EnvWindowStats, env_merge,
+                     env_reduce, env_update, env_zeros, summarize_env)
 from .stats import (EVENT_TYPES, TEL_INT_STATS, Telemetry,
                     TelemetryWindowStats, sketch_quantile,
-                    summarize_telemetry, telemetry_update, telemetry_zeros)
+                    summarize_telemetry, telemetry_merge, telemetry_reduce,
+                    telemetry_update, telemetry_zeros)
 from .timing import annotate, provenance, time_compiled
 from .trace import (TraceRecorder, device_trace_records, to_perfetto,
                     write_perfetto)
@@ -38,12 +39,16 @@ __all__ = [
     "TraceRecorder",
     "annotate",
     "device_trace_records",
+    "env_merge",
+    "env_reduce",
     "env_update",
     "env_zeros",
     "summarize_env",
     "provenance",
     "sketch_quantile",
     "summarize_telemetry",
+    "telemetry_merge",
+    "telemetry_reduce",
     "telemetry_update",
     "telemetry_zeros",
     "time_compiled",

@@ -84,6 +84,25 @@ def env_update(es: EnvWindowStats, *, is_boundary, kind_prev, kind_next,
     )
 
 
+def env_merge(a: EnvWindowStats, b: EnvWindowStats) -> EnvWindowStats:
+    """Merge two shock-accounting blocks across a lane/shard partition.
+
+    The eight counters are int32, so the merge is exact — associative,
+    commutative, partition-invariant (pinned with the telemetry merge in
+    tests/test_fleet.py).  The two dwell-time fields are float sums and
+    carry the usual ~ulp reduction-order story; merge those in float64
+    (as :func:`summarize_env` does) when exact partition invariance
+    matters.  Works on numpy and jax arrays alike.
+    """
+    return EnvWindowStats(*(x + y for x, y in zip(a, b)))
+
+
+def env_reduce(es: EnvWindowStats, axis: int = 0) -> EnvWindowStats:
+    """Collapse one batch axis (lanes, shards, seeds, or stacked windows)
+    by summation — the n-way form of :func:`env_merge`."""
+    return EnvWindowStats(*(x.sum(axis=axis) for x in es))
+
+
 def summarize_env(estats: EnvWindowStats) -> dict:
     """Reduce stacked env windows (window axis last, like
     :func:`repro.core.engine.summarize`); leading grid/seed axes pass

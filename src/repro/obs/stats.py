@@ -243,6 +243,49 @@ TEL_INT_STATS = ("events", "spot_starts", "preempts_fired",
                  "loc_defects", "loc_resumed")
 
 
+_COUNTER_FIELDS = tuple(f for f in TelemetryWindowStats._fields
+                        if f not in _TRACE_FIELDS)
+
+
+def _check_no_rings(name: str, *blocks: TelemetryWindowStats) -> None:
+    for ts in blocks:
+        if any(getattr(ts, f) is not None for f in _TRACE_FIELDS):
+            raise ValueError(
+                f"{name}: trace rings are per-lane drains, not additive — "
+                f"export them first (repro.obs.trace) and merge only the "
+                f"histogram/counter block (ring fields must be None)")
+
+
+def telemetry_merge(a: TelemetryWindowStats,
+                    b: TelemetryWindowStats) -> TelemetryWindowStats:
+    """Merge two telemetry accumulator blocks by integer addition.
+
+    The shard-merge entry point: histograms and counters are int32 event
+    counts, so merging lane partitions / shards / windows is exact —
+    associative, commutative, and partition-invariant (the property tests
+    in tests/test_fleet.py pin all three).  Works on numpy and jax
+    arrays alike.  Trace rings are NOT mergeable (bounded per-lane
+    drains); blocks carrying rings are rejected with the fix.
+    """
+    _check_no_rings("telemetry_merge", a, b)
+    return TelemetryWindowStats(
+        *(getattr(a, f) + getattr(b, f) for f in _COUNTER_FIELDS),
+        *(None,) * len(_TRACE_FIELDS))
+
+
+def telemetry_reduce(ts: TelemetryWindowStats,
+                     axis: int = 0) -> TelemetryWindowStats:
+    """Collapse one batch axis (lanes, shards, seeds, or stacked windows)
+    of a telemetry block by integer addition — the n-way form of
+    :func:`telemetry_merge`, e.g. reducing per-lane accumulators to one
+    fleet-wide sketch before a :func:`sketch_quantile` read
+    (docs/scaling.md shows the cross-shard P99 read)."""
+    _check_no_rings("telemetry_reduce", ts)
+    return TelemetryWindowStats(
+        *(getattr(ts, f).sum(axis=axis) for f in _COUNTER_FIELDS),
+        *(None,) * len(_TRACE_FIELDS))
+
+
 def sketch_quantile(hist: np.ndarray, edges: np.ndarray,
                     q: float) -> np.ndarray:
     """Quantile estimate from (…, n_bins) log-binned counts.

@@ -1,0 +1,364 @@
+"""The sharding-equivalence ledger: ``shard="lanes"`` == ``shard="none"``.
+
+The sweep entry points' ``shard="lanes"`` dispatch partitions the
+flattened (grid × seeds) lane axis across a 1-D device mesh with
+``shard_map`` (repro.distributed.sharding).  Lane keys are independent in
+both RNG streams, so per-lane trajectories are untouched by construction
+— which makes the equivalence contract *checkable*, not aspirational:
+
+* integer stats (engine ``INT_STATS``, telemetry ``TEL_INT_STATS``,
+  shock ``ENV_INT_STATS``) and telemetry histograms: **bitwise** against
+  the unsharded run, always;
+* ``impl="ref"``/``"pallas"``: **everything** bitwise (the sharded body
+  runs the identical flat-lane ops per shard);
+* ``impl="xla"`` floats: ~ulp (rtol 1e-5) — the sharded path runs the
+  per-lane program under one materialized flat vmap while the unsharded
+  wrapper uses broadcast nested vmaps, the PR-3 layout caveat.
+
+The ledger runs every (loop × executor × rng) cell at 1/2/4/8 shards
+with ``telemetry=`` and ``env=`` on; lane counts are deliberately NOT
+divisible by 4 or 8, so the pad-and-mask path (pad with copies of lane 0,
+slice off after) is exercised whenever it can be.  Cells needing more
+devices than the process has skip with the ``XLA_FLAGS`` hint — the CI
+fleet job runs the full matrix under 8 simulated host devices; the
+subprocess test below keeps a real multi-shard check in tier-1 on any
+machine.
+
+Also here: property tests (hypothesis, with the tests/_propcheck
+fallback) for the cross-shard merge helpers — ``telemetry_merge`` /
+``telemetry_reduce`` / ``env_merge`` / ``env_reduce`` are associative,
+commutative, and partition-invariant on their int32 counters, the
+algebra that makes host-side cross-shard aggregation order-independent.
+"""
+import functools
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare interpreter: deterministic fallback
+    from _propcheck import given, settings, st
+
+from repro.core.arrivals import Exponential
+from repro.core.engine import (INT_STATS, run_market_sweep,
+                               run_region_sweep, run_sweep)
+from repro.core.env import EnvTimeline, inject_storm
+from repro.core.market import NoticeAwareKernel, SpotMarket, SpotPool
+from repro.core.policies import ThreePhaseKernel
+from repro.core.regions import Region, RegionTopology, RoutingKernel
+from repro.distributed.sharding import lane_mesh, lane_spec, pad_lanes
+from repro.obs import (ENV_INT_STATS, TEL_INT_STATS, EnvWindowStats,
+                       Telemetry, TelemetryWindowStats, env_merge,
+                       env_reduce, telemetry_merge, telemetry_reduce)
+
+LAM, MU, K = 1.2, 0.9, 12.0
+
+
+def _market() -> SpotMarket:
+    return SpotMarket(pools=(
+        SpotPool(arrival=Exponential(0.9), price=1.0, hazard=0.3, notice=0.1),
+        SpotPool(arrival=Exponential(0.5), price=0.6, hazard=0.8, notice=0.3),
+    ))
+
+
+def _topo() -> RegionTopology:
+    return RegionTopology(regions=(
+        Region(job=Exponential(1.2), spot=Exponential(0.9), price=1.0,
+               hazard=0.3, notice=0.1, rmax=4),
+        Region(job=Exponential(0.7), spot=Exponential(0.5), price=0.6,
+               hazard=0.8, notice=0.3, rmax=4),
+    ))
+
+
+def _env() -> EnvTimeline:
+    return inject_storm(EnvTimeline.constant(), 20.0, 60.0, hazard_mult=6.0)
+
+
+def _run(loop: str, impl: str, rng: str, **over) -> dict:
+    # 3 grid points × 2 seeds = 6 lanes: divisible by 1 and 2, pad-and-mask
+    # (2 pad lanes) at 4 and 8 shards
+    kw = dict(k=K, n_events=300, key=jax.random.key(0), n_seeds=2,
+              burn_in=64, chunk_events=128, impl=impl, rng=rng, tile=2,
+              telemetry=Telemetry(), env=_env())
+    kw.update(over)
+    params = {"r": jnp.linspace(0.5, 2.5, 3)}
+    if loop == "single":
+        return run_sweep(Exponential(LAM), Exponential(MU),
+                         ThreePhaseKernel(), params, rmax=8, **kw)
+    if loop == "market":
+        return run_market_sweep(Exponential(LAM), _market(),
+                                NoticeAwareKernel(checkpoint_time=0.05),
+                                params, rmax=8, **kw)
+    return run_region_sweep(_topo(), RoutingKernel(
+        NoticeAwareKernel(checkpoint_time=0.05), choice="cheapest"),
+        params, **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def _unsharded(loop: str, impl: str, rng: str) -> dict:
+    return _run(loop, impl, rng)
+
+
+# histograms are integer counts of per-lane binning decisions — bitwise
+# across shardings just like the decision counters (repro.obs.stats
+# TEL_INT_STATS note: it is cross-*executor* layouts that may flip a
+# boundary bin, not cross-shard partitions of the same executor)
+_EXACT_KEYS = (set(INT_STATS) | set(TEL_INT_STATS) | set(ENV_INT_STATS)
+               | {"wait_hist", "cost_hist"})
+
+
+def _assert_ledger(ref: dict, sharded: dict, impl: str, context: str):
+    assert set(ref) == set(sharded), context
+    for name, v in ref.items():
+        a, b = np.asarray(v), np.asarray(sharded[name])
+        assert a.shape == b.shape, f"{name} shape ({context})"
+        if (impl in ("pallas", "ref") or name in _EXACT_KEYS
+                or np.issubdtype(a.dtype, np.integer)):
+            np.testing.assert_array_equal(
+                a, b, err_msg=f"{name} diverged ({context})")
+        else:
+            np.testing.assert_allclose(
+                a, b, rtol=1e-5, err_msg=f"{name} diverged ({context})")
+
+
+_CELLS = [(loop, impl, rng)
+          for loop in ("single", "market", "region")
+          for impl in ("xla", "pallas", "ref")
+          for rng in ("split", "slab")]
+
+
+@pytest.mark.parametrize("n_shards", (1, 2, 4, 8))
+@pytest.mark.parametrize("loop,impl,rng", _CELLS,
+                         ids=[f"{c[0]}-{c[1]}-{c[2]}" for c in _CELLS])
+def test_sharding_equivalence_ledger(loop, impl, rng, n_shards):
+    if n_shards > len(jax.devices()):
+        pytest.skip(
+            f"needs {n_shards} devices, have {len(jax.devices())} — run "
+            f"under XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+            f"(the CI fleet job) for the full ledger")
+    sharded = _run(loop, impl, rng, shard="lanes", mesh=lane_mesh(n_shards))
+    _assert_ledger(_unsharded(loop, impl, rng), sharded, impl,
+                   f"{loop}/{impl}/{rng} @ {n_shards} shards")
+
+
+def test_shard_default_mesh_single_device():
+    """``shard='lanes'`` with ``mesh=None`` builds the every-local-device
+    mesh; on one device that is still the sharded code path end-to-end."""
+    out = _run("single", "xla", "slab", shard="lanes")
+    _assert_ledger(_unsharded("single", "xla", "slab"), out, "xla",
+                   "single/xla/slab @ default mesh")
+
+
+# ---------------------------------------------------------------------------
+# Pad-and-mask + mesh/spec helpers (device-count independent)
+# ---------------------------------------------------------------------------
+def test_pad_lanes_replicates_lane_zero():
+    tree = {"a": jnp.arange(6.0).reshape(3, 2), "k": jnp.arange(3.0)}
+    padded = pad_lanes(tree, 2)
+    assert padded["a"].shape == (5, 2) and padded["k"].shape == (5,)
+    np.testing.assert_array_equal(np.asarray(padded["a"][:3]),
+                                  np.asarray(tree["a"]))
+    # pad lanes are copies of lane 0 — real params, valid simulations
+    np.testing.assert_array_equal(np.asarray(padded["a"][3:]),
+                                  np.tile(np.asarray(tree["a"][:1]), (2, 1)))
+    np.testing.assert_array_equal(np.asarray(padded["k"][3:]),
+                                  np.zeros(2))
+    assert pad_lanes(tree, 0) is tree  # n_pad=0 is the identity
+
+
+def test_lane_mesh_and_spec_validation():
+    mesh = lane_mesh(1)
+    assert mesh.size == 1 and mesh.axis_names == ("lanes",)
+    assert lane_spec(mesh) == jax.sharding.PartitionSpec("lanes")
+    with pytest.raises(ValueError, match="XLA_FLAGS"):
+        lane_mesh(len(jax.devices()) + 1)
+    with pytest.raises(ValueError, match="1-D"):
+        lane_spec(jax.sharding.Mesh(
+            np.array(jax.devices()[:1]).reshape(1, 1), ("a", "b")))
+
+
+def test_shard_argument_validation():
+    with pytest.raises(ValueError, match="unknown shard"):
+        _run("single", "xla", "split", shard="pods")
+    with pytest.raises(ValueError, match="requires shard='lanes'"):
+        _run("single", "xla", "split", mesh=lane_mesh(1))
+    with pytest.raises(ValueError, match="1-D mesh"):
+        _run("single", "xla", "split", shard="lanes",
+             mesh=jax.sharding.Mesh(
+                 np.array(jax.devices()[:1]).reshape(1, 1), ("a", "b")))
+
+
+# ---------------------------------------------------------------------------
+# Real multi-shard check inside tier-1: subprocess with 2 forced host
+# devices (same pattern as tests/test_distributed.py — the main pytest
+# process must keep its single real device)
+# ---------------------------------------------------------------------------
+def test_multi_device_subprocess_uneven_lanes():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.arrivals import Exponential
+        from repro.core.engine import INT_STATS, run_sweep, run_market_sweep
+        from repro.core.market import (NoticeAwareKernel, SpotMarket,
+                                       SpotPool)
+        from repro.core.policies import ThreePhaseKernel
+        from repro.distributed.sharding import lane_mesh
+        from repro.obs import TEL_INT_STATS, Telemetry
+
+        assert len(jax.devices()) == 2, jax.devices()
+
+        def check(run, impl, **kw):
+            a = run(impl=impl, **kw)
+            b = run(impl=impl, shard="lanes", mesh=lane_mesh(2), **kw)
+            for name in a:
+                x, y = np.asarray(a[name]), np.asarray(b[name])
+                if impl == "ref" or name in INT_STATS \\
+                        or name in TEL_INT_STATS \\
+                        or np.issubdtype(x.dtype, np.integer):
+                    np.testing.assert_array_equal(x, y, err_msg=name)
+                else:
+                    np.testing.assert_allclose(x, y, rtol=1e-5,
+                                               err_msg=name)
+
+        # 5 grid points x 1 seed = 5 lanes on 2 shards: pad-and-mask live
+        kw = dict(k=12.0, n_events=200, key=jax.random.key(0), n_seeds=1,
+                  burn_in=32, chunk_events=64, telemetry=Telemetry())
+        def single(**kws):
+            return run_sweep(Exponential(1.2), Exponential(0.9),
+                             ThreePhaseKernel(),
+                             {"r": jnp.linspace(0.5, 2.5, 5)}, rmax=8,
+                             **kw, **kws)
+        market = SpotMarket(pools=(
+            SpotPool(arrival=Exponential(0.9), price=1.0, hazard=0.3,
+                     notice=0.1),
+            SpotPool(arrival=Exponential(0.5), price=0.6, hazard=0.8,
+                     notice=0.3)))
+        def mkt(**kws):
+            return run_market_sweep(Exponential(1.2), market,
+                                    NoticeAwareKernel(checkpoint_time=0.05),
+                                    {"r": jnp.linspace(0.5, 2.5, 5)},
+                                    rmax=8, **kw, **kws)
+
+        check(single, "xla", rng="slab")
+        check(single, "ref", rng="split")
+        check(mkt, "xla", rng="split")
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=".", timeout=900)
+    assert "OK" in out.stdout, (out.stdout[-1000:], out.stderr[-3000:])
+
+
+# ---------------------------------------------------------------------------
+# Merge algebra: the host-side cross-shard aggregation helpers
+# ---------------------------------------------------------------------------
+def _tel_blocks(seed: int, n: int, n_bins: int = 8,
+                n_locs: int = 2) -> TelemetryWindowStats:
+    """``n`` stacked synthetic counter blocks (rings off), leading axis 0."""
+    r = np.random.default_rng(seed)
+
+    def i32(*shape):
+        return r.integers(0, 1_000, size=shape, dtype=np.int32)
+
+    return TelemetryWindowStats(
+        wait_hist=i32(n, n_bins), cost_hist=i32(n, n_bins),
+        events=i32(n, 4), spot_starts=i32(n), preempts_fired=i32(n),
+        notices_honored=i32(n), deadline_defects=i32(n), rejects=i32(n),
+        loc_defects=i32(n, n_locs), loc_resumed=i32(n, n_locs),
+        ring_t=None, ring_type=None, ring_loc=None, ring_qlen=None,
+        ring_val=None, ring_n=None)
+
+
+def _env_blocks(seed: int, n: int) -> EnvWindowStats:
+    r = np.random.default_rng(seed + 1)
+    ints = [r.integers(0, 1_000, size=n, dtype=np.int32) for _ in range(8)]
+    floats = [r.random(n).astype(np.float32) for _ in range(2)]
+    return EnvWindowStats(*ints, *floats)
+
+
+def _slice(ts, i):
+    return type(ts)(*(None if x is None else x[i] for x in ts))
+
+
+def _sub(ts, sl):
+    return type(ts)(*(None if x is None else x[sl] for x in ts))
+
+
+def _assert_blocks_equal(a, b, *, float_rtol=None):
+    for name, x, y in zip(type(a)._fields, a, b):
+        if x is None:
+            assert y is None, name
+        elif float_rtol is not None and np.issubdtype(
+                np.asarray(x).dtype, np.floating):
+            np.testing.assert_allclose(x, y, rtol=float_rtol, err_msg=name)
+        else:
+            np.testing.assert_array_equal(x, y, err_msg=name)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16),
+       n=st.integers(min_value=3, max_value=6),
+       pivot=st.integers(min_value=1, max_value=5))
+def test_telemetry_merge_algebra(seed, n, pivot):
+    """merge is associative + commutative; reduce is its n-way fold; any
+    two-way partition of the lane axis reduces to the same block.  All
+    counter fields are int32, so every identity is exact."""
+    ts = _tel_blocks(seed, n)
+    a, b, c = _slice(ts, 0), _slice(ts, 1), _slice(ts, 2)
+    _assert_blocks_equal(telemetry_merge(a, b), telemetry_merge(b, a))
+    _assert_blocks_equal(telemetry_merge(telemetry_merge(a, b), c),
+                         telemetry_merge(a, telemetry_merge(b, c)))
+    folded = _slice(ts, 0)
+    for i in range(1, n):
+        folded = telemetry_merge(folded, _slice(ts, i))
+    _assert_blocks_equal(telemetry_reduce(ts), folded)
+    p = min(pivot, n - 1)
+    _assert_blocks_equal(
+        telemetry_merge(telemetry_reduce(_sub(ts, slice(None, p))),
+                        telemetry_reduce(_sub(ts, slice(p, None)))),
+        telemetry_reduce(ts))
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16),
+       n=st.integers(min_value=3, max_value=6),
+       pivot=st.integers(min_value=1, max_value=5))
+def test_env_merge_algebra(seed, n, pivot):
+    """Same algebra for the shock counters: the eight int32 fields are
+    exact under any association/partition; the two float dwell sums are
+    commutative bitwise (IEEE adds commute) and associative/partition-
+    invariant to ~ulp — the documented env_merge contract."""
+    es = _env_blocks(seed, n)
+    a, b, c = _slice(es, 0), _slice(es, 1), _slice(es, 2)
+    _assert_blocks_equal(env_merge(a, b), env_merge(b, a))
+    _assert_blocks_equal(env_merge(env_merge(a, b), c),
+                         env_merge(a, env_merge(b, c)), float_rtol=1e-6)
+    folded = _slice(es, 0)
+    for i in range(1, n):
+        folded = env_merge(folded, _slice(es, i))
+    _assert_blocks_equal(env_reduce(es), folded, float_rtol=1e-6)
+    p = min(pivot, n - 1)
+    _assert_blocks_equal(
+        env_merge(env_reduce(_sub(es, slice(None, p))),
+                  env_reduce(_sub(es, slice(p, None)))),
+        env_reduce(es), float_rtol=1e-6)
+
+
+def test_telemetry_merge_rejects_trace_rings():
+    """Trace rings are per-lane drains, not mergeable counters — the merge
+    helpers refuse them loudly instead of silently dropping records."""
+    ts = _tel_blocks(3, 2)
+    with_rings = ts._replace(ring_n=np.zeros(2, np.int32))
+    with pytest.raises(ValueError, match="ring"):
+        telemetry_merge(_slice(with_rings, 0), _slice(with_rings, 1))
+    with pytest.raises(ValueError, match="ring"):
+        telemetry_reduce(with_rings)

@@ -19,7 +19,7 @@ import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 DEFAULT_FILES = ["README.md", "docs/kernels.md", "docs/observability.md",
-                 "docs/robustness.md"]
+                 "docs/robustness.md", "docs/scaling.md"]
 
 _FENCE = re.compile(r"```(\w+)?\n(.*?)```", re.DOTALL)
 
