@@ -1,0 +1,206 @@
+"""Work-axis overhead + the can't-be-late deadline tournament.
+
+The checkpoint-priced-recovery contract is two-sided: ``work=None`` must
+compile the *identical* program (zero cost — the frozen HLO baseline in
+tests/test_env.py covers it), and ``work=WorkModel(...)`` must stay
+cheap enough to sweep work-structured scenarios at engine speed.  This
+bench measures the on-cost on the market sweep at three work densities:
+
+  * ``off``      — today's program, jobs as atomic units;
+  * ``identity`` — ``WorkModel()`` (the bit-for-bit identity config:
+                   ledger machinery live, semantics unchanged);
+  * ``priced``   — multi-unit jobs with checkpoint-on-notice, restart
+                   overhead, and live deadlines (every ledger column
+                   exercised).
+
+It then replays the committed adversarial k80-style availability trace
+(tests/data/spot_trace_k80.json) as the deadline tournament: the base
+notice-aware kernel vs the :class:`~repro.core.work.CantBeLateKernel`
+safety net vs the all-on-demand cost floor — the numbers EXPERIMENTS.md
+§"Checkpoint-priced recovery" quotes.
+
+Writes BENCH_deadline.json (BENCH_deadline_smoke.json under --smoke).
+The headline is the identity-model throughput (events/s with the work
+axis on); CI's regression gate guards it via
+benchmarks/baselines/suite_smoke.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (CantBeLateKernel, Exponential, NoticeAwareKernel,
+                        WorkModel, all_ondemand_cost, run_market_sim,
+                        run_market_sweep, timeline_from_trace)
+from repro.core.market import SpotMarket, SpotPool
+from repro.obs.timing import provenance, time_compiled
+
+LAM, MU, K = 1 / 12, 1 / 24, 10.0
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+_TRACE = os.path.join(_REPO_ROOT, "tests", "data", "spot_trace_k80.json")
+
+_SCALE = 1.0
+
+
+def set_scale(scale: float) -> None:
+    global _SCALE
+    _SCALE = scale
+
+
+def _bench_json_path() -> str:
+    name = ("BENCH_deadline.json" if _SCALE == 1.0
+            else "BENCH_deadline_smoke.json")
+    return os.path.join(_REPO_ROOT, name)
+
+
+def _market() -> SpotMarket:
+    return SpotMarket(pools=(
+        SpotPool(Exponential(MU / 2), price=0.4, hazard=0.02, notice=0.5),
+        SpotPool(Exponential(MU / 2), price=0.7, hazard=0.005, notice=0.0),
+    ))
+
+
+def _priced() -> WorkModel:
+    return WorkModel.on_notice(0.2, total_work=3.0, restart_overhead=0.5,
+                               deadline=120.0, od_time=10.0)
+
+
+def measure_work_overhead(n_r: int = 16, n_seeds: int = 4,
+                          n_events: int | None = None,
+                          rmax: int = 32) -> dict:
+    """Time the market sweep work-off / identity-model / priced-model."""
+    if n_events is None:
+        n_events = max(2_000, int(50_000 * _SCALE))
+    job = Exponential(LAM)
+    market = _market()
+    kern = NoticeAwareKernel()
+    rs = jnp.linspace(0.25, 4.0, n_r)
+    common = dict(k=K, n_events=n_events, key=jax.random.key(0),
+                  n_seeds=n_seeds, rmax=rmax)
+    modes = {"off": None, "identity": WorkModel(), "priced": _priced()}
+    timings, recomputed = {}, 0.0
+    for mode, work in modes.items():
+        out, timing = time_compiled(
+            lambda work=work: run_market_sweep(job, market, kern,
+                                               {"r": rs}, work=work,
+                                               **common))
+        timings[mode] = timing
+        if mode == "priced":
+            recomputed = float(jnp.sum(jnp.asarray(out["work_recomputed"])))
+
+    grid_points = n_r * n_seeds
+    total_events = grid_points * n_events
+    t_off = timings["off"]["t_run_s"]
+    t_id = timings["identity"]["t_run_s"]
+    t_priced = timings["priced"]["t_run_s"]
+    return {
+        "grid_points": grid_points,
+        "n_r": n_r,
+        "n_seeds": n_seeds,
+        "n_events_per_point": n_events,
+        "total_events": total_events,
+        "rmax": rmax,
+        "t_off_s": t_off,
+        "t_identity_s": t_id,
+        "t_priced_s": t_priced,
+        "off_events_per_s": total_events / t_off,
+        "identity_events_per_s": total_events / t_id,
+        "priced_events_per_s": total_events / t_priced,
+        "identity_overhead_x": t_id / t_off,
+        "priced_overhead_x": t_priced / t_off,
+        "priced_work_recomputed": recomputed,
+    }
+
+
+def measure_tournament(n_events: int | None = None) -> dict:
+    """Base kernel vs safety net vs all-on-demand on the k80 trace."""
+    if n_events is None:
+        n_events = max(2_500, int(25_000 * _SCALE))
+    with open(_TRACE) as f:
+        d = json.load(f)
+    env = timeline_from_trace(d["times"], d["avail"])
+    market = SpotMarket(pools=tuple(
+        SpotPool(arrival=Exponential(r), price=p["price"],
+                 hazard=p["hazard"], notice=p["notice"])
+        for r, p in zip((0.8, 0.6), d["pools"])))
+    work = WorkModel.on_notice(0.05, total_work=1.0, restart_overhead=0.2,
+                               deadline=2.5, od_time=0.5)
+    base_kern = NoticeAwareKernel(checkpoint_time=0.05)
+    k = 5.0
+    common = dict(k=k, n_events=n_events, key=jax.random.key(7),
+                  burn_in=0, env=env, work=work)
+    entries = {}
+    for name, kern in (("base", base_kern),
+                       ("safety_net",
+                        CantBeLateKernel(base_kern, slack_buffer=0.2))):
+        out, timing = time_compiled(
+            lambda kern=kern: run_market_sim(
+                Exponential(1.2), market, kern, {"r": jnp.float32(2.0)},
+                **common))
+        entries[name] = {
+            "avg_cost": float(out["avg_cost"]),
+            "deadline_misses": int(out["deadline_misses"]),
+            "deadline_miss_rate": float(out["deadline_miss_rate"]),
+            "panic_entries": int(out["panic_entries"]),
+            "jobs_finished": int(out["jobs_finished"]),
+            "blackout_time": float(out["blackout_time"]),
+            "t_run_s": timing["t_run_s"],
+        }
+    return {
+        "trace": os.path.relpath(_TRACE, _REPO_ROOT),
+        "n_events": n_events,
+        "k": k,
+        "all_ondemand_cost_per_job": all_ondemand_cost(k, 1),
+        **entries,
+    }
+
+
+def bench_deadline():
+    """Benchmark-harness entry: rows + headline (identity-work ev/s)."""
+    overhead = measure_work_overhead()
+    tour = measure_tournament()
+    result = {**overhead, "tournament": tour,
+              "backend": jax.default_backend(),
+              "provenance": provenance(seed=0, work="off/identity/priced",
+                                       trace=tour["trace"])}
+    with open(_bench_json_path(), "w") as f:
+        json.dump(result, f, indent=2)
+    rows = [
+        {
+            "name": f"work/{overhead['grid_points']}pt_market_grid",
+            "us_per_call": overhead["t_identity_s"] * 1e6,
+            "derived": (
+                f"{overhead['grid_points']} points × "
+                f"{overhead['n_events_per_point']} ev: "
+                f"off={overhead['t_off_s']:.2f}s "
+                f"identity={overhead['t_identity_s']:.2f}s "
+                f"({overhead['identity_overhead_x']:.2f}x) "
+                f"priced={overhead['t_priced_s']:.2f}s "
+                f"({overhead['priced_overhead_x']:.2f}x)"),
+        },
+        {
+            "name": "deadline/k80_tournament",
+            "us_per_call": tour["safety_net"]["t_run_s"] * 1e6,
+            "derived": (
+                f"base misses {tour['base']['deadline_misses']} "
+                f"@ {tour['base']['avg_cost']:.2f}/job; safety net "
+                f"misses {tour['safety_net']['deadline_misses']} "
+                f"({tour['safety_net']['panic_entries']} panics) "
+                f"@ {tour['safety_net']['avg_cost']:.2f}/job; "
+                f"all-on-demand {tour['all_ondemand_cost_per_job']:.2f}"),
+        },
+    ]
+    return rows, result["identity_events_per_s"]
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        set_scale(0.1)
+    rows, headline = bench_deadline()
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']:.0f},{row['derived']}")
+    print(f"headline identity_events_per_s={headline:.0f}")

@@ -26,6 +26,7 @@ def main() -> None:
                     help="run only benches whose name contains SUBSTR")
     args = ap.parse_args()
 
+    from benchmarks import deadline_bench
     from benchmarks import engine_kernel_bench
     from benchmarks import env_bench
     from benchmarks import event_rng_bench
@@ -46,6 +47,7 @@ def main() -> None:
         event_rng_bench.set_scale(0.1)
         obs_bench.set_scale(0.1)
         env_bench.set_scale(0.1)
+        deadline_bench.set_scale(0.1)
         fleet_bench.set_scale(0.1)
 
     benches = [
@@ -63,6 +65,7 @@ def main() -> None:
         event_rng_bench.bench_event_rng,  # writes BENCH_event_rng.json
         obs_bench.bench_telemetry_overhead,  # writes BENCH_obs.json
         env_bench.bench_env_overhead,  # writes BENCH_env.json
+        deadline_bench.bench_deadline,  # writes BENCH_deadline.json
         fleet_bench.bench_fleet_scaling,  # writes BENCH_fleet.json
         bench_engine_roofline,  # reads them back
         bench_roofline,

@@ -3,11 +3,18 @@ paper's admission controller onto a simulated spot/on-demand cluster, with
 REAL JAX training work per leg, preemption → checkpoint → re-admission, and
 cost accounting vs an on-demand-only baseline.
 
+The coda closes the loop with the engine's ``work=`` axis: the blocking
+save, the elastic restore, and one warm train step are each wall-timed,
+``restart_overhead_from_timing`` turns the measured seconds into engine
+work units, and a checkpoint-priced market replay reports the survival
+ledger that this cluster's jobs would have produced.
+
     PYTHONPATH=src python examples/elastic_spot_training.py
 """
 import dataclasses
 import sys
 import tempfile
+import time
 
 sys.path.insert(0, "src")
 
@@ -16,7 +23,10 @@ import jax
 from repro.checkpoint.manager import CheckpointManager
 from repro.cluster.orchestrator import OnlineAdmissionController, SpotCluster
 from repro.configs import get_config
-from repro.core import BathtubGCP, Exponential, theorem2_cost
+from repro.core import (BathtubGCP, Exponential, NoticeAwareKernel,
+                        SpotMarket, SpotPool, WorkModel,
+                        restart_overhead_from_timing, run_market_sim,
+                        theorem2_cost)
 from repro.data.pipeline import DataPipeline
 from repro.models.registry import build_model
 from repro.train.steps import init_train_state, make_train_step
@@ -25,7 +35,7 @@ K, LAM, DELTA = 10.0, 1 / 12, 3.0
 STEPS_PER_LEG = 2
 
 
-def main():
+def main(horizon: int = 12_000):
     # tiny real model so each spot leg does real gradient work
     cfg = get_config("mamba2-780m", smoke=True)
     cfg = dataclasses.replace(cfg, remat=False)
@@ -58,7 +68,7 @@ def main():
         on_ondemand_run=run_leg, on_preempt=on_preempt, seed=0)
 
     print("spot/on-demand training cluster — paper policy as dispatcher")
-    stats = cluster.run(12_000)
+    stats = cluster.run(horizon)
     base = K  # on-demand-only pays k per job
     print(f"jobs completed:      {stats.jobs_completed}")
     print(f"  spot legs:         {stats.spot_served}")
@@ -75,6 +85,41 @@ def main():
     print(f"learned r*:          {ctl.r:.3f}")
     print(f"checkpoints kept:    {ckpt.all_steps()}")
 
+    # ---- checkpoint-priced replay: measured timing seeds the work= axis
+    t0 = time.perf_counter()
+    st, _ = step_fn(state_holder["state"], data.next())
+    jax.block_until_ready(st)
+    step_s = max(time.perf_counter() - t0, 1e-6)
+    state_holder["state"] = st
+
+    t0 = time.perf_counter()
+    ckpt.save(state_holder["steps_done"], state_holder["state"],
+              extra={"data": data.state()}, blocking=True)
+    save_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ckpt.restore(ckpt.latest_step(), state_holder["state"])
+    restore_s = time.perf_counter() - t0
+
+    # one engine work unit == one spot leg (STEPS_PER_LEG train steps)
+    overhead = restart_overhead_from_timing(save_s, restore_s, step_s,
+                                            steps_per_unit=STEPS_PER_LEG)
+    work = WorkModel.on_notice(0.05, total_work=1.0,
+                               restart_overhead=min(overhead, 2.0))
+    market = SpotMarket((
+        SpotPool(BathtubGCP(), price=0.6, hazard=0.5, notice=0.1),))
+    replay = run_market_sim(
+        Exponential(LAM), market, NoticeAwareKernel(checkpoint_time=0.05),
+        {"r": ctl.r},  # the admission rate the controller just learned
+        k=K, n_events=4_000, key=jax.random.key(1), work=work)
+    print(f"\ncheckpoint timing:   step {step_s * 1e3:.0f}ms  "
+          f"save {save_s * 1e3:.0f}ms  restore {restore_s * 1e3:.0f}ms  "
+          f"→ restart_overhead {overhead:.2f} legs")
+    print(f"engine replay (work=): cost/job {replay['avg_cost']:.3f}, "
+          f"finished {replay['jobs_finished']:.0f}, "
+          f"checkpoints {replay['checkpoints_taken']:.0f}, "
+          f"work recomputed {replay['work_recomputed']:.2f} legs")
+
 
 if __name__ == "__main__":
-    main()
+    # optional event-count horizon (CI smoke uses a short one)
+    main(int(sys.argv[1]) if len(sys.argv) > 1 else 12_000)

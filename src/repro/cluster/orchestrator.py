@@ -57,6 +57,7 @@ from repro.core.market import (
 from repro.core.policies import (
     ThreePhaseKernel,
     ThreePhasePolicy,
+    deadline_slack,
     three_phase_admit_prob,
 )
 from repro.core.regions import RegionTopology, host_route
@@ -495,6 +496,22 @@ class SpotCluster:
                 k=self.k if k is None else k, n_events=n_events, key=key,
                 n_seeds=n_seeds, telemetry=telemetry, shard=shard, mesh=mesh,
             )
+
+    # ------------------------------------------------------ deadline slack
+    def job_slack(self, *, deadline: float, job: Job,
+                  od_step_hours: float, buffer: float = 0.0) -> float:
+        """Host-side can't-be-late watchdog for a live job.
+
+        The engine's :class:`~repro.core.work.CantBeLateKernel` law on the
+        orchestrator's clock: how much longer ``job`` may keep waiting on
+        spot before migrating to on-demand (``od_step_hours`` per
+        remaining work step) would no longer meet ``deadline``
+        (:func:`repro.core.policies.deadline_slack` — the same arithmetic
+        the traced watchdog uses).  ``<= 0`` means migrate NOW.
+        """
+        return float(deadline_slack(deadline, self._t - job.arrival_time,
+                                    float(job.work_steps), od_step_hours,
+                                    buffer))
 
     # ----------------------------------------------------------- stragglers
     def observe_step_time(self, pod_id: int, seconds: float) -> bool:

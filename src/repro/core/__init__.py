@@ -63,6 +63,7 @@ from repro.core.analytic import (
     theorem5_delta,
 )
 from repro.core.cost import (
+    all_ondemand_cost,
     cost_lower_bound,
     market_cost_lower_bound,
     pi0_from_cost,
@@ -99,6 +100,7 @@ from repro.core.env import (
     inject_price_spike,
     inject_storm,
     markov_timeline,
+    timeline_from_trace,
 )
 from repro.core.lp import (
     knapsack_lp,
@@ -134,7 +136,15 @@ from repro.core.policies import (
     ThreePhasePolicy,
     three_phase_admit_prob,
 )
+from repro.core.policies import deadline_slack
 from repro.core.simulator import run_queue_sim, run_single_slot_sim
+from repro.core.work import (
+    CantBeLateKernel,
+    WorkModel,
+    WorkState,
+    init_work_state,
+    restart_overhead_from_timing,
+)
 from repro.core.waittime import (
     DeterministicWait,
     ExponentialWait,
@@ -153,12 +163,12 @@ __all__ = [
     "theorem2_delta_max", "theorem5_cost", "theorem5_delta",
     "cost_lower_bound", "market_cost_lower_bound", "pi0_from_cost",
     "region_cost_lower_bound", "theorem1_cost", "theorem1_market_cost",
-    "theorem1_region_cost", "DEFAULT_CHUNK_EVENTS",
+    "theorem1_region_cost", "all_ondemand_cost", "DEFAULT_CHUNK_EVENTS",
     "EngineState", "EnvTimeline", "MarketState", "NonFiniteStatsError",
     "Regime", "Telemetry",
     "MarketWindowStats", "PolicyKernel", "RegionState", "RegionWindowStats",
     "WindowStats", "inject_blackout", "inject_price_spike", "inject_storm",
-    "markov_timeline", "run_market_sim",
+    "markov_timeline", "timeline_from_trace", "run_market_sim",
     "run_market_sweep", "run_region_sim", "run_region_sweep", "run_sim",
     "run_sweep", "summarize",
     "summarize_market", "summarize_region", "knapsack_lp",
@@ -170,7 +180,9 @@ __all__ = [
     "RegionView", "RoutingKernel", "as_topology", "choose_region",
     "host_route", "SingleSlotKernel",
     "SingleSlotPolicy", "ThreePhaseKernel", "ThreePhasePolicy",
-    "three_phase_admit_prob", "run_queue_sim", "run_single_slot_sim",
+    "three_phase_admit_prob", "deadline_slack", "run_queue_sim",
+    "run_single_slot_sim", "CantBeLateKernel", "WorkModel", "WorkState",
+    "init_work_state", "restart_overhead_from_timing",
     "DeterministicWait", "ExponentialWait", "InfiniteWait", "TwoPointWait",
     "laplace_target", "optimal_deterministic", "optimal_exp_rate",
     "optimal_two_point",

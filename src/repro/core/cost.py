@@ -37,6 +37,25 @@ def cost_lower_bound(k: float, lam: float, mu: float, delta: float) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Work-structured jobs (see repro.core.work)
+# ---------------------------------------------------------------------------
+
+
+def all_ondemand_cost(k: float, jobs: float, total_work: float = 1.0) -> float:
+    """The all-on-demand cost floor for work-structured jobs.
+
+    Sending every one of ``jobs`` jobs straight to on-demand costs
+    ``k × total_work`` each — no spot savings, no preemption risk, and (by
+    construction, for any feasible deadline ``total_work·od_time ≤ D``)
+    zero deadline misses.  This is the safety baseline every
+    checkpoint/safety-net kernel must beat on cost while matching on
+    misses: the can't-be-late acceptance bar
+    (``tests/test_work.py``, EXPERIMENTS.md §Checkpoint-priced recovery).
+    """
+    return float(k) * float(jobs) * float(total_work)
+
+
+# ---------------------------------------------------------------------------
 # Heterogeneous-pool market generalization (see repro.core.market)
 # ---------------------------------------------------------------------------
 

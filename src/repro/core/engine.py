@@ -131,11 +131,16 @@ from repro.core.clocks import (SlabLayout, build_slab_layout, hazard_clock,
                                thinning_pick, window_slab)
 from repro.core.env import (EnvState, EnvTimeline, clock_rescale, env_row,
                             init_env_state, inv_avail)
-from repro.core.market import PoolState, SpotMarket, as_market
+from repro.core.market import (PoolState, SpotMarket, as_market,
+                               checkpoint_within_notice)
+from repro.core.policies import deadline_slack
 from repro.core.regions import RegionTopology, RegionView, as_topology
+from repro.core.work import WorkModel, WorkState, init_work_state
 from repro.distributed.sharding import (lane_mesh, lane_spec, pad_lanes,
                                         shard_map_1d)
 from repro.obs.shocks import env_update, env_zeros, summarize_env
+from repro.obs.survival import (summarize_survival, survival_update,
+                                survival_zeros)
 from repro.kernels.sweep import (batched_events, batched_event_windows_ref,
                                  default_interpret)
 from repro.obs.stats import (Telemetry, summarize_telemetry,
@@ -238,7 +243,8 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
                   layout: SlabLayout | None, carry: EngineState,
                   stats: WindowStats, params, k_cost: jax.Array,
                   x: jax.Array | None = None, tel: Telemetry | None = None,
-                  ep: dict | None = None
+                  ep: dict | None = None, work: WorkModel | None = None,
+                  wk: dict | None = None
                   ) -> tuple[EngineState, WindowStats]:
     """Process one merged event (job arrival / spot slot / wait deadline).
 
@@ -264,7 +270,21 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
     at each crossing.  A single open-ended segment reproduces the
     ``ep=None`` arithmetic bit-for-bit (every mask statically False-
     valued, every multiplier exactly 1.0).
+
+    ``work`` (static :class:`~repro.core.work.WorkModel`) + ``wk`` (its
+    traced params dict) switch ``carry`` to an *outermost*
+    ``(carry, WorkState)`` pair and ``stats`` to an outermost
+    ``(stats, SurvivalWindowStats)`` pair: every served unit pays down
+    restart-overhead debt before making progress, a serve completes the
+    job only when its remaining total clears, and the survival ledger
+    gains job-level admission/finish/deadline-miss accounting.  The
+    single-queue loop has no preemption, so rollback never fires here;
+    the identity model (``WorkModel()``) makes every serve final and the
+    base statistics bit-for-bit today's.
     """
+    if work is not None:
+        carry, wk_c = carry
+        stats, wstats = stats
     if ep is not None:
         carry, env_c = carry
         stats, estats = stats
@@ -279,6 +299,25 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
     iota = jax.lax.iota(jnp.int32, rmax)
 
     budgets_masked = jnp.where(carry.occ, carry.budgets, INF)
+    if work is not None and getattr(kernel, "safety_net", False):
+        # can't-be-late watchdog: a job's panic time is the latest instant
+        # still compatible with finishing on demand by its deadline
+        # (deadline_slack); merging it into the budget race reuses the
+        # defect-on-deadline machinery wholesale, so a panic IS a
+        # defection to on-demand — just one forced early enough to land
+        # on time.  Clamped at 0: an already-doomed job defects at the
+        # next event rather than arming a negative clock.
+        buf = np.float32(getattr(kernel, "slack_buffer", 0.0))
+        rem_tot_all = wk_c.oh + jnp.maximum(wk["total_work"] - wk_c.prog,
+                                            0.0)
+        panic_at = jnp.maximum(
+            deadline_slack(wk["deadline"], wk_c.life, rem_tot_all,
+                           wk["od_time"], buf), 0.0)
+        panic_at = jnp.where(carry.occ, panic_at, INF)
+        panic_armed = panic_at < budgets_masked
+        budgets_masked = jnp.minimum(budgets_masked, panic_at)
+    else:
+        panic_armed = None
     deadline = jnp.min(budgets_masked)
     defect_slot = jnp.argmin(budgets_masked)
 
@@ -316,11 +355,42 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
     served = is_spot & has_job
     wait_served = jnp.sum(jnp.where(iota == serve_slot, ages, 0.0))
 
+    if work is not None:
+        # one unit of service pays down restart-overhead debt first and
+        # spills the remainder into real progress; the serve *completes*
+        # the job only when it clears the remaining total.  A partial
+        # serve keeps the slot occupied with its join order (the FIFO
+        # argmin keeps picking it), pays the spot price, and counts as a
+        # leg in the base stats — the paper's renewal accounting is
+        # untouched; job-level truth lives in the survival ledger.
+        serve_vec = served & (iota == serve_slot)
+        rem_tot = wk_c.oh + (wk["total_work"] - wk_c.prog)
+        rem_serve = jnp.sum(jnp.where(iota == serve_slot, rem_tot, 0.0))
+        oh_new = jnp.where(serve_vec, jnp.maximum(wk_c.oh - 1.0, 0.0),
+                           wk_c.oh)
+        spill = jnp.maximum(1.0 - wk_c.oh, 0.0)
+        prog_new = jnp.where(
+            serve_vec, jnp.minimum(wk_c.prog + spill, wk["total_work"]),
+            wk_c.prog)
+        done_inc = jnp.sum(jnp.where(serve_vec, prog_new - wk_c.prog, 0.0))
+        if work.ckpt == "periodic":
+            take_vec = (serve_vec & (rem_tot > 1.0)
+                        & (prog_new - wk_c.ckpt >= wk["ckpt_period"]))
+            ckpt_new = jnp.where(take_vec, prog_new, wk_c.ckpt)
+            oh_new = oh_new + jnp.where(take_vec, wk["ckpt_cost"], 0.0)
+            ckpt_taken = jnp.any(take_vec)
+        else:
+            ckpt_new = wk_c.ckpt
+            ckpt_taken = jnp.zeros((), jnp.bool_)
+        complete_serve = served & (rem_serve <= 1.0)
+    else:
+        complete_serve = served
+
     # ---- deadline: the minimal-budget job defects to on-demand ----
     defected = is_deadline  # deadline < INF implies an occupied slot
     age_defect = jnp.sum(jnp.where(iota == defect_slot, ages, 0.0))
 
-    leave = served | defected
+    leave = complete_serve | defected
     leave_slot = jnp.where(served, serve_slot, defect_slot)
 
     join_mask = admit & (iota == join_slot)
@@ -329,6 +399,11 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
     budgets = jnp.where(join_mask, budget, budgets)
     occ = (carry.occ | join_mask) & (~leave_mask)
     order = jnp.where(join_mask, carry.next_seq, carry.order)
+    if work is not None:
+        life_new = jnp.where(join_mask, 0.0, wk_c.life + dt)
+        prog_new = jnp.where(join_mask, 0.0, prog_new)
+        oh_new = jnp.where(join_mask, 0.0, oh_new)
+        ckpt_new = jnp.where(join_mask, 0.0, ckpt_new)
 
     if layout is None:
         job_draw = job.sample(k_job)
@@ -403,6 +478,7 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
             cost_valid=served | od_now | defected,
             loc=jnp.zeros((), jnp.int32), n_locs=1, qlen=new_carry.qlen)
     out_stats = (new_stats, tstats) if tel is not None else new_stats
+    out_carry = new_carry
     if ep is not None:
         estats = env_update(
             estats, is_boundary=is_boundary,
@@ -415,8 +491,34 @@ def _engine_event(job: ArrivalProcess, spot: ArrivalProcess,
                 env_row(ep["t_end"], seg_new) - env_row(ep["t_end"], seg),
                 env_c.next_boundary - dt),
             seg=seg_new)
-        return (new_carry, new_env), (out_stats, estats)
-    return new_carry, out_stats
+        out_carry = (new_carry, new_env)
+        out_stats = (out_stats, estats)
+    if work is not None:
+        life_def = jnp.sum(jnp.where(iota == defect_slot, wk_c.life + dt,
+                                     0.0))
+        rem_def = jnp.sum(jnp.where(iota == defect_slot, rem_tot, 0.0))
+        life_srv = jnp.sum(jnp.where(iota == serve_slot, wk_c.life + dt,
+                                     0.0))
+        od = wk["od_time"]
+        # hard deadline-miss accounting: a job finishes at its last served
+        # unit, or when it migrates to on-demand (od finish time = life at
+        # migration + remaining work × od_time — live migration, the
+        # can't-be-late convention)
+        miss = ((od_now & (wk["total_work"] * od > wk["deadline"]))
+                | (defected & (life_def + rem_def * od > wk["deadline"]))
+                | (complete_serve & (life_srv > wk["deadline"])))
+        panic = (defected & jnp.any((iota == defect_slot) & panic_armed)
+                 if panic_armed is not None else jnp.zeros((), jnp.bool_))
+        zf = jnp.zeros((), jnp.float32)
+        wstats = survival_update(
+            wstats, admitted=is_job,
+            finished=od_now | complete_serve | defected, missed=miss,
+            checkpoint=ckpt_taken, panic=panic, work_done=done_inc,
+            work_lost=zf, work_recomputed=zf, overhead_paid=zf)
+        return (out_carry, WorkState(prog=prog_new, oh=oh_new,
+                                     ckpt=ckpt_new, life=life_new)), \
+            (out_stats, wstats)
+    return out_carry, out_stats
 
 
 def _rebase_order(state):
@@ -445,6 +547,40 @@ def _rebase_order_env(state):
     cursor crosses windows untouched)."""
     base, env_c = state
     return (_rebase_order(base), env_c)
+
+
+def _rebase_order_any(state):
+    """:func:`_rebase_order` through arbitrary ``((state, env?), work?)``
+    nesting — the window-boundary epilogue when the work axis is on (env
+    cursor and work structure cross windows untouched)."""
+    if hasattr(state, "occ"):
+        return _rebase_order(state)
+    return (_rebase_order_any(state[0]),) + tuple(state[1:])
+
+
+def _rebase_for(ep, work):
+    """Window-boundary rebase epilogue for the active (env, work) axes.
+
+    Returns the exact pre-work function objects when ``work`` is off, so
+    the ``work=None`` program is the identical jaxpr it always was."""
+    if work is not None:
+        return _rebase_order_any
+    return _rebase_order if ep is None else _rebase_order_env
+
+
+def _base_key_state(state):
+    """Innermost engine state of an arbitrarily wrapped (env/work) pair."""
+    while not hasattr(state, "key"):
+        state = state[0]
+    return state
+
+
+def _replace_base_key(state, key):
+    """Swap the lane key on the innermost engine state, preserving the
+    surrounding (env/work) tuple nesting."""
+    if hasattr(state, "key"):
+        return state._replace(key=key)
+    return (_replace_base_key(state[0], key),) + tuple(state[1:])
 
 
 def _scan_window(step, zeros, state, n_events: int):
@@ -500,13 +636,14 @@ def _scan_window_slab(step, zeros, state, n_events: int, n_cols: int,
     ladder with the same shapes, so the Pallas/ref executors consume
     bitwise-identical slabs.
 
-    ``paired`` flags an ``(engine-state, EnvState)`` tuple state (env
-    axis on; NamedTuples are tuples, so this cannot be sniffed) — the
-    slab ladder walks the inner engine state's key either way."""
+    ``paired`` flags a tuple-wrapped state — ``(engine, EnvState)`` when
+    the env axis is on, and/or an outermost ``(state, WorkState)`` when
+    the work axis is on (NamedTuples are tuples, so this cannot be
+    sniffed) — the slab ladder walks the innermost engine state's key
+    either way."""
     if paired:
-        base, env_c = state
-        key, slab = window_slab(base.key, n_events, n_cols)
-        state = (base._replace(key=key), env_c)
+        key, slab = window_slab(_base_key_state(state).key, n_events, n_cols)
+        state = _replace_base_key(state, key)
     else:
         key, slab = window_slab(state.key, n_events, n_cols)
         state = state._replace(key=key)
@@ -567,13 +704,16 @@ def _engine_layout(job: ArrivalProcess, spot: ArrivalProcess,
 
 
 def _with_zeros(zeros, tel: Telemetry | None, n_locs: int,
-                env: bool = False):
+                env: bool = False, work: bool = False):
     """Pair base window zeros with telemetry zeros when that axis is on,
-    then (outermost) with shock-counter zeros when the env axis is on."""
+    then with shock-counter zeros when the env axis is on, then
+    (outermost) with survival-ledger zeros when the work axis is on."""
     if tel is not None:
         zeros = (zeros, telemetry_zeros(tel, n_locs))
     if env:
         zeros = (zeros, env_zeros())
+    if work:
+        zeros = (zeros, survival_zeros())
     return zeros
 
 
@@ -581,23 +721,28 @@ def run_window(job: ArrivalProcess, spot: ArrivalProcess,
                kernel: PolicyKernel, rmax: int, state: EngineState, params,
                k_cost: jax.Array, n_events: int,
                layout: SlabLayout | None = None,
-               tel: Telemetry | None = None, ep: dict | None = None
+               tel: Telemetry | None = None, ep: dict | None = None,
+               work: WorkModel | None = None, wk: dict | None = None
                ) -> tuple[EngineState, WindowStats]:
     """Run ``n_events`` merged events; return state + one window of sums."""
     step = functools.partial(_engine_event, job, spot, kernel, rmax, layout,
-                             params=params, k_cost=k_cost, tel=tel, ep=ep)
-    zeros = _with_zeros(WindowStats.zeros(), tel, 1, env=ep is not None)
+                             params=params, k_cost=k_cost, tel=tel, ep=ep,
+                             work=work, wk=wk)
+    zeros = _with_zeros(WindowStats.zeros(), tel, 1, env=ep is not None,
+                        work=work is not None)
     if layout is None:
         return _scan_window(lambda c, s: step(c, s), zeros, state, n_events)
     return _scan_window_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
-                             n_events, layout.n_cols, paired=ep is not None)
+                             n_events, layout.n_cols,
+                             paired=(ep is not None) or (work is not None))
 
 
 def run_chunked(job: ArrivalProcess, spot: ArrivalProcess,
                 kernel: PolicyKernel, rmax: int, state: EngineState, params,
                 k_cost: jax.Array, n_events: int, chunk_events: int,
                 layout: SlabLayout | None = None,
-                tel: Telemetry | None = None, ep: dict | None = None
+                tel: Telemetry | None = None, ep: dict | None = None,
+                work: WorkModel | None = None, wk: dict | None = None
                 ) -> tuple[EngineState, WindowStats]:
     """Run exactly ``n_events`` events as stacked float32 chunk windows.
 
@@ -605,40 +750,49 @@ def run_chunked(job: ArrivalProcess, spot: ArrivalProcess,
     float64 so long horizons do not hit float32 sum saturation.
     """
     step = functools.partial(_engine_event, job, spot, kernel, rmax, layout,
-                             params=params, k_cost=k_cost, tel=tel, ep=ep)
-    zeros = _with_zeros(WindowStats.zeros(), tel, 1, env=ep is not None)
-    rebase = _rebase_order if ep is None else _rebase_order_env
+                             params=params, k_cost=k_cost, tel=tel, ep=ep,
+                             work=work, wk=wk)
+    zeros = _with_zeros(WindowStats.zeros(), tel, 1, env=ep is not None,
+                        work=work is not None)
+    rebase = _rebase_for(ep, work)
     if layout is None:
         return _scan_chunked(lambda c, s: step(c, s), zeros, state,
                              n_events, chunk_events, rebase=rebase)
     return _scan_chunked_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
                               n_events, chunk_events, layout.n_cols,
-                              paired=ep is not None, rebase=rebase)
+                              paired=(ep is not None) or (work is not None),
+                              rebase=rebase)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("job", "spot", "kernel", "rmax", "n_events",
-                     "chunk_events", "burn_in", "rng", "tel"),
+                     "chunk_events", "burn_in", "rng", "tel", "work"),
 )
 def _run_sim_jit(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
-                 rng, params, k_cost, key, tel=None, ep=None):
+                 rng, params, k_cost, key, tel=None, ep=None, work=None,
+                 wk=None):
     """Single-point entry, compiled once per static signature at module scope
     (the seed re-jitted its burn-in path on every call).
 
     ``ep`` is traced (an env-params dict, or None — a leafless pytree, so
-    the ``env=None`` program is the same jaxpr as before the axis)."""
+    the ``env=None`` program is the same jaxpr as before the axis);
+    ``work``/``wk`` are the static/traced halves of the work axis, with
+    the same leafless-when-off property."""
     layout = _engine_layout(job, spot, kernel) if rng == "slab" else None
     state = init_engine_state(key, job, spot, rmax, ep=ep)
     if ep is not None:
         state = (state, init_env_state(ep))
+    if work is not None:
+        state = (state, init_work_state(rmax))
     if burn_in:
         state, _ = run_window(job, spot, kernel, rmax, state, params, k_cost,
-                              burn_in, layout=layout, tel=tel, ep=ep)
-        state = (_rebase_order(state) if ep is None
-                 else _rebase_order_env(state))
+                              burn_in, layout=layout, tel=tel, ep=ep,
+                              work=work, wk=wk)
+        state = _rebase_for(ep, work)(state)
     return run_chunked(job, spot, kernel, rmax, state, params, k_cost,
-                       n_events, chunk_events, layout=layout, tel=tel, ep=ep)
+                       n_events, chunk_events, layout=layout, tel=tel, ep=ep,
+                       work=work, wk=wk)
 
 
 def _check_rng(rng: str) -> None:
@@ -662,6 +816,17 @@ def _check_env(env) -> None:
 
 def _env_params(env: EnvTimeline | None, n_locs: int):
     return None if env is None else env.params(n_locs)
+
+
+def _check_work(work, kernel) -> None:
+    if work is not None and not isinstance(work, WorkModel):
+        raise TypeError(
+            f"work must be a repro.core.work.WorkModel or None, got "
+            f"{work!r}")
+    if work is None and getattr(kernel, "safety_net", False):
+        raise ValueError(
+            "a safety-net kernel (CantBeLateKernel) tracks per-job slack "
+            "and needs the work axis: pass work=WorkModel(...)")
 
 
 def _check_run_shape(name: str, n_events: int, burn_in: int) -> None:
@@ -740,28 +905,31 @@ def _unflatten_lanes(stats, g: int, s: int):
 @functools.partial(
     jax.jit,
     static_argnames=("job", "spot", "kernel", "rmax", "n_events",
-                     "chunk_events", "burn_in", "rng", "tel"),
+                     "chunk_events", "burn_in", "rng", "tel", "work"),
 )
 def _run_sweep_jit(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
-                   rng, params, k_cost, keys, tel=None, ep=None):
+                   rng, params, k_cost, keys, tel=None, ep=None, work=None,
+                   wk=None):
     """(grid × seeds) fleet as one nested-vmap XLA program (broadcast
     ``in_axes`` — see :func:`_flat_lane_args` for why not flat lanes).
-    ``ep`` is closed over by ``one`` (grid-constant, so the nested vmap
-    keeps it symbolically unbatched)."""
+    ``ep``/``wk`` are closed over by ``one`` (grid-constant, so the nested
+    vmap keeps them symbolically unbatched)."""
     layout = _engine_layout(job, spot, kernel) if rng == "slab" else None
 
     def one(p, kc, key):
         state = init_engine_state(key, job, spot, rmax, ep=ep)
         if ep is not None:
             state = (state, init_env_state(ep))
+        if work is not None:
+            state = (state, init_work_state(rmax))
         if burn_in:
             state, _ = run_window(job, spot, kernel, rmax, state, p, kc,
-                                  burn_in, layout=layout, tel=tel, ep=ep)
-            state = (_rebase_order(state) if ep is None
-                     else _rebase_order_env(state))
+                                  burn_in, layout=layout, tel=tel, ep=ep,
+                                  work=work, wk=wk)
+            state = _rebase_for(ep, work)(state)
         _, stats = run_chunked(job, spot, kernel, rmax, state, p, kc,
                                n_events, chunk_events, layout=layout,
-                               tel=tel, ep=ep)
+                               tel=tel, ep=ep, work=work, wk=wk)
         return stats
 
     per_seeds = jax.vmap(one, in_axes=(None, None, 0))
@@ -795,11 +963,12 @@ def _env_lane_blocks(ep: dict, lanes: int):
     jax.jit,
     static_argnames=("job", "spot", "kernel", "rmax", "n_events",
                      "chunk_events", "burn_in", "tile", "interpret",
-                     "executor", "rng", "tel"),
+                     "executor", "rng", "tel", "work"),
 )
 def _run_sweep_pallas_jit(job, spot, kernel, rmax, n_events, chunk_events,
                           burn_in, tile, interpret, params, k_cost, keys,
-                          executor="pallas", rng="split", tel=None, ep=None):
+                          executor="pallas", rng="split", tel=None, ep=None,
+                          work=None, wk=None):
     """The (grid × seeds) fleet as ONE Pallas batched-event kernel call.
 
     Lanes are grid-major (seed fastest; :func:`_flat_lane_args`); per-lane
@@ -826,20 +995,27 @@ def _run_sweep_pallas_jit(job, spot, kernel, rmax, n_events, chunk_events,
         # lane state become the (engine, env-cursor) pair
         params_b["ep"], es0 = _env_lane_blocks(ep, keys_f.shape[0])
         state0 = (state0, es0)
+    if work is not None:
+        # work params ride as per-lane VMEM blocks like ep; the work
+        # structure wraps outermost, after any env pairing
+        params_b["wk"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (keys_f.shape[0],)), wk)
+        state0 = (state0, init_work_state(rmax, keys_f.shape[0]))
 
     if rng == "slab":
         def step(carry, stats, p, x):
             return _engine_event(job, spot, kernel, rmax, layout, carry,
                                  stats, p["params"], p["k"], x=x, tel=tel,
-                                 ep=p.get("ep"))
+                                 ep=p.get("ep"), work=work, wk=p.get("wk"))
     else:
         def step(carry, stats, p):
             return _engine_event(job, spot, kernel, rmax, None, carry,
                                  stats, p["params"], p["k"], tel=tel,
-                                 ep=p.get("ep"))
+                                 ep=p.get("ep"), work=work, wk=p.get("wk"))
 
-    zeros = _with_zeros(WindowStats.zeros(), tel, 1, env=ep is not None)
-    epilogue = _rebase_order if ep is None else _rebase_order_env
+    zeros = _with_zeros(WindowStats.zeros(), tel, 1, env=ep is not None,
+                        work=work is not None)
+    epilogue = _rebase_for(ep, work)
     if executor == "ref":
         _, stats = batched_event_windows_ref(
             step, state0, params_b, zeros, plan, xs=xs,
@@ -876,7 +1052,7 @@ def _pad_count(lanes: int, mesh) -> int:
 
 def _sweep_lanes(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
                  tile, interpret, params_f, k_f, keys_f, *, executor, rng,
-                 tel=None, ep=None):
+                 tel=None, ep=None, work=None, wk=None):
     """One shard's worth of flat lanes through the requested executor.
 
     The per-shard body of the ``shard="lanes"`` dispatch: arguments are
@@ -897,14 +1073,16 @@ def _sweep_lanes(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
             state = init_engine_state(key, job, spot, rmax, ep=ep)
             if ep is not None:
                 state = (state, init_env_state(ep))
+            if work is not None:
+                state = (state, init_work_state(rmax))
             if burn_in:
                 state, _ = run_window(job, spot, kernel, rmax, state, p, kc,
-                                      burn_in, layout=layout, tel=tel, ep=ep)
-                state = (_rebase_order(state) if ep is None
-                         else _rebase_order_env(state))
+                                      burn_in, layout=layout, tel=tel, ep=ep,
+                                      work=work, wk=wk)
+                state = _rebase_for(ep, work)(state)
             _, stats = run_chunked(job, spot, kernel, rmax, state, p, kc,
                                    n_events, chunk_events, layout=layout,
-                                   tel=tel, ep=ep)
+                                   tel=tel, ep=ep, work=work, wk=wk)
             return stats
 
         return jax.vmap(one)(params_f, k_f, keys_f)
@@ -917,20 +1095,25 @@ def _sweep_lanes(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
     if ep is not None:
         params_b["ep"], es0 = _env_lane_blocks(ep, keys_f.shape[0])
         state0 = (state0, es0)
+    if work is not None:
+        params_b["wk"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (keys_f.shape[0],)), wk)
+        state0 = (state0, init_work_state(rmax, keys_f.shape[0]))
 
     if layout is not None:
         def step(carry, stats, p, x):
             return _engine_event(job, spot, kernel, rmax, layout, carry,
                                  stats, p["params"], p["k"], x=x, tel=tel,
-                                 ep=p.get("ep"))
+                                 ep=p.get("ep"), work=work, wk=p.get("wk"))
     else:
         def step(carry, stats, p):
             return _engine_event(job, spot, kernel, rmax, None, carry,
                                  stats, p["params"], p["k"], tel=tel,
-                                 ep=p.get("ep"))
+                                 ep=p.get("ep"), work=work, wk=p.get("wk"))
 
-    zeros = _with_zeros(WindowStats.zeros(), tel, 1, env=ep is not None)
-    epilogue = _rebase_order if ep is None else _rebase_order_env
+    zeros = _with_zeros(WindowStats.zeros(), tel, 1, env=ep is not None,
+                        work=work is not None)
+    epilogue = _rebase_for(ep, work)
     if executor == "ref":
         _, stats = batched_event_windows_ref(
             step, state0, params_b, zeros, plan, xs=xs, epilogue=epilogue)
@@ -947,12 +1130,12 @@ def _sweep_lanes(job, spot, kernel, rmax, n_events, chunk_events, burn_in,
     jax.jit,
     static_argnames=("job", "spot", "kernel", "rmax", "n_events",
                      "chunk_events", "burn_in", "tile", "interpret", "mesh",
-                     "executor", "rng", "tel"),
+                     "executor", "rng", "tel", "work"),
 )
 def _run_sweep_sharded_jit(job, spot, kernel, rmax, n_events, chunk_events,
                            burn_in, tile, interpret, mesh, params, k_cost,
                            keys, executor="xla", rng="split", tel=None,
-                           ep=None):
+                           ep=None, work=None, wk=None):
     """The (grid × seeds) fleet lane-partitioned across a 1-D device mesh.
 
     Flatten to grid-major lanes, pad to a mesh-size multiple with copies
@@ -972,14 +1155,15 @@ def _run_sweep_sharded_jit(job, spot, kernel, rmax, n_events, chunk_events,
                                       _pad_count(lanes, mesh))
     spec, rspec = lane_spec(mesh), jax.sharding.PartitionSpec()
 
-    def local(pf, kf, keysf, ep_):
+    def local(pf, kf, keysf, ep_, wk_):
         return _sweep_lanes(job, spot, kernel, rmax, n_events, chunk_events,
                             burn_in, tile, interpret, pf, kf, keysf,
-                            executor=executor, rng=rng, tel=tel, ep=ep_)
+                            executor=executor, rng=rng, tel=tel, ep=ep_,
+                            work=work, wk=wk_)
 
     stats = shard_map_1d(local, mesh=mesh,
-                         in_specs=(spec, spec, spec, rspec),
-                         out_specs=spec)(params_f, k_f, keys_f, ep)
+                         in_specs=(spec, spec, spec, rspec, rspec),
+                         out_specs=spec)(params_f, k_f, keys_f, ep, wk)
     if lanes != keys_f.shape[0]:
         stats = jax.tree.map(lambda x: x[:lanes], stats)
     return _unflatten_lanes(stats, g, s)
@@ -1011,7 +1195,7 @@ def _merge_telemetry(out: dict, telemetry: Telemetry, tstats,
 
 
 def summarize(stats: WindowStats, telemetry: Telemetry | None = None,
-              env=None) -> dict:
+              env=None, work=None) -> dict:
     """Reduce chunked (…, n_chunks) sums in float64; derive long-run stats.
 
     Leading batch axes (grid, seeds) pass through: every value in the
@@ -1022,9 +1206,15 @@ def summarize(stats: WindowStats, telemetry: Telemetry | None = None,
     With ``env`` (truthy), ``stats`` is additionally wrapped in an
     outermost ``(stats, EnvWindowStats)`` pair and the dict gains the
     :func:`repro.obs.summarize_env` shock/degradation counters.
+    With ``work`` (truthy), the outermost pair is
+    ``(stats, SurvivalWindowStats)`` and the dict gains the
+    :func:`repro.obs.summarize_survival` job-level ledger.
     Raises :class:`NonFiniteStatsError` when a reduced base statistic is
     NaN/inf (silent poisoned stats fail loudly at the host boundary).
     """
+    wstats = None
+    if work is not None:
+        stats, wstats = stats
     estats = None
     if env is not None:
         stats, estats = stats
@@ -1054,6 +1244,8 @@ def summarize(stats: WindowStats, telemetry: Telemetry | None = None,
         out = _merge_telemetry(out, telemetry, tstats, stats.time_elapsed)
     if estats is not None:
         out.update(summarize_env(estats))
+    if wstats is not None:
+        out.update(summarize_survival(wstats))
     return out
 
 
@@ -1097,6 +1289,7 @@ def run_sim(
     interpret: bool | None = None,
     telemetry: Telemetry | None = None,
     env: EnvTimeline | None = None,
+    work: WorkModel | None = None,
 ) -> dict:
     """Run one policy at one parameter point; return long-run scalar stats.
 
@@ -1115,13 +1308,19 @@ def run_sim(
     through a piecewise-constant environment — price/hazard/availability
     segments, storms, blackouts — and adds the shock counters to the
     returned dict (module docstring of :mod:`repro.core.env`).
+    ``work`` (a :class:`repro.core.work.WorkModel`) gives every job a
+    work structure — multi-unit service, restart overhead, checkpoints,
+    deadlines — and adds the survival ledger to the returned dict
+    (module docstring of :mod:`repro.core.work`).
     """
     params = {} if params is None else params
     _check_rng(rng)
     _check_telemetry(telemetry)
     _check_env(env)
+    _check_work(work, kernel)
     _check_run_shape("run_sim", n_events, burn_in)
     ep = _env_params(env, 1)
+    wk = None if work is None else work.params()
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
     with annotate(f"repro.run_sim[{impl}]"):
         if impl in ("pallas", "ref"):
@@ -1130,17 +1329,19 @@ def run_sim(
                 default_interpret() if interpret is None else interpret,
                 jax.tree.map(lambda x: jnp.asarray(x)[None], params),
                 jnp.float32(k)[None], _raw_keys(key)[None], executor=impl,
-                rng=rng, tel=telemetry, ep=ep)
+                rng=rng, tel=telemetry, ep=ep, work=work, wk=wk)
             stats = jax.tree.map(lambda x: x[0, 0], stats)
         elif impl == "xla":
             _, stats = _run_sim_jit(job, spot, kernel, rmax, n_events, chunk,
                                     burn_in, rng, params, jnp.float32(k),
-                                    key, tel=telemetry, ep=ep)
+                                    key, tel=telemetry, ep=ep, work=work,
+                                    wk=wk)
         else:
             raise ValueError(
                 f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
     return {name: _scalar_or_array(v)
-            for name, v in summarize(stats, telemetry, env=env).items()}
+            for name, v in summarize(stats, telemetry, env=env,
+                                     work=work).items()}
 
 
 def run_sweep(
@@ -1162,6 +1363,7 @@ def run_sweep(
     interpret: bool | None = None,
     telemetry: Telemetry | None = None,
     env: EnvTimeline | None = None,
+    work: WorkModel | None = None,
     shard: str = "none",
     mesh=None,
 ) -> dict:
@@ -1202,9 +1404,11 @@ def run_sweep(
     _check_rng(rng)
     _check_telemetry(telemetry)
     _check_env(env)
+    _check_work(work, kernel)
     _check_shard("run_sweep", shard, mesh)
     _check_run_shape("run_sweep", n_events, burn_in)
     ep = _env_params(env, 1)
+    wk = None if work is None else work.params()
     params = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params)
     k = jnp.asarray(k, jnp.float32)
     grid_shape = jnp.broadcast_shapes(
@@ -1225,22 +1429,22 @@ def run_sweep(
                 default_interpret() if interpret is None else interpret,
                 lane_mesh() if mesh is None else mesh, params_flat, k_flat,
                 _raw_keys(keys), executor=impl, rng=rng, tel=telemetry,
-                ep=ep)
+                ep=ep, work=work, wk=wk)
         elif impl in ("pallas", "ref"):
             stats = _run_sweep_pallas_jit(
                 job, spot, kernel, rmax, n_events, chunk, burn_in, tile,
                 default_interpret() if interpret is None else interpret,
                 params_flat, k_flat, _raw_keys(keys), executor=impl,
-                rng=rng, tel=telemetry, ep=ep)
+                rng=rng, tel=telemetry, ep=ep, work=work, wk=wk)
         elif impl == "xla":
             stats = _run_sweep_jit(job, spot, kernel, rmax, n_events, chunk,
                                    burn_in, rng, params_flat, k_flat, keys,
-                                   tel=telemetry, ep=ep)
+                                   tel=telemetry, ep=ep, work=work, wk=wk)
         else:
             raise ValueError(
                 f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
     # values shaped (grid_points, n_seeds)
-    out = summarize(stats, telemetry, env=env)
+    out = summarize(stats, telemetry, env=env, work=work)
     return _reshape_sweep(out, grid_shape, n_seeds)
 
 
@@ -1431,7 +1635,8 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
                   carry: MarketState, stats: MarketWindowStats, params,
                   mp: dict, k_cost: jax.Array,
                   x: jax.Array | None = None, tel: Telemetry | None = None,
-                  ep: dict | None = None
+                  ep: dict | None = None, work: WorkModel | None = None,
+                  wk: dict | None = None
                   ) -> tuple[MarketState, MarketWindowStats]:
     """One merged event: job arrival / pool spot slot / pool preemption /
     wait deadline.  Same dense one-hot-select style as :func:`_engine_event`
@@ -1449,8 +1654,15 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
     availability (0 = blackout, clocks inflated finite), and the kernel's
     :class:`PoolState` sees the *effective* market — a zero ``rate`` entry
     is the blackout signal failover kernels key on.
+    ``work``/``wk`` thread the work axis exactly as in
+    :func:`_engine_event`; here preemption makes it bite — a resumed job
+    rolls back to its checkpoint and owes the restart overhead, and the
+    ledger prices every rollback.
     """
     n_pools = market.n_pools
+    if work is not None:
+        carry, wk_c = carry
+        stats, wstats = stats
     if ep is not None:
         carry, env_c = carry
         stats, estats = stats
@@ -1472,6 +1684,21 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
     iota_p = jax.lax.iota(jnp.int32, n_pools)
 
     budgets_masked = jnp.where(carry.occ, carry.budgets, INF)
+    if work is not None and getattr(kernel, "safety_net", False):
+        # can't-be-late watchdog (see _engine_event): the panic clock
+        # joins the budget race, so a panic is a forced-early defection
+        # to on-demand through the existing deadline machinery
+        buf = np.float32(getattr(kernel, "slack_buffer", 0.0))
+        rem_tot_all = wk_c.oh + jnp.maximum(wk["total_work"] - wk_c.prog,
+                                            0.0)
+        panic_at = jnp.maximum(
+            deadline_slack(wk["deadline"], wk_c.life, rem_tot_all,
+                           wk["od_time"], buf), 0.0)
+        panic_at = jnp.where(carry.occ, panic_at, INF)
+        panic_armed = panic_at < budgets_masked
+        budgets_masked = jnp.minimum(budgets_masked, panic_at)
+    else:
+        panic_armed = None
     deadline = jnp.min(budgets_masked)
     defect_slot = jnp.argmin(budgets_masked)
 
@@ -1514,6 +1741,22 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
     ages = carry.ages + dt
     budgets = jnp.where(carry.occ, carry.budgets - dt, INF)
 
+    if ep is not None and getattr(kernel, "drain_dead", False):
+        # PanicKernel drain: re-tag jobs stranded on a blacked-out pool to
+        # the cheapest alive pool (the host orchestrator's re-queue step,
+        # on device) so they stop pinning qlen — the PR-7 stranded-job
+        # caveat.  Availability is recomputed here instead of hoisting the
+        # `rates` expression below, so the drain-off program keeps its
+        # original op order (CSE merges the duplicate).
+        alive_p = (mp["rate"] / mp["spot_scale"]) * avail_row > 0
+        cheapest = jnp.argmin(
+            jnp.where(alive_p, eff_price, INF)).astype(jnp.int32)
+        alive_slot = jnp.sum(
+            jnp.where(carry.pool[:, None] == iota_p[None, :],
+                      alive_p[None, :].astype(jnp.int32), 0), axis=1) > 0
+        retag = carry.occ & (~alive_slot) & jnp.any(alive_p)
+        carry = carry._replace(pool=jnp.where(retag, cheapest, carry.pool))
+
     # ---- job arrival: ask the policy kernel (admission + pool choice) ----
     qlen_pool = jnp.sum(
         (carry.occ[:, None] & (carry.pool[:, None] == iota_p[None, :]))
@@ -1543,6 +1786,32 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
     wait_served = jnp.sum(jnp.where(iota == serve_slot, ages, 0.0))
     price_s = eff_price[spot_pool]
 
+    if work is not None:
+        # one unit of service: overhead debt first, spill into progress;
+        # final only when the remaining total clears (see _engine_event)
+        serve_vec = served & (iota == serve_slot)
+        rem_tot = wk_c.oh + (wk["total_work"] - wk_c.prog)
+        rem_serve = jnp.sum(jnp.where(iota == serve_slot, rem_tot, 0.0))
+        oh_new = jnp.where(serve_vec, jnp.maximum(wk_c.oh - 1.0, 0.0),
+                           wk_c.oh)
+        spill = jnp.maximum(1.0 - wk_c.oh, 0.0)
+        prog_new = jnp.where(
+            serve_vec, jnp.minimum(wk_c.prog + spill, wk["total_work"]),
+            wk_c.prog)
+        done_inc = jnp.sum(jnp.where(serve_vec, prog_new - wk_c.prog, 0.0))
+        if work.ckpt == "periodic":
+            take_vec = (serve_vec & (rem_tot > 1.0)
+                        & (prog_new - wk_c.ckpt >= wk["ckpt_period"]))
+            ckpt_new = jnp.where(take_vec, prog_new, wk_c.ckpt)
+            oh_new = oh_new + jnp.where(take_vec, wk["ckpt_cost"], 0.0)
+            ckpt_taken = jnp.any(take_vec)
+        else:
+            ckpt_new = wk_c.ckpt
+            ckpt_taken = jnp.zeros((), jnp.bool_)
+        complete_serve = served & (rem_serve <= 1.0)
+    else:
+        complete_serve = served
+
     # ---- pool preemption: revoke the FIFO-oldest job on that pool ----
     if preempt_on:
         eligible_p = carry.occ & (carry.pool == pre_pool)
@@ -1571,11 +1840,35 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
         defect_pre = jnp.zeros((), jnp.bool_)
         price_p = jnp.zeros((), jnp.float32)
 
+    if work is not None and preempt_on:
+        # rollback: the resumed job restarts from its checkpoint and owes
+        # the restart overhead before progress resumes.  In notice mode
+        # the checkpoint saves current progress iff it fits the firing
+        # pool's notice window — the PR-2 law, now priced in lost work.
+        if work.ckpt == "notice":
+            saved = resume & checkpoint_within_notice(
+                wk["ckpt_time"], mp["notice"][pre_pool])
+        else:
+            saved = jnp.zeros((), jnp.bool_)
+        prog_p = jnp.sum(jnp.where(iota == pre_slot, prog_new, 0.0))
+        ckpt_p = jnp.sum(jnp.where(iota == pre_slot, ckpt_new, 0.0))
+        ckpt_val = jnp.where(saved, jnp.maximum(ckpt_p, prog_p), ckpt_p)
+        resume_vec = resume & (iota == pre_slot)
+        prog_new = jnp.where(resume_vec, ckpt_val, prog_new)
+        oh_new = jnp.where(resume_vec, wk["restart_overhead"], oh_new)
+        ckpt_new = jnp.where(resume_vec, ckpt_val, ckpt_new)
+        lost = jnp.where(resume, jnp.maximum(prog_p - ckpt_val, 0.0), 0.0)
+        oh_inc = jnp.where(resume, wk["restart_overhead"], 0.0)
+        ckpt_taken = ckpt_taken | (resume & saved)
+    elif work is not None:
+        lost = jnp.zeros((), jnp.float32)
+        oh_inc = jnp.zeros((), jnp.float32)
+
     # ---- deadline: the minimal-budget job defects to on-demand ----
     defected = is_deadline
     age_defect = jnp.sum(jnp.where(iota == defect_slot, ages, 0.0))
 
-    leave = served | defected | defect_pre
+    leave = complete_serve | defected | defect_pre
     leave_slot = jnp.where(served, serve_slot,
                            jnp.where(defected, defect_slot, pre_slot))
 
@@ -1588,6 +1881,11 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
     occ = (carry.occ | join_mask) & (~leave_mask)
     pool = jnp.where(join_mask, pool_choice, carry.pool)
     order = jnp.where(join_mask | resume_mask, carry.next_seq, carry.order)
+    if work is not None:
+        life_new = jnp.where(join_mask, 0.0, wk_c.life + dt)
+        prog_new = jnp.where(join_mask, 0.0, prog_new)
+        oh_new = jnp.where(join_mask, 0.0, oh_new)
+        ckpt_new = jnp.where(join_mask, 0.0, ckpt_new)
 
     fire_s = is_spot & (iota_p == spot_pool)
     if layout is None:
@@ -1702,6 +2000,7 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
             cost_valid=served | od_now | defected | pre_hit,
             loc=loc, n_locs=n_pools, qlen=new_carry.qlen)
     out_stats = (new_stats, tstats) if tel is not None else new_stats
+    out_carry = new_carry
     if ep is not None:
         estats = env_update(
             estats, is_boundary=is_boundary,
@@ -1714,8 +2013,38 @@ def _market_event(job: ArrivalProcess, market: SpotMarket, kernel, rmax: int,
                 env_row(ep["t_end"], seg_new) - env_row(ep["t_end"], seg),
                 env_c.next_boundary - dt),
             seg=seg_new)
-        return (new_carry, new_env), (out_stats, estats)
-    return new_carry, out_stats
+        out_carry = (new_carry, new_env)
+        out_stats = (out_stats, estats)
+    if work is not None:
+        life_def = jnp.sum(jnp.where(iota == defect_slot, wk_c.life + dt,
+                                     0.0))
+        rem_def = jnp.sum(jnp.where(iota == defect_slot, rem_tot, 0.0))
+        life_pre = jnp.sum(jnp.where(iota == pre_slot, wk_c.life + dt, 0.0))
+        rem_pre = jnp.sum(jnp.where(iota == pre_slot, rem_tot, 0.0))
+        life_srv = jnp.sum(jnp.where(iota == serve_slot, wk_c.life + dt,
+                                     0.0))
+        od = wk["od_time"]
+        # a job finishes at its last served unit or when it migrates to
+        # on-demand; od finish time = life at migration + remaining work
+        # × od_time (live migration — the preempted job's remaining work
+        # is its PRE-rollback remainder, it does not re-lose progress by
+        # leaving the spot market)
+        miss = ((od_now & (wk["total_work"] * od > wk["deadline"]))
+                | (defected & (life_def + rem_def * od > wk["deadline"]))
+                | (defect_pre & (life_pre + rem_pre * od > wk["deadline"]))
+                | (complete_serve & (life_srv > wk["deadline"])))
+        panic = (defected & jnp.any((iota == defect_slot) & panic_armed)
+                 if panic_armed is not None else jnp.zeros((), jnp.bool_))
+        wstats = survival_update(
+            wstats, admitted=is_job,
+            finished=od_now | complete_serve | defected | defect_pre,
+            missed=miss, checkpoint=ckpt_taken, panic=panic,
+            work_done=done_inc, work_lost=lost,
+            work_recomputed=lost + oh_inc, overhead_paid=oh_inc)
+        return (out_carry, WorkState(prog=prog_new, oh=oh_new,
+                                     ckpt=ckpt_new, life=life_new)), \
+            (out_stats, wstats)
+    return out_carry, out_stats
 
 
 def _market_layout(job: ArrivalProcess, market: SpotMarket, kernel,
@@ -1733,73 +2062,84 @@ def run_market_window(job: ArrivalProcess, market: SpotMarket, kernel,
                       rmax: int, preempt_on: bool, state: MarketState,
                       params, mp: dict, k_cost: jax.Array, n_events: int,
                       layout: SlabLayout | None = None,
-                      tel: Telemetry | None = None, ep: dict | None = None
+                      tel: Telemetry | None = None, ep: dict | None = None,
+                      work: WorkModel | None = None, wk: dict | None = None
                       ) -> tuple[MarketState, MarketWindowStats]:
     """Run ``n_events`` merged market events; one window of float32 sums."""
     step = functools.partial(_market_event, job, market, kernel, rmax,
                              preempt_on, layout, params=params, mp=mp,
-                             k_cost=k_cost, tel=tel, ep=ep)
+                             k_cost=k_cost, tel=tel, ep=ep, work=work, wk=wk)
     zeros = _with_zeros(MarketWindowStats.zeros(market.n_pools), tel,
-                        market.n_pools, env=ep is not None)
+                        market.n_pools, env=ep is not None,
+                        work=work is not None)
     if layout is None:
         return _scan_window(step, zeros, state, n_events)
     return _scan_window_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
-                             n_events, layout.n_cols, paired=ep is not None)
+                             n_events, layout.n_cols,
+                             paired=(ep is not None) or (work is not None))
 
 
 def run_market_chunked(job: ArrivalProcess, market: SpotMarket, kernel,
                        rmax: int, preempt_on: bool, state: MarketState,
                        params, mp: dict, k_cost: jax.Array, n_events: int,
                        chunk_events: int, layout: SlabLayout | None = None,
-                       tel: Telemetry | None = None, ep: dict | None = None
+                       tel: Telemetry | None = None, ep: dict | None = None,
+                       work: WorkModel | None = None, wk: dict | None = None
                        ) -> tuple[MarketState, MarketWindowStats]:
     step = functools.partial(_market_event, job, market, kernel, rmax,
                              preempt_on, layout, params=params, mp=mp,
-                             k_cost=k_cost, tel=tel, ep=ep)
+                             k_cost=k_cost, tel=tel, ep=ep, work=work, wk=wk)
     zeros = _with_zeros(MarketWindowStats.zeros(market.n_pools), tel,
-                        market.n_pools, env=ep is not None)
-    rebase = _rebase_order if ep is None else _rebase_order_env
+                        market.n_pools, env=ep is not None,
+                        work=work is not None)
+    rebase = _rebase_for(ep, work)
     if layout is None:
         return _scan_chunked(step, zeros, state, n_events, chunk_events,
                              rebase=rebase)
     return _scan_chunked_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
                               n_events, chunk_events, layout.n_cols,
-                              paired=ep is not None, rebase=rebase)
+                              paired=(ep is not None) or (work is not None),
+                              rebase=rebase)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("job", "market", "kernel", "rmax", "preempt_on",
-                     "n_events", "chunk_events", "burn_in", "rng", "tel"),
+                     "n_events", "chunk_events", "burn_in", "rng", "tel",
+                     "work"),
 )
 def _run_market_sim_jit(job, market, kernel, rmax, preempt_on, n_events,
                         chunk_events, burn_in, rng, params, mp, k_cost, key,
-                        tel=None, ep=None):
+                        tel=None, ep=None, work=None, wk=None):
     layout = (_market_layout(job, market, kernel, preempt_on)
               if rng == "slab" else None)
     state = init_market_state(key, job, market, rmax, mp, preempt_on,
                               scalar_preempt=layout is not None, ep=ep)
     if ep is not None:
         state = (state, init_env_state(ep))
+    if work is not None:
+        state = (state, init_work_state(rmax))
     if burn_in:
         state, _ = run_market_window(job, market, kernel, rmax, preempt_on,
                                      state, params, mp, k_cost, burn_in,
-                                     layout=layout, tel=tel, ep=ep)
-        state = (_rebase_order(state) if ep is None
-                 else _rebase_order_env(state))
+                                     layout=layout, tel=tel, ep=ep,
+                                     work=work, wk=wk)
+        state = _rebase_for(ep, work)(state)
     return run_market_chunked(job, market, kernel, rmax, preempt_on, state,
                               params, mp, k_cost, n_events, chunk_events,
-                              layout=layout, tel=tel, ep=ep)
+                              layout=layout, tel=tel, ep=ep, work=work,
+                              wk=wk)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("job", "market", "kernel", "rmax", "preempt_on",
-                     "n_events", "chunk_events", "burn_in", "rng", "tel"),
+                     "n_events", "chunk_events", "burn_in", "rng", "tel",
+                     "work"),
 )
 def _run_market_sweep_jit(job, market, kernel, rmax, preempt_on, n_events,
                           chunk_events, burn_in, rng, params, mp, k_cost,
-                          keys, tel=None, ep=None):
+                          keys, tel=None, ep=None, work=None, wk=None):
     """(grid × pools-config × seeds) fleet as one nested-vmap XLA program
     (broadcast ``in_axes``; see :func:`_flat_lane_args`)."""
     layout = (_market_layout(job, market, kernel, preempt_on)
@@ -1810,17 +2150,18 @@ def _run_market_sweep_jit(job, market, kernel, rmax, preempt_on, n_events,
                                   scalar_preempt=layout is not None, ep=ep)
         if ep is not None:
             state = (state, init_env_state(ep))
+        if work is not None:
+            state = (state, init_work_state(rmax))
         if burn_in:
             state, _ = run_market_window(job, market, kernel, rmax,
                                          preempt_on, state, p, m, kc,
                                          burn_in, layout=layout, tel=tel,
-                                         ep=ep)
-            state = (_rebase_order(state) if ep is None
-                     else _rebase_order_env(state))
+                                         ep=ep, work=work, wk=wk)
+            state = _rebase_for(ep, work)(state)
         _, stats = run_market_chunked(job, market, kernel, rmax, preempt_on,
                                       state, p, m, kc, n_events,
                                       chunk_events, layout=layout, tel=tel,
-                                      ep=ep)
+                                      ep=ep, work=work, wk=wk)
         return stats
 
     per_seeds = jax.vmap(one, in_axes=(None, None, None, 0))
@@ -1832,13 +2173,13 @@ def _run_market_sweep_jit(job, market, kernel, rmax, preempt_on, n_events,
     jax.jit,
     static_argnames=("job", "market", "kernel", "rmax", "preempt_on",
                      "n_events", "chunk_events", "burn_in", "tile",
-                     "interpret", "executor", "rng", "tel"),
+                     "interpret", "executor", "rng", "tel", "work"),
 )
 def _run_market_sweep_pallas_jit(job, market, kernel, rmax, preempt_on,
                                  n_events, chunk_events, burn_in, tile,
                                  interpret, params, mp, k_cost, keys,
                                  executor="pallas", rng="split", tel=None,
-                                 ep=None):
+                                 ep=None, work=None, wk=None):
     """The market fleet through the same batched-event kernel family: the
     per-pool ``next_spot``/``next_preempt`` clock vectors become
     (tile, n_pools) VMEM blocks and :func:`_market_event` is the vmap-ed
@@ -1867,21 +2208,28 @@ def _run_market_sweep_pallas_jit(job, market, kernel, rmax, preempt_on,
     if ep is not None:
         params_b["ep"], es0 = _env_lane_blocks(ep, keys_f.shape[0])
         state0 = (state0, es0)
+    if work is not None:
+        params_b["wk"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (keys_f.shape[0],)), wk)
+        state0 = (state0, init_work_state(rmax, keys_f.shape[0]))
 
     if layout is not None:
         def step(carry, stats, p, x):
             return _market_event(job, market, kernel, rmax, preempt_on,
                                  layout, carry, stats, p["params"], p["mp"],
-                                 p["k"], x=x, tel=tel, ep=p.get("ep"))
+                                 p["k"], x=x, tel=tel, ep=p.get("ep"),
+                                 work=work, wk=p.get("wk"))
     else:
         def step(carry, stats, p):
             return _market_event(job, market, kernel, rmax, preempt_on,
                                  None, carry, stats, p["params"], p["mp"],
-                                 p["k"], tel=tel, ep=p.get("ep"))
+                                 p["k"], tel=tel, ep=p.get("ep"),
+                                 work=work, wk=p.get("wk"))
 
     zeros = _with_zeros(MarketWindowStats.zeros(market.n_pools), tel,
-                        market.n_pools, env=ep is not None)
-    epilogue = _rebase_order if ep is None else _rebase_order_env
+                        market.n_pools, env=ep is not None,
+                        work=work is not None)
+    epilogue = _rebase_for(ep, work)
     if executor == "ref":
         _, stats = batched_event_windows_ref(
             step, state0, params_b, zeros, plan, xs=xs,
@@ -1898,7 +2246,7 @@ def _run_market_sweep_pallas_jit(job, market, kernel, rmax, preempt_on,
 def _market_sweep_lanes(job, market, kernel, rmax, preempt_on, n_events,
                         chunk_events, burn_in, tile, interpret, params_f,
                         mp_f, k_f, keys_f, *, executor, rng, tel=None,
-                        ep=None):
+                        ep=None, work=None, wk=None):
     """One shard of flat market lanes through any executor (cf.
     :func:`_sweep_lanes`; the pools-config tree ``mp_f`` is a per-lane
     grid axis exactly as in :func:`_run_market_sweep_pallas_jit`)."""
@@ -1911,17 +2259,19 @@ def _market_sweep_lanes(job, market, kernel, rmax, preempt_on, n_events,
                                       ep=ep)
             if ep is not None:
                 state = (state, init_env_state(ep))
+            if work is not None:
+                state = (state, init_work_state(rmax))
             if burn_in:
                 state, _ = run_market_window(job, market, kernel, rmax,
                                              preempt_on, state, p, m, kc,
                                              burn_in, layout=layout, tel=tel,
-                                             ep=ep)
-                state = (_rebase_order(state) if ep is None
-                         else _rebase_order_env(state))
+                                             ep=ep, work=work, wk=wk)
+                state = _rebase_for(ep, work)(state)
             _, stats = run_market_chunked(job, market, kernel, rmax,
                                           preempt_on, state, p, m, kc,
                                           n_events, chunk_events,
-                                          layout=layout, tel=tel, ep=ep)
+                                          layout=layout, tel=tel, ep=ep,
+                                          work=work, wk=wk)
             return stats
 
         return jax.vmap(one)(params_f, mp_f, k_f, keys_f)
@@ -1936,21 +2286,28 @@ def _market_sweep_lanes(job, market, kernel, rmax, preempt_on, n_events,
     if ep is not None:
         params_b["ep"], es0 = _env_lane_blocks(ep, keys_f.shape[0])
         state0 = (state0, es0)
+    if work is not None:
+        params_b["wk"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (keys_f.shape[0],)), wk)
+        state0 = (state0, init_work_state(rmax, keys_f.shape[0]))
 
     if layout is not None:
         def step(carry, stats, p, x):
             return _market_event(job, market, kernel, rmax, preempt_on,
                                  layout, carry, stats, p["params"], p["mp"],
-                                 p["k"], x=x, tel=tel, ep=p.get("ep"))
+                                 p["k"], x=x, tel=tel, ep=p.get("ep"),
+                                 work=work, wk=p.get("wk"))
     else:
         def step(carry, stats, p):
             return _market_event(job, market, kernel, rmax, preempt_on,
                                  None, carry, stats, p["params"], p["mp"],
-                                 p["k"], tel=tel, ep=p.get("ep"))
+                                 p["k"], tel=tel, ep=p.get("ep"),
+                                 work=work, wk=p.get("wk"))
 
     zeros = _with_zeros(MarketWindowStats.zeros(market.n_pools), tel,
-                        market.n_pools, env=ep is not None)
-    epilogue = _rebase_order if ep is None else _rebase_order_env
+                        market.n_pools, env=ep is not None,
+                        work=work is not None)
+    epilogue = _rebase_for(ep, work)
     if executor == "ref":
         _, stats = batched_event_windows_ref(
             step, state0, params_b, zeros, plan, xs=xs, epilogue=epilogue)
@@ -1967,13 +2324,13 @@ def _market_sweep_lanes(job, market, kernel, rmax, preempt_on, n_events,
     jax.jit,
     static_argnames=("job", "market", "kernel", "rmax", "preempt_on",
                      "n_events", "chunk_events", "burn_in", "tile",
-                     "interpret", "mesh", "executor", "rng", "tel"),
+                     "interpret", "mesh", "executor", "rng", "tel", "work"),
 )
 def _run_market_sweep_sharded_jit(job, market, kernel, rmax, preempt_on,
                                   n_events, chunk_events, burn_in, tile,
                                   interpret, mesh, params, mp, k_cost, keys,
                                   executor="xla", rng="split", tel=None,
-                                  ep=None):
+                                  ep=None, work=None, wk=None):
     """The market fleet lane-partitioned across a 1-D device mesh (cf.
     :func:`_run_sweep_sharded_jit`)."""
     g, s = k_cost.shape[0], keys.shape[0]
@@ -1984,16 +2341,16 @@ def _run_market_sweep_sharded_jit(job, market, kernel, rmax, preempt_on,
                                             _pad_count(lanes, mesh))
     spec, rspec = lane_spec(mesh), jax.sharding.PartitionSpec()
 
-    def local(pf, mf, kf, keysf, ep_):
+    def local(pf, mf, kf, keysf, ep_, wk_):
         return _market_sweep_lanes(job, market, kernel, rmax, preempt_on,
                                    n_events, chunk_events, burn_in, tile,
                                    interpret, pf, mf, kf, keysf,
                                    executor=executor, rng=rng, tel=tel,
-                                   ep=ep_)
+                                   ep=ep_, work=work, wk=wk_)
 
     stats = shard_map_1d(local, mesh=mesh,
-                         in_specs=(spec, spec, spec, spec, rspec),
-                         out_specs=spec)(params_f, mp_f, k_f, keys_f, ep)
+                         in_specs=(spec, spec, spec, spec, rspec, rspec),
+                         out_specs=spec)(params_f, mp_f, k_f, keys_f, ep, wk)
     if lanes != keys_f.shape[0]:
         stats = jax.tree.map(lambda x: x[:lanes], stats)
     return _unflatten_lanes(stats, g, s)
@@ -2001,7 +2358,7 @@ def _run_market_sweep_sharded_jit(job, market, kernel, rmax, preempt_on,
 
 def summarize_market(stats: MarketWindowStats,
                      telemetry: Telemetry | None = None,
-                     env: EnvTimeline | None = None) -> dict:
+                     env: EnvTimeline | None = None, work=None) -> dict:
     """Float64 chunk reduction + market-specific derived statistics.
 
     Extends :func:`summarize`'s dict with preemption counters, spot spend,
@@ -2010,8 +2367,13 @@ def summarize_market(stats: MarketWindowStats,
     second-to-last for per-pool vectors.  With ``telemetry``, ``stats`` is
     the ``(base, telemetry)`` pair and the telemetry fields are appended
     (base keys unchanged; see :func:`summarize`).  With ``env``, the env
-    block rides outermost and the shock counters are appended.
+    block rides outermost and the shock counters are appended.  With
+    ``work``, the survival ledger rides outermost of all and its job-level
+    fields are appended.
     """
+    wstats = None
+    if work is not None:
+        stats, wstats = stats
     estats = None
     if env is not None:
         stats, estats = stats
@@ -2055,6 +2417,8 @@ def summarize_market(stats: MarketWindowStats,
         out = _merge_telemetry(out, telemetry, tstats, stats.time_elapsed)
     if estats is not None:
         out.update(summarize_env(estats))
+    if wstats is not None:
+        out.update(summarize_survival(wstats))
     return out
 
 
@@ -2105,6 +2469,7 @@ def run_market_sim(
     interpret: bool | None = None,
     telemetry: Telemetry | None = None,
     env: EnvTimeline | None = None,
+    work: WorkModel | None = None,
 ) -> dict:
     """Run one market policy at one parameter point; scalar long-run stats.
 
@@ -2112,16 +2477,21 @@ def run_market_sim(
     kernel reproduces :func:`run_sim` bit-for-bit per seed.  ``chunk_events``
     / ``impl`` / ``rng`` behave exactly as in :func:`run_sim`; ``env``
     attaches an :class:`~repro.core.env.EnvTimeline` (per-pool price /
-    hazard / availability segments) exactly as in :func:`run_sim`.
+    hazard / availability segments) exactly as in :func:`run_sim`;
+    ``work`` (a :class:`repro.core.work.WorkModel`) attaches the work
+    structure — checkpoint-priced recovery, restart overhead, deadlines —
+    and the survival ledger (module docstring of :mod:`repro.core.work`).
     """
     market = as_market(market)
     params = {} if params is None else params
     _check_rng(rng)
     _check_telemetry(telemetry)
     _check_env(env)
+    _check_work(work, kernel)
     _check_run_shape("run_market_sim", n_events, burn_in)
     mp = market.params()
     ep = _env_params(env, market.n_pools)
+    wk = None if work is None else work.params()
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
     with annotate(f"repro.run_market_sim[{impl}]"):
         if impl in ("pallas", "ref"):
@@ -2132,20 +2502,21 @@ def run_market_sim(
                 jax.tree.map(lambda x: jnp.asarray(x)[None], params),
                 jax.tree.map(lambda x: jnp.asarray(x)[None], mp),
                 jnp.float32(k)[None], _raw_keys(key)[None], executor=impl,
-                rng=rng, tel=telemetry, ep=ep)
+                rng=rng, tel=telemetry, ep=ep, work=work, wk=wk)
             stats = jax.tree.map(lambda x: x[0, 0], stats)
         elif impl == "xla":
             _, stats = _run_market_sim_jit(job, market, kernel, rmax,
                                            market.preemptible, n_events,
                                            chunk, burn_in, rng, params, mp,
                                            jnp.float32(k), key,
-                                           tel=telemetry, ep=ep)
+                                           tel=telemetry, ep=ep, work=work,
+                                           wk=wk)
         else:
             raise ValueError(
                 f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
     return {name: _scalar_or_array(v)
-            for name, v in summarize_market(stats, telemetry,
-                                            env=env).items()}
+            for name, v in summarize_market(stats, telemetry, env=env,
+                                            work=work).items()}
 
 
 def run_market_sweep(
@@ -2171,6 +2542,7 @@ def run_market_sweep(
     interpret: bool | None = None,
     telemetry: Telemetry | None = None,
     env: EnvTimeline | None = None,
+    work: WorkModel | None = None,
     shard: str = "none",
     mesh=None,
 ) -> dict:
@@ -2201,12 +2573,14 @@ def run_market_sweep(
     _check_rng(rng)
     _check_telemetry(telemetry)
     _check_env(env)
+    _check_work(work, kernel)
     _check_shard("run_market_sweep", shard, mesh)
     _check_run_shape("run_market_sweep", n_events, burn_in)
     _check_loc_overrides("run_market_sweep", n, "pool", prices=prices,
                          hazards=hazards, notices=notices,
                          spot_scales=spot_scales)
     ep = _env_params(env, n)
+    wk = None if work is None else work.params()
     params = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params)
     k = jnp.asarray(k, jnp.float32)
     overrides = {"price": prices, "hazard": hazards, "notice": notices,
@@ -2236,23 +2610,24 @@ def run_market_sweep(
                 default_interpret() if interpret is None else interpret,
                 lane_mesh() if mesh is None else mesh, params_flat, mp_flat,
                 k_flat, _raw_keys(keys), executor=impl, rng=rng,
-                tel=telemetry, ep=ep)
+                tel=telemetry, ep=ep, work=work, wk=wk)
         elif impl in ("pallas", "ref"):
             stats = _run_market_sweep_pallas_jit(
                 job, market, kernel, rmax, preempt_on, n_events, chunk,
                 burn_in, tile,
                 default_interpret() if interpret is None else interpret,
                 params_flat, mp_flat, k_flat, _raw_keys(keys), executor=impl,
-                rng=rng, tel=telemetry, ep=ep)
+                rng=rng, tel=telemetry, ep=ep, work=work, wk=wk)
         elif impl == "xla":
             stats = _run_market_sweep_jit(job, market, kernel, rmax,
                                           preempt_on, n_events, chunk,
                                           burn_in, rng, params_flat, mp_flat,
-                                          k_flat, keys, tel=telemetry, ep=ep)
+                                          k_flat, keys, tel=telemetry, ep=ep,
+                                          work=work, wk=wk)
         else:
             raise ValueError(
                 f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
-    out = summarize_market(stats, telemetry, env=env)
+    out = summarize_market(stats, telemetry, env=env, work=work)
     return _reshape_sweep(out, grid_shape, n_seeds)
 
 
@@ -2462,7 +2837,8 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
                   layout: SlabLayout | None, carry: RegionState,
                   stats: RegionWindowStats, params, rp: dict,
                   k_cost: jax.Array, x: jax.Array | None = None,
-                  tel: Telemetry | None = None, ep: dict | None = None
+                  tel: Telemetry | None = None, ep: dict | None = None,
+                  work: WorkModel | None = None, wk: dict | None = None
                   ) -> tuple[RegionState, RegionWindowStats]:
     """One merged event: job arrival (in some region) / region spot slot /
     region preemption / wait deadline.  Same dense one-hot-select style as
@@ -2476,9 +2852,15 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
     :func:`_market_event` (regions are the locations; the demand-side
     ``next_job`` clocks are deliberately NOT modulated — supply shocks
     perturb the market, not the workload).
+    ``work``/``wk`` thread the work axis exactly as in
+    :func:`_market_event` (the packed slot array carries the work
+    structure; rollbacks price the region's notice window).
     """
     n_regions, n_slots = topo.n_regions, topo.total_slots
     has_route = hasattr(kernel, "route")
+    if work is not None:
+        carry, wk_c = carry
+        stats, wstats = stats
     if ep is not None:
         carry, env_c = carry
         stats, estats = stats
@@ -2501,6 +2883,21 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
     slot_region = _slot_region_iota(topo, iota_s)
 
     budgets_masked = jnp.where(carry.occ, carry.budgets, INF)
+    if work is not None and getattr(kernel, "safety_net", False):
+        # can't-be-late watchdog (see _engine_event): the panic clock
+        # joins the budget race, so a panic is a forced-early defection
+        # to on-demand through the existing deadline machinery
+        buf = np.float32(getattr(kernel, "slack_buffer", 0.0))
+        rem_tot_all = wk_c.oh + jnp.maximum(wk["total_work"] - wk_c.prog,
+                                            0.0)
+        panic_at = jnp.maximum(
+            deadline_slack(wk["deadline"], wk_c.life, rem_tot_all,
+                           wk["od_time"], buf), 0.0)
+        panic_at = jnp.where(carry.occ, panic_at, INF)
+        panic_armed = panic_at < budgets_masked
+        budgets_masked = jnp.minimum(budgets_masked, panic_at)
+    else:
+        panic_armed = None
     deadline = jnp.min(budgets_masked)
     defect_slot = jnp.argmin(budgets_masked)
 
@@ -2588,6 +2985,32 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
     wait_served = jnp.sum(jnp.where(iota_s == serve_slot, ages, 0.0))
     price_s = eff_price[spot_region]
 
+    if work is not None:
+        # one unit of service: overhead debt first, spill into progress;
+        # final only when the remaining total clears (see _engine_event)
+        serve_vec = served & (iota_s == serve_slot)
+        rem_tot = wk_c.oh + (wk["total_work"] - wk_c.prog)
+        rem_serve = jnp.sum(jnp.where(iota_s == serve_slot, rem_tot, 0.0))
+        oh_new = jnp.where(serve_vec, jnp.maximum(wk_c.oh - 1.0, 0.0),
+                           wk_c.oh)
+        spill = jnp.maximum(1.0 - wk_c.oh, 0.0)
+        prog_new = jnp.where(
+            serve_vec, jnp.minimum(wk_c.prog + spill, wk["total_work"]),
+            wk_c.prog)
+        done_inc = jnp.sum(jnp.where(serve_vec, prog_new - wk_c.prog, 0.0))
+        if work.ckpt == "periodic":
+            take_vec = (serve_vec & (rem_tot > 1.0)
+                        & (prog_new - wk_c.ckpt >= wk["ckpt_period"]))
+            ckpt_new = jnp.where(take_vec, prog_new, wk_c.ckpt)
+            oh_new = oh_new + jnp.where(take_vec, wk["ckpt_cost"], 0.0)
+            ckpt_taken = jnp.any(take_vec)
+        else:
+            ckpt_new = wk_c.ckpt
+            ckpt_taken = jnp.zeros((), jnp.bool_)
+        complete_serve = served & (rem_serve <= 1.0)
+    else:
+        complete_serve = served
+
     # ---- region preemption: revoke the FIFO-oldest job in that region ----
     if preempt_on:
         eligible_p = carry.occ & (slot_region == pre_region)
@@ -2617,11 +3040,34 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
         defect_pre = jnp.zeros((), jnp.bool_)
         price_p = jnp.zeros((), jnp.float32)
 
+    if work is not None and preempt_on:
+        # rollback (see _market_event): resume restarts from the last
+        # checkpoint and owes the restart overhead; notice mode saves
+        # current progress iff it fits the firing REGION's notice window
+        if work.ckpt == "notice":
+            saved = resume & checkpoint_within_notice(
+                wk["ckpt_time"], rp["notice"][pre_region])
+        else:
+            saved = jnp.zeros((), jnp.bool_)
+        prog_p = jnp.sum(jnp.where(iota_s == pre_slot, prog_new, 0.0))
+        ckpt_p = jnp.sum(jnp.where(iota_s == pre_slot, ckpt_new, 0.0))
+        ckpt_val = jnp.where(saved, jnp.maximum(ckpt_p, prog_p), ckpt_p)
+        resume_vec = resume & (iota_s == pre_slot)
+        prog_new = jnp.where(resume_vec, ckpt_val, prog_new)
+        oh_new = jnp.where(resume_vec, wk["restart_overhead"], oh_new)
+        ckpt_new = jnp.where(resume_vec, ckpt_val, ckpt_new)
+        lost = jnp.where(resume, jnp.maximum(prog_p - ckpt_val, 0.0), 0.0)
+        oh_inc = jnp.where(resume, wk["restart_overhead"], 0.0)
+        ckpt_taken = ckpt_taken | (resume & saved)
+    elif work is not None:
+        lost = jnp.zeros((), jnp.float32)
+        oh_inc = jnp.zeros((), jnp.float32)
+
     # ---- deadline: the minimal-budget job defects to on-demand ----
     defected = is_deadline
     age_defect = jnp.sum(jnp.where(iota_s == defect_slot, ages, 0.0))
 
-    leave = served | defected | defect_pre
+    leave = complete_serve | defected | defect_pre
     leave_slot = jnp.where(served, serve_slot,
                            jnp.where(defected, defect_slot, pre_slot))
     leave_region = jnp.sum(jnp.where(iota_s == leave_slot, slot_region, 0))
@@ -2634,6 +3080,11 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
                         jnp.where(resume_mask, INF, budgets))
     occ = (carry.occ | join_mask) & (~leave_mask)
     order = jnp.where(join_mask | resume_mask, carry.next_seq, carry.order)
+    if work is not None:
+        life_new = jnp.where(join_mask, 0.0, wk_c.life + dt)
+        prog_new = jnp.where(join_mask, 0.0, prog_new)
+        oh_new = jnp.where(join_mask, 0.0, oh_new)
+        ckpt_new = jnp.where(join_mask, 0.0, ckpt_new)
 
     fire_j = is_job & (iota_r == home)
     fire_s = is_spot & (iota_r == spot_region)
@@ -2763,6 +3214,7 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
         out_stats = (new_stats, tstats)
     else:
         out_stats = new_stats
+    out_carry = new_carry
     if ep is not None:
         estats = env_update(
             estats, is_boundary=is_boundary,
@@ -2775,8 +3227,37 @@ def _region_event(topo: RegionTopology, kernel, preempt_on: bool,
                 env_row(ep["t_end"], seg_new) - env_row(ep["t_end"], seg),
                 env_c.next_boundary - dt),
             seg=seg_new)
-        return (new_carry, new_env), (out_stats, estats)
-    return new_carry, out_stats
+        out_carry = (new_carry, new_env)
+        out_stats = (out_stats, estats)
+    if work is not None:
+        life_def = jnp.sum(jnp.where(iota_s == defect_slot, wk_c.life + dt,
+                                     0.0))
+        rem_def = jnp.sum(jnp.where(iota_s == defect_slot, rem_tot, 0.0))
+        life_pre = jnp.sum(jnp.where(iota_s == pre_slot, wk_c.life + dt,
+                                     0.0))
+        rem_pre = jnp.sum(jnp.where(iota_s == pre_slot, rem_tot, 0.0))
+        life_srv = jnp.sum(jnp.where(iota_s == serve_slot, wk_c.life + dt,
+                                     0.0))
+        od = wk["od_time"]
+        # finish/miss accounting exactly as in _market_event (live
+        # migration: a preempted defector's od remainder is its
+        # PRE-rollback remaining total)
+        miss = ((od_now & (wk["total_work"] * od > wk["deadline"]))
+                | (defected & (life_def + rem_def * od > wk["deadline"]))
+                | (defect_pre & (life_pre + rem_pre * od > wk["deadline"]))
+                | (complete_serve & (life_srv > wk["deadline"])))
+        panic = (defected & jnp.any((iota_s == defect_slot) & panic_armed)
+                 if panic_armed is not None else jnp.zeros((), jnp.bool_))
+        wstats = survival_update(
+            wstats, admitted=is_job,
+            finished=od_now | complete_serve | defected | defect_pre,
+            missed=miss, checkpoint=ckpt_taken, panic=panic,
+            work_done=done_inc, work_lost=lost,
+            work_recomputed=lost + oh_inc, overhead_paid=oh_inc)
+        return (out_carry, WorkState(prog=prog_new, oh=oh_new,
+                                     ckpt=ckpt_new, life=life_new)), \
+            (out_stats, wstats)
+    return out_carry, out_stats
 
 
 def _region_layout(topo: RegionTopology, kernel,
@@ -2795,73 +3276,80 @@ def run_region_window(topo: RegionTopology, kernel, preempt_on: bool,
                       state: RegionState, params, rp: dict,
                       k_cost: jax.Array, n_events: int,
                       layout: SlabLayout | None = None,
-                      tel: Telemetry | None = None, ep: dict | None = None
+                      tel: Telemetry | None = None, ep: dict | None = None,
+                      work: WorkModel | None = None, wk: dict | None = None
                       ) -> tuple[RegionState, RegionWindowStats]:
     """Run ``n_events`` merged region events; one window of float32 sums."""
     step = functools.partial(_region_event, topo, kernel, preempt_on, layout,
                              params=params, rp=rp, k_cost=k_cost, tel=tel,
-                             ep=ep)
+                             ep=ep, work=work, wk=wk)
     zeros = _with_zeros(RegionWindowStats.zeros(topo.n_regions), tel,
-                        topo.n_regions, env=ep is not None)
+                        topo.n_regions, env=ep is not None,
+                        work=work is not None)
     if layout is None:
         return _scan_window(step, zeros, state, n_events)
     return _scan_window_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
-                             n_events, layout.n_cols, paired=ep is not None)
+                             n_events, layout.n_cols,
+                             paired=(ep is not None) or (work is not None))
 
 
 def run_region_chunked(topo: RegionTopology, kernel, preempt_on: bool,
                        state: RegionState, params, rp: dict,
                        k_cost: jax.Array, n_events: int, chunk_events: int,
                        layout: SlabLayout | None = None,
-                       tel: Telemetry | None = None, ep: dict | None = None
+                       tel: Telemetry | None = None, ep: dict | None = None,
+                       work: WorkModel | None = None, wk: dict | None = None
                        ) -> tuple[RegionState, RegionWindowStats]:
     step = functools.partial(_region_event, topo, kernel, preempt_on, layout,
                              params=params, rp=rp, k_cost=k_cost, tel=tel,
-                             ep=ep)
+                             ep=ep, work=work, wk=wk)
     zeros = _with_zeros(RegionWindowStats.zeros(topo.n_regions), tel,
-                        topo.n_regions, env=ep is not None)
-    rebase = _rebase_order if ep is None else _rebase_order_env
+                        topo.n_regions, env=ep is not None,
+                        work=work is not None)
+    rebase = _rebase_for(ep, work)
     if layout is None:
         return _scan_chunked(step, zeros, state, n_events, chunk_events,
                              rebase=rebase)
     return _scan_chunked_slab(lambda c, s, x: step(c, s, x=x), zeros, state,
                               n_events, chunk_events, layout.n_cols,
-                              paired=ep is not None, rebase=rebase)
+                              paired=(ep is not None) or (work is not None),
+                              rebase=rebase)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("topo", "kernel", "preempt_on", "n_events",
-                     "chunk_events", "burn_in", "rng", "tel"),
+                     "chunk_events", "burn_in", "rng", "tel", "work"),
 )
 def _run_region_sim_jit(topo, kernel, preempt_on, n_events, chunk_events,
                         burn_in, rng, params, rp, k_cost, key, tel=None,
-                        ep=None):
+                        ep=None, work=None, wk=None):
     layout = (_region_layout(topo, kernel, preempt_on)
               if rng == "slab" else None)
     state = init_region_state(key, topo, rp, preempt_on,
                               scalar_preempt=layout is not None, ep=ep)
     if ep is not None:
         state = (state, init_env_state(ep))
+    if work is not None:
+        state = (state, init_work_state(topo.total_slots))
     if burn_in:
         state, _ = run_region_window(topo, kernel, preempt_on, state, params,
                                      rp, k_cost, burn_in, layout=layout,
-                                     tel=tel, ep=ep)
-        state = (_rebase_order(state) if ep is None
-                 else _rebase_order_env(state))
+                                     tel=tel, ep=ep, work=work, wk=wk)
+        state = _rebase_for(ep, work)(state)
     return run_region_chunked(topo, kernel, preempt_on, state, params, rp,
                               k_cost, n_events, chunk_events, layout=layout,
-                              tel=tel, ep=ep)
+                              tel=tel, ep=ep, work=work, wk=wk)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("topo", "kernel", "preempt_on", "n_events",
-                     "chunk_events", "burn_in", "rng", "tel"),
+                     "chunk_events", "burn_in", "rng", "tel", "work"),
 )
 def _run_region_sweep_jit(topo, kernel, preempt_on, n_events, chunk_events,
                           burn_in, rng, params, rp, k_cost, keys, tel=None,
-                          ep=None):
+                          ep=None, work=None, wk=None):
     """(grid × regions-config × seeds) fleet as one nested-vmap XLA program
     (broadcast ``in_axes``; see :func:`_flat_lane_args`)."""
     layout = (_region_layout(topo, kernel, preempt_on)
@@ -2872,15 +3360,17 @@ def _run_region_sweep_jit(topo, kernel, preempt_on, n_events, chunk_events,
                                   scalar_preempt=layout is not None, ep=ep)
         if ep is not None:
             state = (state, init_env_state(ep))
+        if work is not None:
+            state = (state, init_work_state(topo.total_slots))
         if burn_in:
             state, _ = run_region_window(topo, kernel, preempt_on, state, p,
                                          r, kc, burn_in, layout=layout,
-                                         tel=tel, ep=ep)
-            state = (_rebase_order(state) if ep is None
-                     else _rebase_order_env(state))
+                                         tel=tel, ep=ep, work=work, wk=wk)
+            state = _rebase_for(ep, work)(state)
         _, stats = run_region_chunked(topo, kernel, preempt_on, state, p, r,
                                       kc, n_events, chunk_events,
-                                      layout=layout, tel=tel, ep=ep)
+                                      layout=layout, tel=tel, ep=ep,
+                                      work=work, wk=wk)
         return stats
 
     per_seeds = jax.vmap(one, in_axes=(None, None, None, 0))
@@ -2892,13 +3382,13 @@ def _run_region_sweep_jit(topo, kernel, preempt_on, n_events, chunk_events,
     jax.jit,
     static_argnames=("topo", "kernel", "preempt_on", "n_events",
                      "chunk_events", "burn_in", "tile", "interpret",
-                     "executor", "rng", "tel"),
+                     "executor", "rng", "tel", "work"),
 )
 def _run_region_sweep_pallas_jit(topo, kernel, preempt_on, n_events,
                                  chunk_events, burn_in, tile, interpret,
                                  params, rp, k_cost, keys,
                                  executor="pallas", rng="split", tel=None,
-                                 ep=None):
+                                 ep=None, work=None, wk=None):
     """The region fleet through the same batched-event kernel family: the
     engine-state blocks grow a region axis — (tile, R) clock vectors,
     (tile, sum rmax_r) packed slot arrays — and :func:`_region_event` is
@@ -2926,21 +3416,29 @@ def _run_region_sweep_pallas_jit(topo, kernel, preempt_on, n_events,
     if ep is not None:
         params_b["ep"], es0 = _env_lane_blocks(ep, keys_f.shape[0])
         state0 = (state0, es0)
+    if work is not None:
+        params_b["wk"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (keys_f.shape[0],)), wk)
+        state0 = (state0, init_work_state(topo.total_slots,
+                                          keys_f.shape[0]))
 
     if layout is not None:
         def step(carry, stats, p, x):
             return _region_event(topo, kernel, preempt_on, layout, carry,
                                  stats, p["params"], p["rp"], p["k"], x=x,
-                                 tel=tel, ep=p.get("ep"))
+                                 tel=tel, ep=p.get("ep"), work=work,
+                                 wk=p.get("wk"))
     else:
         def step(carry, stats, p):
             return _region_event(topo, kernel, preempt_on, None, carry,
                                  stats, p["params"], p["rp"], p["k"],
-                                 tel=tel, ep=p.get("ep"))
+                                 tel=tel, ep=p.get("ep"), work=work,
+                                 wk=p.get("wk"))
 
     zeros = _with_zeros(RegionWindowStats.zeros(topo.n_regions), tel,
-                        topo.n_regions, env=ep is not None)
-    epilogue = _rebase_order if ep is None else _rebase_order_env
+                        topo.n_regions, env=ep is not None,
+                        work=work is not None)
+    epilogue = _rebase_for(ep, work)
     if executor == "ref":
         _, stats = batched_event_windows_ref(
             step, state0, params_b, zeros, plan, xs=xs,
@@ -2956,7 +3454,8 @@ def _run_region_sweep_pallas_jit(topo, kernel, preempt_on, n_events,
 
 def _region_sweep_lanes(topo, kernel, preempt_on, n_events, chunk_events,
                         burn_in, tile, interpret, params_f, rp_f, k_f,
-                        keys_f, *, executor, rng, tel=None, ep=None):
+                        keys_f, *, executor, rng, tel=None, ep=None,
+                        work=None, wk=None):
     """One shard of flat region lanes through any executor (cf.
     :func:`_sweep_lanes`; the regions-config tree ``rp_f`` is a per-lane
     grid axis exactly as in :func:`_run_region_sweep_pallas_jit`)."""
@@ -2969,15 +3468,18 @@ def _region_sweep_lanes(topo, kernel, preempt_on, n_events, chunk_events,
                                       ep=ep)
             if ep is not None:
                 state = (state, init_env_state(ep))
+            if work is not None:
+                state = (state, init_work_state(topo.total_slots))
             if burn_in:
                 state, _ = run_region_window(topo, kernel, preempt_on, state,
                                              p, r, kc, burn_in, layout=layout,
-                                             tel=tel, ep=ep)
-                state = (_rebase_order(state) if ep is None
-                         else _rebase_order_env(state))
+                                             tel=tel, ep=ep, work=work,
+                                             wk=wk)
+                state = _rebase_for(ep, work)(state)
             _, stats = run_region_chunked(topo, kernel, preempt_on, state, p,
                                           r, kc, n_events, chunk_events,
-                                          layout=layout, tel=tel, ep=ep)
+                                          layout=layout, tel=tel, ep=ep,
+                                          work=work, wk=wk)
             return stats
 
         return jax.vmap(one)(params_f, rp_f, k_f, keys_f)
@@ -2992,21 +3494,29 @@ def _region_sweep_lanes(topo, kernel, preempt_on, n_events, chunk_events,
     if ep is not None:
         params_b["ep"], es0 = _env_lane_blocks(ep, keys_f.shape[0])
         state0 = (state0, es0)
+    if work is not None:
+        params_b["wk"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (keys_f.shape[0],)), wk)
+        state0 = (state0, init_work_state(topo.total_slots,
+                                          keys_f.shape[0]))
 
     if layout is not None:
         def step(carry, stats, p, x):
             return _region_event(topo, kernel, preempt_on, layout, carry,
                                  stats, p["params"], p["rp"], p["k"], x=x,
-                                 tel=tel, ep=p.get("ep"))
+                                 tel=tel, ep=p.get("ep"), work=work,
+                                 wk=p.get("wk"))
     else:
         def step(carry, stats, p):
             return _region_event(topo, kernel, preempt_on, None, carry,
                                  stats, p["params"], p["rp"], p["k"],
-                                 tel=tel, ep=p.get("ep"))
+                                 tel=tel, ep=p.get("ep"), work=work,
+                                 wk=p.get("wk"))
 
     zeros = _with_zeros(RegionWindowStats.zeros(topo.n_regions), tel,
-                        topo.n_regions, env=ep is not None)
-    epilogue = _rebase_order if ep is None else _rebase_order_env
+                        topo.n_regions, env=ep is not None,
+                        work=work is not None)
+    epilogue = _rebase_for(ep, work)
     if executor == "ref":
         _, stats = batched_event_windows_ref(
             step, state0, params_b, zeros, plan, xs=xs, epilogue=epilogue)
@@ -3023,13 +3533,13 @@ def _region_sweep_lanes(topo, kernel, preempt_on, n_events, chunk_events,
     jax.jit,
     static_argnames=("topo", "kernel", "preempt_on", "n_events",
                      "chunk_events", "burn_in", "tile", "interpret", "mesh",
-                     "executor", "rng", "tel"),
+                     "executor", "rng", "tel", "work"),
 )
 def _run_region_sweep_sharded_jit(topo, kernel, preempt_on, n_events,
                                   chunk_events, burn_in, tile, interpret,
                                   mesh, params, rp, k_cost, keys,
                                   executor="xla", rng="split", tel=None,
-                                  ep=None):
+                                  ep=None, work=None, wk=None):
     """The region fleet lane-partitioned across a 1-D device mesh (cf.
     :func:`_run_sweep_sharded_jit`)."""
     g, s = k_cost.shape[0], keys.shape[0]
@@ -3040,15 +3550,16 @@ def _run_region_sweep_sharded_jit(topo, kernel, preempt_on, n_events,
                                             _pad_count(lanes, mesh))
     spec, rspec = lane_spec(mesh), jax.sharding.PartitionSpec()
 
-    def local(pf, rf, kf, keysf, ep_):
+    def local(pf, rf, kf, keysf, ep_, wk_):
         return _region_sweep_lanes(topo, kernel, preempt_on, n_events,
                                    chunk_events, burn_in, tile, interpret,
                                    pf, rf, kf, keysf, executor=executor,
-                                   rng=rng, tel=tel, ep=ep_)
+                                   rng=rng, tel=tel, ep=ep_, work=work,
+                                   wk=wk_)
 
     stats = shard_map_1d(local, mesh=mesh,
-                         in_specs=(spec, spec, spec, spec, rspec),
-                         out_specs=spec)(params_f, rp_f, k_f, keys_f, ep)
+                         in_specs=(spec, spec, spec, spec, rspec, rspec),
+                         out_specs=spec)(params_f, rp_f, k_f, keys_f, ep, wk)
     if lanes != keys_f.shape[0]:
         stats = jax.tree.map(lambda x: x[:lanes], stats)
     return _unflatten_lanes(stats, g, s)
@@ -3056,7 +3567,8 @@ def _run_region_sweep_sharded_jit(topo, kernel, preempt_on, n_events,
 
 def summarize_region(stats: RegionWindowStats,
                      telemetry: Telemetry | None = None,
-                     env: EnvTimeline | None = None) -> dict:
+                     env: EnvTimeline | None = None,
+                     work: WorkModel | None = None) -> dict:
     """Float64 chunk reduction + region-specific derived statistics.
 
     Extends :func:`summarize`'s dict with preemption counters, spot spend,
@@ -3069,8 +3581,12 @@ def summarize_region(stats: RegionWindowStats,
     ``telemetry``, ``stats`` is the ``(base, telemetry)`` pair and the
     telemetry fields are appended (base keys unchanged; :func:`summarize`).
     With ``env``, the env block rides outermost and the shock counters are
-    appended.
+    appended.  With ``work``, the survival ledger rides outermost of all
+    and its job-level counters are appended (:func:`summarize_survival`).
     """
+    wstats = None
+    if work is not None:
+        stats, wstats = stats
     estats = None
     if env is not None:
         stats, estats = stats
@@ -3119,6 +3635,8 @@ def summarize_region(stats: RegionWindowStats,
         out = _merge_telemetry(out, telemetry, tstats, stats.time_elapsed)
     if estats is not None:
         out.update(summarize_env(estats))
+    if wstats is not None:
+        out.update(summarize_survival(wstats))
     return out
 
 
@@ -3138,6 +3656,7 @@ def run_region_sim(
     interpret: bool | None = None,
     telemetry: Telemetry | None = None,
     env: EnvTimeline | None = None,
+    work: WorkModel | None = None,
 ) -> dict:
     """Run one routing policy on one topology point; scalar long-run stats.
 
@@ -3146,16 +3665,20 @@ def run_region_sim(
     :func:`run_market_sim`) bit-for-bit per seed.  ``chunk_events`` /
     ``impl`` / ``rng`` behave exactly as in :func:`run_sim`; ``env``
     attaches an :class:`~repro.core.env.EnvTimeline` (per-region price /
-    hazard / availability segments) exactly as in :func:`run_sim`.
+    hazard / availability segments) exactly as in :func:`run_sim`;
+    ``work`` attaches the work structure and survival ledger exactly as
+    in :func:`run_market_sim`.
     """
     topology = as_topology(topology)
     params = {} if params is None else params
     _check_rng(rng)
     _check_telemetry(telemetry)
     _check_env(env)
+    _check_work(work, kernel)
     _check_run_shape("run_region_sim", n_events, burn_in)
     rp = topology.params()
     ep = _env_params(env, topology.n_regions)
+    wk = None if work is None else work.params()
     chunk = n_events if chunk_events is None else min(chunk_events, n_events)
     with annotate(f"repro.run_region_sim[{impl}]"):
         if impl in ("pallas", "ref"):
@@ -3166,20 +3689,21 @@ def run_region_sim(
                 jax.tree.map(lambda x: jnp.asarray(x)[None], params),
                 jax.tree.map(lambda x: jnp.asarray(x)[None], rp),
                 jnp.float32(k)[None], _raw_keys(key)[None], executor=impl,
-                rng=rng, tel=telemetry, ep=ep)
+                rng=rng, tel=telemetry, ep=ep, work=work, wk=wk)
             stats = jax.tree.map(lambda x: x[0, 0], stats)
         elif impl == "xla":
             _, stats = _run_region_sim_jit(topology, kernel,
                                            topology.preemptible, n_events,
                                            chunk, burn_in, rng, params, rp,
                                            jnp.float32(k), key,
-                                           tel=telemetry, ep=ep)
+                                           tel=telemetry, ep=ep, work=work,
+                                           wk=wk)
         else:
             raise ValueError(
                 f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
     return {name: _scalar_or_array(v)
-            for name, v in summarize_region(stats, telemetry,
-                                            env=env).items()}
+            for name, v in summarize_region(stats, telemetry, env=env,
+                                            work=work).items()}
 
 
 def run_region_sweep(
@@ -3205,6 +3729,7 @@ def run_region_sweep(
     interpret: bool | None = None,
     telemetry: Telemetry | None = None,
     env: EnvTimeline | None = None,
+    work: WorkModel | None = None,
     shard: str = "none",
     mesh=None,
 ) -> dict:
@@ -3244,12 +3769,14 @@ def run_region_sweep(
     _check_rng(rng)
     _check_telemetry(telemetry)
     _check_env(env)
+    _check_work(work, kernel)
     _check_shard("run_region_sweep", shard, mesh)
     _check_run_shape("run_region_sweep", n_events, burn_in)
     _check_loc_overrides("run_region_sweep", n, "region", prices=prices,
                          hazards=hazards, notices=notices,
                          spot_scales=spot_scales, job_scales=job_scales)
     ep = _env_params(env, n)
+    wk = None if work is None else work.params()
     params = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), params)
     vparams = {} if vector_params is None else jax.tree.map(
         lambda x: jnp.asarray(x, jnp.float32), dict(vector_params))
@@ -3288,20 +3815,21 @@ def run_region_sweep(
                 default_interpret() if interpret is None else interpret,
                 lane_mesh() if mesh is None else mesh, params_flat, rp_flat,
                 k_flat, _raw_keys(keys), executor=impl, rng=rng,
-                tel=telemetry, ep=ep)
+                tel=telemetry, ep=ep, work=work, wk=wk)
         elif impl in ("pallas", "ref"):
             stats = _run_region_sweep_pallas_jit(
                 topology, kernel, preempt_on, n_events, chunk, burn_in, tile,
                 default_interpret() if interpret is None else interpret,
                 params_flat, rp_flat, k_flat, _raw_keys(keys), executor=impl,
-                rng=rng, tel=telemetry, ep=ep)
+                rng=rng, tel=telemetry, ep=ep, work=work, wk=wk)
         elif impl == "xla":
             stats = _run_region_sweep_jit(topology, kernel, preempt_on,
                                           n_events, chunk, burn_in, rng,
                                           params_flat, rp_flat, k_flat, keys,
-                                          tel=telemetry, ep=ep)
+                                          tel=telemetry, ep=ep, work=work,
+                                          wk=wk)
         else:
             raise ValueError(
                 f"unknown impl {impl!r} (expected 'xla'|'pallas'|'ref')")
-    out = summarize_region(stats, telemetry, env=env)
+    out = summarize_region(stats, telemetry, env=env, work=work)
     return _reshape_sweep(out, grid_shape, n_seeds)

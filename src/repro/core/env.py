@@ -368,6 +368,65 @@ def _splice(tl: EnvTimeline, t0: float, t1: float, kind: int,
                        kind=tuple(kd))
 
 
+def timeline_from_trace(times, avail, *, price=None, hazard=None
+                        ) -> EnvTimeline:
+    """Replay a recorded availability trace as an :class:`EnvTimeline`.
+
+    ``times`` are segment END times (strictly increasing; the final
+    segment is held open-ended past ``times[-1]``); ``avail`` holds one
+    availability row per segment — a scalar or a per-pool/region tuple,
+    with 0 marking a capacity blackout exactly as
+    :func:`inject_blackout` would.  Optional ``price`` / ``hazard``
+    rows ride along as multipliers.  This is the bridge from spot-market
+    traces (e.g. the synthetic k80-style trace in
+    ``tests/data/spot_trace_k80.json``) to the engine's traced
+    environment axis, so checkpoint/safety-net kernels can be
+    tournament-tested against adversarial recorded blackouts rather
+    than only synthetic injections.
+
+    Segments whose availability is zero in EVERY location are tagged
+    ``SEG_BLACKOUT`` (feeding the `repro.obs` shock counters); all
+    others are ``SEG_NORMAL``.
+    """
+    times = [float(t) for t in times]
+    avail = list(avail)
+    if len(times) != len(avail):
+        raise ValueError(
+            f"timeline_from_trace: {len(times)} times for "
+            f"{len(avail)} avail rows")
+    if not times:
+        raise ValueError("timeline_from_trace needs at least one segment")
+
+    def _row(v):
+        return tuple(float(x) for x in v) if isinstance(
+            v, (list, tuple, np.ndarray)) else float(v)
+
+    def _opt(rows, name):
+        if rows is None:
+            return (1.0,) * (len(times) + 1)
+        rows = list(rows)
+        if len(rows) != len(times):
+            raise ValueError(
+                f"timeline_from_trace: {len(rows)} {name} rows for "
+                f"{len(times)} segments")
+        return tuple(_row(v) for v in rows) + (_row(rows[-1]),)
+
+    av = tuple(_row(v) for v in avail)
+    kind = tuple(
+        SEG_BLACKOUT if (all(x == 0.0 for x in v) if isinstance(v, tuple)
+                         else v == 0.0) else SEG_NORMAL
+        for v in av)
+    # hold the last recorded regime open-ended (EnvTimeline requires an
+    # infinite final boundary)
+    return EnvTimeline(
+        t_end=tuple(times) + (float("inf"),),
+        price_mult=_opt(price, "price"),
+        hazard_mult=_opt(hazard, "hazard"),
+        avail=av + (av[-1],),
+        kind=kind + (kind[-1],),
+    )
+
+
 def inject_storm(tl: EnvTimeline, t0: float, t1: float, *,
                  hazard_mult: float = 10.0, loc=None,
                  n_locs=None) -> EnvTimeline:

@@ -406,9 +406,19 @@ class PanicKernel:
     kernel's — and with no blackout in the timeline ``alive`` is all-True,
     making every repair the identity: stats are bitwise the base kernel's
     (frozen in tests/test_env.py).
+
+    ``drain_dead=True`` additionally repairs jobs ALREADY QUEUED on a pool
+    that goes dark mid-wait: the market event body re-tags every occupied
+    slot whose pool has zero availability to the cheapest alive pool
+    (the stranded-job caveat — without it those jobs pin ``qlen`` until
+    their wait budgets expire).  Opt-in because re-tagging changes which
+    slot the next spot arrival serves; identity whenever no blackout is
+    active.  Market loop only: the region loop's slot→region map is
+    static, so stranded REGION jobs still drain via the deadline path.
     """
 
     base: object  # any PolicyKernel / MarketPolicyKernel / routing kernel
+    drain_dead: bool = False  # re-queue jobs stranded on a dead pool
 
     # --------------------------------------------------------- admission
     def admit_market(self, params, qlen, pool_state, key):

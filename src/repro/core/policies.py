@@ -37,6 +37,21 @@ from repro.core.waittime import WaitTime, InfiniteWait
 _INF = np.float32(3e38)  # np scalar: inlines as a literal in kernel traces
 
 
+def deadline_slack(deadline, life, remaining_work, od_time, buffer=0.0):
+    """Slack before a job can no longer finish on time, even on demand.
+
+    ``deadline − life − remaining_work·od_time − buffer``: how much longer
+    the job may sit on spot before migrating to on-demand (which serves a
+    unit of work every ``od_time``) would still meet the deadline.  The
+    can't-be-late law (:class:`repro.core.work.CantBeLateKernel`): defect
+    the moment slack hits zero; a job admitted with positive slack then
+    never misses.  One arithmetic expression serving both backends — host
+    numpy scalars (the cluster orchestrator) and traced jnp arrays (the
+    engine's safety-net watchdog) — like :func:`three_phase_admit_prob`.
+    """
+    return deadline - life - remaining_work * od_time - buffer
+
+
 def three_phase_admit_prob(qlen, r):
     """P(admit | queue length) under the Theorem-4 three-phase law.
 

@@ -327,6 +327,12 @@ class RoutingKernel:
     PR-2's :class:`repro.core.market.PoolChoiceKernel`, one level up: wrap
     ``ThreePhaseKernel`` / ``SingleSlotKernel`` / ``NoticeAwareKernel`` and
     each region runs its own per-region instance of the paper's policy.
+
+    Note on blackouts: the region loop's slot→region map is STATIC, so
+    jobs already queued in a region that goes dark cannot be re-tagged
+    (the market loop's ``PanicKernel(drain_dead=True)`` repair has no
+    region analogue) — stranded region jobs drain through their wait
+    budgets / the deadline path.  Routing only protects NEW admissions.
     """
 
     base: object  # any PolicyKernel / MarketPolicyKernel

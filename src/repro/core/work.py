@@ -1,0 +1,185 @@
+"""Work-structured jobs: checkpoint-priced recovery and can't-be-late
+safety nets.
+
+The base engine treats a job as an atomic unit: one spot slot serves it,
+one preemption resumes it for free.  The ``work=`` axis replaces that
+resume bit with a traced per-job *work structure*: every job carries
+``total_work`` units to serve, a preemption without a checkpoint rolls it
+back to its last checkpointed progress, and every resume pays
+``restart_overhead`` units before real progress restarts — the
+checkpoint-within-notice law (:func:`repro.core.market.
+checkpoint_within_notice`) now costs real simulated work.
+
+Two pieces live here:
+
+- :class:`WorkModel` — the static descriptor (hashable, rides in jit
+  ``static_argnames`` like the kernel), whose :meth:`WorkModel.params`
+  emits the traced float32 parameter dict the event bodies consume (the
+  ``mp``/``rp``/``ep`` idiom).  Its constructors are the checkpoint-kernel
+  family: :meth:`WorkModel.never` (roll back to zero),
+  :meth:`WorkModel.on_notice` (checkpoint saves iff it fits the
+  preemption notice window), :meth:`WorkModel.periodic`
+  (checkpoint every ``period`` units of progress, each costing
+  ``cost`` extra units of work).
+- :class:`CantBeLateKernel` — a safety-net wrapper over any policy
+  kernel: the engine tracks per-job slack
+  ``deadline − life − remaining_work·od_time − slack_buffer``
+  (:func:`repro.core.policies.deadline_slack`) and force-migrates a job
+  to on-demand the moment its slack would go critical, so a job admitted
+  with positive slack *cannot* miss its deadline — the panic-mode
+  guarantee of the ``cant_be_late`` problem family.
+
+The zero-cost contract is two-sided: ``work=None`` lowers byte-identical
+HLO (no work ops are ever traced), and the identity model
+``WorkModel()`` (one unit of work, zero overhead, never checkpoint, no
+deadline) reproduces the base engine's statistics bit-for-bit on every
+loop × executor × rng cell (frozen in ``tests/test_work.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+_INF = np.float32(3e38)
+
+_CKPT_MODES = ("never", "notice", "periodic")
+
+
+class WorkState(NamedTuple):
+    """Traced per-slot work structure (float32, one row per engine slot).
+
+    ``prog`` is progress toward ``total_work``; ``oh`` is the outstanding
+    restart-overhead debt served before progress resumes; ``ckpt`` is the
+    progress saved at the last checkpoint (rollback target); ``life`` is
+    the age since admission — never reset on resume, so deadline
+    accounting spans preemptions.
+    """
+
+    prog: jnp.ndarray
+    oh: jnp.ndarray
+    ckpt: jnp.ndarray
+    life: jnp.ndarray
+
+
+def init_work_state(n_slots: int, lanes: int | None = None) -> WorkState:
+    """Zero work structure for ``n_slots`` slots (optionally per-lane)."""
+    shape = (n_slots,) if lanes is None else (lanes, n_slots)
+    z = jnp.zeros(shape, jnp.float32)
+    return WorkState(prog=z, oh=z, ckpt=z, life=z)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkModel:
+    """Static work-structure descriptor (the checkpoint-kernel family).
+
+    ``total_work`` is in service units (one spot service serves one unit);
+    ``restart_overhead`` is the extra units a resumed job re-serves before
+    making progress.  ``ckpt`` selects the checkpoint discipline
+    statically: ``"never"`` rolls back to the last saved point (zero
+    unless periodic), ``"notice"`` saves current progress at preemption
+    iff ``ckpt_time`` fits the firing pool's notice window, ``"periodic"``
+    saves every ``ckpt_period`` units of progress at ``ckpt_cost`` extra
+    units each.  ``deadline`` (in time units since admission) and
+    ``od_time`` (time per unit of work on demand) feed the survival
+    ledger's hard deadline-miss accounting and the
+    :class:`CantBeLateKernel` slack law.  The default is the *identity
+    model*: bit-for-bit today's engine.
+    """
+
+    total_work: float = 1.0
+    restart_overhead: float = 0.0
+    ckpt: str = "never"
+    ckpt_time: float = 0.0
+    ckpt_period: float = 0.0
+    ckpt_cost: float = 0.0
+    deadline: float = float(_INF)
+    od_time: float = 0.0
+
+    def __post_init__(self):
+        if self.ckpt not in _CKPT_MODES:
+            raise ValueError(
+                f"ckpt must be one of {_CKPT_MODES}, got {self.ckpt!r}")
+        if self.total_work <= 0:
+            raise ValueError("total_work must be positive")
+        if self.ckpt == "periodic" and self.ckpt_period <= 0:
+            raise ValueError("periodic checkpointing needs ckpt_period > 0")
+
+    def params(self) -> dict:
+        """Traced float32 parameter dict consumed by the event bodies."""
+        return {
+            "total_work": jnp.float32(self.total_work),
+            "restart_overhead": jnp.float32(self.restart_overhead),
+            "ckpt_time": jnp.float32(self.ckpt_time),
+            "ckpt_period": jnp.float32(self.ckpt_period),
+            "ckpt_cost": jnp.float32(self.ckpt_cost),
+            "deadline": jnp.float32(min(float(self.deadline), float(_INF))),
+            "od_time": jnp.float32(self.od_time),
+        }
+
+    # ---- the checkpoint-kernel family ----------------------------------
+    @classmethod
+    def never(cls, **kw) -> "WorkModel":
+        """No checkpoints: every rollback loses all progress."""
+        return cls(ckpt="never", **kw)
+
+    @classmethod
+    def on_notice(cls, ckpt_time: float, **kw) -> "WorkModel":
+        """Checkpoint during the preemption notice window iff it fits."""
+        return cls(ckpt="notice", ckpt_time=ckpt_time, **kw)
+
+    @classmethod
+    def periodic(cls, period: float, cost: float = 0.0, **kw) -> "WorkModel":
+        """Checkpoint every ``period`` units of progress, at ``cost``
+        extra units of work each."""
+        return cls(ckpt="periodic", ckpt_period=period, ckpt_cost=cost, **kw)
+
+
+def restart_overhead_from_timing(save_seconds: float, restore_seconds: float,
+                                 step_seconds: float,
+                                 steps_per_unit: float = 1.0) -> float:
+    """Seed :attr:`WorkModel.restart_overhead` from measured wall time.
+
+    A resume re-pays the checkpoint restore plus the blocking save that
+    produced it, expressed in engine work units: one unit is
+    ``steps_per_unit`` training steps of ``step_seconds`` wall time each.
+    This is the bridge from :class:`repro.checkpoint.manager.
+    CheckpointManager` timing (examples/elastic_spot_training.py times a
+    blocking save + elastic restore around real train steps) to the
+    ``work=`` axis.
+    """
+    if step_seconds <= 0 or steps_per_unit <= 0:
+        raise ValueError("step_seconds and steps_per_unit must be positive")
+    return float(save_seconds + restore_seconds) / (
+        float(step_seconds) * float(steps_per_unit))
+
+
+@dataclasses.dataclass(frozen=True)
+class CantBeLateKernel:
+    """Safety-net wrapper: force-migrate to on-demand before it's too late.
+
+    Wraps any policy kernel (delegating every hook — ``admit``,
+    ``admit_market``, ``on_preempt``, ``route``, the ``*_u`` twins,
+    ``slab_cols``, ``init_params`` — to ``base``) and arms the engine's
+    per-job slack watchdog: a job whose slack
+    ``deadline − life − (overhead + remaining_work)·od_time −
+    slack_buffer`` is about to go negative is defected to on-demand via
+    the existing deadline machinery, recorded as a *panic entry* in the
+    survival ledger.  A job admitted with positive slack therefore never
+    misses its deadline (``work=`` must be set; the entry points reject
+    the wrapper without it).  Wrap outermost — foreign ``__getattr__``
+    delegation (e.g. :class:`~repro.core.market.PanicKernel`) does not
+    forward the ``safety_net`` marker.
+    """
+
+    base: object
+    slack_buffer: float = 0.0
+
+    safety_net: ClassVar[bool] = True
+
+    def __getattr__(self, name):
+        if name.startswith("_") or name == "base":
+            raise AttributeError(name)
+        return getattr(object.__getattribute__(self, "base"), name)

@@ -28,7 +28,11 @@ pytrees, so the single-pool engine, the spot-market engine (per-pool
 clock vectors, per-pool stat counters), and the multi-region engine
 (state blocks grown a region axis: (tile, R) job/spot/preempt clock
 vectors, (tile, sum rmax_r) packed slot partitions) share this one
-kernel family with zero kernel-side changes.  The
+kernel family with zero kernel-side changes — and so do the optional
+state/stat extensions that pair onto the carry (the ``env=`` timeline
+cursor, the ``work=`` per-slot work structure with its survival-ledger
+block: (tile, rmax) progress/overhead/checkpoint/life planes riding in
+the same VMEM-resident state tile).  The
 body is ``jax.vmap``-ed across the tile inside the kernel, which keeps each
 lane's arithmetic — including its threefry PRNG stream — bit-for-bit
 identical to the ``lax.scan`` reference path (see ref.py and

@@ -14,6 +14,10 @@ zero cost, bitwise-reproduced stats (frozen in tests/test_obs.py).
 * :mod:`repro.obs.shocks` — shock/degradation counters for the
   environment-timeline axis (``env=``): boundaries crossed, storms /
   blackouts / spikes entered, shock dwell times, degraded admissions.
+* :mod:`repro.obs.survival` — the survival ledger for the work axis
+  (``work=``): job-level finished/on-time/missed counters with frozen
+  identities, work lost/recomputed to rollbacks, checkpoints taken,
+  and safety-net panic entries.
 * :mod:`repro.obs.trace` — event tracing (device rings / host recorder)
   and the Chrome/Perfetto exporter.
 * :mod:`repro.obs.timing` — compile-vs-steady timing, BENCH provenance
@@ -21,6 +25,9 @@ zero cost, bitwise-reproduced stats (frozen in tests/test_obs.py).
 """
 from .shocks import (ENV_INT_STATS, EnvWindowStats, env_merge,
                      env_reduce, env_update, env_zeros, summarize_env)
+from .survival import (SURVIVAL_INT_STATS, SurvivalWindowStats,
+                       summarize_survival, survival_merge, survival_reduce,
+                       survival_update, survival_zeros)
 from .stats import (EVENT_TYPES, TEL_INT_STATS, Telemetry,
                     TelemetryWindowStats, sketch_quantile,
                     summarize_telemetry, telemetry_merge, telemetry_reduce,
@@ -33,6 +40,8 @@ __all__ = [
     "ENV_INT_STATS",
     "EVENT_TYPES",
     "EnvWindowStats",
+    "SURVIVAL_INT_STATS",
+    "SurvivalWindowStats",
     "TEL_INT_STATS",
     "Telemetry",
     "TelemetryWindowStats",
@@ -44,6 +53,11 @@ __all__ = [
     "env_update",
     "env_zeros",
     "summarize_env",
+    "summarize_survival",
+    "survival_merge",
+    "survival_reduce",
+    "survival_update",
+    "survival_zeros",
     "provenance",
     "sketch_quantile",
     "summarize_telemetry",

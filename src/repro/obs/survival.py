@@ -1,0 +1,133 @@
+"""Survival ledger: job-level work/deadline accounting for the work axis.
+
+The engine's base :class:`~repro.core.engine.WindowStats` counts *legs*
+(every service attempt, defection, and resume is one completed leg — the
+paper's renewal accounting).  Once jobs carry a work structure
+(``work=`` on the entry points, :class:`repro.core.work.WorkModel`), the
+job-level truth lives here instead: a job is *finished* only when its
+last unit of work is served (or it migrates to on-demand), and a finished
+job either met its deadline or *missed* it — hard accounting, not a soft
+statistic.  The ledger also prices recovery: work lost to rollbacks, work
+recomputed (lost progress + restart overhead), checkpoints taken, and
+panic entries (safety-net defections forced by
+:class:`~repro.core.work.CantBeLateKernel`).
+
+Frozen counter identities (property-tested in ``tests/test_work.py``):
+
+- ``jobs_ontime + deadline_misses == jobs_finished`` — every finished job
+  is classified exactly once.
+- ``jobs_admitted - jobs_finished == jobs_in_flight >= 0`` — misses +
+  completions account for every admission, up to jobs still running.
+- ``work_lost == work_recomputed`` under zero restart overhead.
+
+Same float32-window / float64-host-reduction discipline as the rest of
+``repro.obs``: the traced :func:`survival_update` fold adds one event into
+a window block; :func:`summarize_survival` reduces the chunk axis in
+float64 on the host.  Cross-shard merge helpers (:func:`survival_merge`,
+:func:`survival_reduce`) mirror ``telemetry_merge``/``env_merge``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# Integer-valued summary keys (kept separate from the engine's INT_STATS:
+# these exist only when `work=` is on, so callers iterating INT_STATS over
+# a work=None summary stay correct).
+SURVIVAL_INT_STATS = (
+    "jobs_admitted",
+    "jobs_finished",
+    "deadline_misses",
+    "jobs_ontime",
+    "checkpoints_taken",
+    "panic_entries",
+    "jobs_in_flight",
+)
+
+
+class SurvivalWindowStats(NamedTuple):
+    """One float32/int32 window block of job-level survival counters."""
+
+    admitted: jnp.ndarray       # i32: job arrivals (admitted or sent od)
+    finished: jnp.ndarray       # i32: jobs that reached their last unit
+    misses: jnp.ndarray         # i32: finished jobs past their deadline
+    ontime: jnp.ndarray         # i32: finished jobs within their deadline
+    checkpoints: jnp.ndarray    # i32: checkpoints taken (periodic + notice)
+    panics: jnp.ndarray         # i32: safety-net forced defections
+    work_done: jnp.ndarray      # f32: units of real progress served
+    work_lost: jnp.ndarray      # f32: progress rolled back on resume
+    work_recomputed: jnp.ndarray  # f32: lost progress + restart overhead
+    overhead_paid: jnp.ndarray  # f32: restart-overhead units charged
+
+
+def survival_zeros() -> SurvivalWindowStats:
+    zi = jnp.zeros((), jnp.int32)
+    zf = jnp.zeros((), jnp.float32)
+    return SurvivalWindowStats(zi, zi, zi, zi, zi, zi, zf, zf, zf, zf)
+
+
+def survival_update(ws: SurvivalWindowStats, *, admitted, finished, missed,
+                    checkpoint, panic, work_done, work_lost,
+                    work_recomputed, overhead_paid) -> SurvivalWindowStats:
+    """Fold one merged event into the ledger (traced; no data-dependent
+    control flow).  ``missed`` is only counted for finished jobs; the
+    on-time twin is derived here so the classification identity holds by
+    construction."""
+    fin = jnp.asarray(finished, jnp.bool_)
+    miss = fin & jnp.asarray(missed, jnp.bool_)
+    return SurvivalWindowStats(
+        admitted=ws.admitted + jnp.asarray(admitted, jnp.int32),
+        finished=ws.finished + fin.astype(jnp.int32),
+        misses=ws.misses + miss.astype(jnp.int32),
+        ontime=ws.ontime + (fin & (~miss)).astype(jnp.int32),
+        checkpoints=ws.checkpoints + jnp.asarray(checkpoint,
+                                                 jnp.int32),
+        panics=ws.panics + jnp.asarray(panic, jnp.int32),
+        work_done=ws.work_done + work_done,
+        work_lost=ws.work_lost + work_lost,
+        work_recomputed=ws.work_recomputed + work_recomputed,
+        overhead_paid=ws.overhead_paid + overhead_paid,
+    )
+
+
+def survival_merge(a: SurvivalWindowStats,
+                   b: SurvivalWindowStats) -> SurvivalWindowStats:
+    """Merge two ledgers (cross-shard / cross-window; exact for ints)."""
+    return SurvivalWindowStats(*(x + y for x, y in zip(a, b)))
+
+
+def survival_reduce(ws: SurvivalWindowStats,
+                    axis: int = 0) -> SurvivalWindowStats:
+    """Sum the ledger along one axis (e.g. a lane or chunk axis)."""
+    return SurvivalWindowStats(*(x.sum(axis=axis) for x in ws))
+
+
+def summarize_survival(wstats: SurvivalWindowStats) -> dict:
+    """Float64 chunk reduction + derived job-level statistics."""
+
+    def _red(name):
+        return np.asarray(getattr(wstats, name), np.float64).sum(axis=-1)
+
+    def _int(x):
+        arr = x.astype(np.int64)
+        return int(arr) if arr.ndim == 0 else arr
+
+    admitted = _red("admitted")
+    finished = _red("finished")
+    misses = _red("misses")
+    return {
+        "jobs_admitted": _int(admitted),
+        "jobs_finished": _int(finished),
+        "deadline_misses": _int(misses),
+        "jobs_ontime": _int(_red("ontime")),
+        "checkpoints_taken": _int(_red("checkpoints")),
+        "panic_entries": _int(_red("panics")),
+        "jobs_in_flight": _int(admitted - finished),
+        "deadline_miss_rate": misses / np.maximum(finished, 1.0),
+        "work_done": _red("work_done"),
+        "work_lost": _red("work_lost"),
+        "work_recomputed": _red("work_recomputed"),
+        "restart_overhead_paid": _red("overhead_paid"),
+    }

@@ -12,6 +12,13 @@ Every entry lowers one of the engine's module-scope jit wrappers with
 ``env``/``telemetry`` off: if threading the environment-timeline axis
 through the engine perturbs even one op in the ``env=None`` program, the
 digest moves and the frozen test fails.
+
+The matrix freezes every later statically-absent axis for free: the
+``work=`` job-structure axis (PR 10) threads through the same wrappers
+as trailing ``work=None, wk=None`` defaults, so these digests — still
+compared against the *pre-env* baseline — are simultaneously the
+byte-identity proof for ``work=None``.  A new axis that moves even one
+op in the off program shows up here as a moved digest.
 """
 from __future__ import annotations
 

@@ -1,0 +1,377 @@
+"""The work-axis contract (repro.core.work + the engine ``work=`` axis).
+
+Frozen guarantees:
+
+  * **Zero-cost off, two-sided** — ``work=None`` lowers byte-identical
+    StableHLO (the frozen 24-cell baseline of tests/test_env.py passes
+    untouched — that test IS the off-side proof), and the identity model
+    ``WorkModel()`` reproduces the base engine's statistics
+    **bit-for-bit** on every loop × executor × rng cell, sims and
+    sweeps.
+  * **Ledger identities** — every finished job is classified exactly
+    once (``ontime + misses == finished``); from a cold start every
+    admission is accounted for (``admitted − finished == in_flight ≥
+    0``); under zero restart overhead ``work_lost == work_recomputed``.
+  * **Safety net never misses** — on the committed adversarial
+    k80-style trace (tests/data/spot_trace_k80.json) the base kernel
+    records deadline misses; :class:`CantBeLateKernel` records ZERO
+    while still beating the all-on-demand cost floor.
+  * **Drain** — ``PanicKernel(drain_dead=True)`` is the bitwise
+    identity without a blackout and strictly increases spot service
+    under one (stranded jobs re-queue to the cheapest alive pool).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CantBeLateKernel,
+    EnvTimeline,
+    Exponential,
+    PanicKernel,
+    WorkModel,
+    all_ondemand_cost,
+    deadline_slack,
+    inject_blackout,
+    restart_overhead_from_timing,
+    run_market_sim,
+    run_market_sweep,
+    run_region_sim,
+    run_region_sweep,
+    run_sim,
+    run_sweep,
+    timeline_from_trace,
+)
+from repro.core.market import NoticeAwareKernel, SpotMarket, SpotPool
+from repro.core.policies import ThreePhaseKernel
+from repro.core.regions import Region, RegionTopology, RoutingKernel
+from repro.obs import SURVIVAL_INT_STATS
+
+_TRACE = Path(__file__).parent / "data" / "spot_trace_k80.json"
+
+N_EVENTS, CHUNK = 2500, 1024
+KEY = jax.random.key(7)
+
+# a work model that exercises every ledger column: multi-unit jobs,
+# priced restarts, checkpoint-on-notice, live deadlines
+WORK = WorkModel.on_notice(0.05, total_work=3.0, restart_overhead=0.5,
+                           deadline=30.0, od_time=2.0)
+
+
+def _market() -> SpotMarket:
+    return SpotMarket(pools=(
+        SpotPool(arrival=Exponential(0.9), price=1.0, hazard=0.3,
+                 notice=0.1),
+        SpotPool(arrival=Exponential(0.5), price=0.6, hazard=0.8,
+                 notice=0.3),
+    ))
+
+
+def _topo() -> RegionTopology:
+    return RegionTopology(regions=(
+        Region(job=Exponential(1.2), spot=Exponential(0.9), price=1.0,
+               hazard=0.3, notice=0.1, rmax=4),
+        Region(job=Exponential(0.7), spot=Exponential(0.5), price=0.6,
+               hazard=0.8, notice=0.3, rmax=4),
+    ))
+
+
+def _run(loop: str, impl: str, rng: str, work, kernel=None,
+         burn_in: int = 256, env=None) -> dict:
+    kw = dict(k=10.0, n_events=N_EVENTS, key=KEY, burn_in=burn_in,
+              chunk_events=CHUNK, impl=impl, rng=rng, interpret=True,
+              tile=2, env=env, work=work)
+    if loop == "single":
+        return run_sim(Exponential(1.2), Exponential(0.9),
+                       ThreePhaseKernel(), {"r": jnp.float32(2.0)}, **kw)
+    if loop == "market":
+        kern = kernel or NoticeAwareKernel(checkpoint_time=0.05)
+        return run_market_sim(Exponential(1.2), _market(), kern,
+                              {"r": jnp.float32(2.0)}, **kw)
+    kern = kernel or RoutingKernel(base=NoticeAwareKernel(
+        checkpoint_time=0.05), choice="cheapest")
+    return run_region_sim(_topo(), kern, {"r": jnp.float32(2.0)}, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Two-sided zero cost: WorkModel() identity == work=None, bit for bit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("impl", ["xla", "pallas", "ref"])
+@pytest.mark.parametrize("rng", ["split", "slab"])
+@pytest.mark.parametrize("loop", ["single", "market", "region"])
+def test_identity_model_is_bitwise_off(loop, impl, rng):
+    """The identity work model (one unit, zero overhead, never
+    checkpoint, no deadline) reproduces the base engine bit-for-bit on
+    every cell — the on-side of the zero-cost contract (the off side,
+    work=None lowering byte-identically, is the frozen HLO baseline in
+    tests/test_env.py)."""
+    off = _run(loop, impl, rng, work=None)
+    on = _run(loop, impl, rng, work=WorkModel())
+    for name in off:
+        av, bv = np.asarray(off[name]), np.asarray(on[name])
+        assert av.shape == bv.shape and (av == bv).all(), (loop, impl, rng,
+                                                           name)
+    # the identity model's ledger is degenerate: nothing lost, nothing
+    # missed, nothing checkpointed
+    assert on["deadline_misses"] == 0 and on["panic_entries"] == 0
+    assert on["work_lost"] == 0.0 and on["checkpoints_taken"] == 0
+
+
+@pytest.mark.parametrize("rng", ["split", "slab"])
+def test_identity_model_sweep_bitwise_off(rng):
+    """Sweep entries (grid × seeds lanes) obey the same on-side
+    identity contract, all three loops."""
+    kw = dict(k=10.0, n_events=2000, key=KEY, n_seeds=2, burn_in=128,
+              chunk_events=1024, rng=rng)
+    r = {"r": jnp.float32([1.5, 2.5])}
+    for a, b in (
+        (run_sweep(Exponential(1.2), Exponential(0.9), ThreePhaseKernel(),
+                   r, **kw),
+         run_sweep(Exponential(1.2), Exponential(0.9), ThreePhaseKernel(),
+                   r, work=WorkModel(), **kw)),
+        (run_market_sweep(Exponential(1.2), _market(),
+                          NoticeAwareKernel(checkpoint_time=0.05), r, **kw),
+         run_market_sweep(Exponential(1.2), _market(),
+                          NoticeAwareKernel(checkpoint_time=0.05), r,
+                          work=WorkModel(), **kw)),
+        (run_region_sweep(_topo(), RoutingKernel(
+            base=NoticeAwareKernel(checkpoint_time=0.05),
+            choice="cheapest"), r, **kw),
+         run_region_sweep(_topo(), RoutingKernel(
+             base=NoticeAwareKernel(checkpoint_time=0.05),
+             choice="cheapest"), r, work=WorkModel(), **kw)),
+    ):
+        for name in a:
+            assert (np.asarray(a[name]) == np.asarray(b[name])).all(), name
+
+
+# ---------------------------------------------------------------------------
+# Executor equivalence with a live work model
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rng", ["split", "slab"])
+@pytest.mark.parametrize("loop", ["single", "market", "region"])
+def test_work_executors_bitwise(loop, rng):
+    """pallas and ref reproduce xla bit-for-bit with the full work model
+    live (rollbacks, checkpoints, deadlines all exercised)."""
+    ref = _run(loop, "xla", rng, work=WORK)
+    for impl in ("pallas", "ref"):
+        got = _run(loop, impl, rng, work=WORK)
+        for name in ref:
+            av, bv = np.asarray(ref[name]), np.asarray(got[name])
+            assert av.shape == bv.shape and (av == bv).all(), (loop, impl,
+                                                               rng, name)
+
+
+# ---------------------------------------------------------------------------
+# Ledger identities
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("loop", ["single", "market", "region"])
+def test_ledger_identities_cold_start(loop):
+    """From a cold start (burn_in=0): misses + completions account for
+    every admission, and every finished job is classified exactly once."""
+    out = _run(loop, "xla", "split", work=WORK, burn_in=0)
+    assert out["jobs_ontime"] + out["deadline_misses"] == (
+        out["jobs_finished"])
+    assert out["jobs_admitted"] - out["jobs_finished"] == (
+        out["jobs_in_flight"])
+    assert 0 <= out["jobs_in_flight"] <= out["jobs_admitted"]
+    for name in SURVIVAL_INT_STATS:
+        if name != "jobs_in_flight":
+            assert out[name] >= 0, name
+
+
+@pytest.mark.parametrize("loop", ["market", "region"])
+def test_work_lost_equals_recomputed_zero_overhead(loop):
+    """Under zero restart overhead the recomputation bill is exactly the
+    rolled-back progress: work_lost == work_recomputed (never
+    checkpointing, so rollbacks genuinely lose progress)."""
+    work = WorkModel.never(total_work=3.0, restart_overhead=0.0,
+                           deadline=30.0, od_time=2.0)
+    out = _run(loop, "xla", "split", work=work, burn_in=0)
+    assert out["work_lost"] > 0.0  # rollbacks actually happened
+    np.testing.assert_allclose(out["work_lost"], out["work_recomputed"])
+    assert out["restart_overhead_paid"] == 0.0
+    assert out["checkpoints_taken"] == 0
+
+
+def test_checkpoints_bound_losses():
+    """Checkpoint-on-notice with a window that always fits the notice
+    saves progress at every preemption: nothing is ever lost, but the
+    restart overhead is still recomputed."""
+    work = WorkModel.on_notice(0.05, total_work=3.0, restart_overhead=0.5,
+                               deadline=30.0, od_time=2.0)
+    out = _run("market", "xla", "split", work=work, burn_in=0)
+    assert out["checkpoints_taken"] > 0
+    assert out["work_lost"] == 0.0  # 0.05 fits both notice windows
+    np.testing.assert_allclose(
+        out["work_recomputed"], out["restart_overhead_paid"])
+
+
+def test_periodic_checkpoints_price_the_save():
+    """Periodic checkpointing takes checkpoints while jobs run (not only
+    at preemption) and bills ckpt_cost as extra overhead."""
+    work = WorkModel.periodic(1.0, cost=0.25, total_work=3.0,
+                              restart_overhead=0.5)
+    out = _run("market", "xla", "split", work=work, burn_in=0)
+    assert out["checkpoints_taken"] > 0
+    assert out["restart_overhead_paid"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Safety net: can't-be-late tournament on the committed trace
+# ---------------------------------------------------------------------------
+def _k80():
+    d = json.loads(_TRACE.read_text())
+    env = timeline_from_trace(d["times"], d["avail"])
+    rates = (0.8, 0.6)
+    market = SpotMarket(pools=tuple(
+        SpotPool(arrival=Exponential(r), price=p["price"],
+                 hazard=p["hazard"], notice=p["notice"])
+        for r, p in zip(rates, d["pools"])))
+    return env, market
+
+
+def _tournament(kernel, work):
+    env, market = _k80()
+    return run_market_sim(
+        Exponential(1.2), market, kernel, {"r": jnp.float32(2.0)},
+        k=5.0, n_events=N_EVENTS, key=KEY, burn_in=0, chunk_events=CHUNK,
+        env=env, work=work)
+
+
+def test_safety_net_never_misses_on_trace():
+    """The tournament the PR ships: on the committed adversarial trace
+    (full 3h blackouts every cycle) the base kernel misses deadlines;
+    the CantBeLateKernel wrapper force-migrates at slack exhaustion and
+    records ZERO misses — at a cost still below the all-on-demand
+    floor."""
+    work = WorkModel.on_notice(0.05, total_work=1.0, restart_overhead=0.2,
+                               deadline=2.5, od_time=0.5)
+    base_kern = NoticeAwareKernel(checkpoint_time=0.05)
+    base = _tournament(base_kern, work)
+    safe = _tournament(CantBeLateKernel(base_kern, slack_buffer=0.2), work)
+
+    assert base["deadline_misses"] > 0, "trace must be adversarial"
+    assert safe["deadline_misses"] == 0
+    assert safe["panic_entries"] > 0  # the guarantee came from panics
+    # the safety net costs less than giving up on spot entirely
+    assert safe["avg_cost"] < all_ondemand_cost(5.0, 1)
+    # both runs saw the same blackout exposure (same env, same RNG)
+    assert safe["blackout_time"] > 0.0
+
+
+def test_safety_net_requires_work():
+    """A safety-net kernel without the work axis is a loud host error,
+    on every entry point that accepts kernels."""
+    kern = CantBeLateKernel(NoticeAwareKernel(checkpoint_time=0.05))
+    with pytest.raises(ValueError, match="work"):
+        run_market_sim(Exponential(1.2), _market(), kern,
+                       {"r": jnp.float32(2.0)}, k=10.0, n_events=100,
+                       key=KEY)
+    with pytest.raises(ValueError, match="work"):
+        run_market_sweep(Exponential(1.2), _market(), kern,
+                         {"r": jnp.float32([2.0])}, k=10.0, n_events=100,
+                         key=KEY, n_seeds=1)
+
+
+def test_cantbelate_delegates_to_base():
+    """The wrapper forwards every foreign attribute to its base (so
+    drain_dead etc. compose through it) but owns the safety_net marker."""
+    base = PanicKernel(base=NoticeAwareKernel(checkpoint_time=0.05),
+                       drain_dead=True)
+    wrapped = CantBeLateKernel(base, slack_buffer=0.1)
+    assert wrapped.safety_net is True
+    assert wrapped.drain_dead is True
+    assert getattr(base, "safety_net", False) is False
+
+
+# ---------------------------------------------------------------------------
+# Drain: stranded jobs re-queue to the cheapest alive pool
+# ---------------------------------------------------------------------------
+def _drain_kernel(drain):
+    return PanicKernel(base=NoticeAwareKernel(checkpoint_time=0.05),
+                       drain_dead=drain)
+
+
+def test_drain_dead_identity_without_blackout():
+    """drain_dead=True is the bitwise identity when nothing dies."""
+    a = _run("market", "xla", "split", work=None,
+             kernel=_drain_kernel(False), env=EnvTimeline.constant())
+    b = _run("market", "xla", "split", work=None,
+             kernel=_drain_kernel(True), env=EnvTimeline.constant())
+    for name in a:
+        assert (np.asarray(a[name]) == np.asarray(b[name])).all(), name
+
+
+def test_drain_dead_rescues_stranded_jobs():
+    """Once the cheap pool dies for good, jobs queued on it are stranded
+    forever without draining (their pool's spot clock never fires
+    again); drain_dead re-tags them to the alive pool — strictly more
+    spot service, strictly cheaper."""
+    env = inject_blackout(EnvTimeline.constant(), 50.0, 1e6, loc=1,
+                          n_locs=2)
+    kw = dict(k=10.0, n_events=N_EVENTS, key=KEY, burn_in=0,
+              chunk_events=CHUNK, env=env)
+    a = run_market_sim(Exponential(2.5), _market(), _drain_kernel(False),
+                       {"r": jnp.float32(4.0)}, **kw)
+    b = run_market_sim(Exponential(2.5), _market(), _drain_kernel(True),
+                       {"r": jnp.float32(4.0)}, **kw)
+    assert b["spot_served"] > a["spot_served"]
+    assert b["avg_cost"] < a["avg_cost"]
+
+
+# ---------------------------------------------------------------------------
+# Host helpers
+# ---------------------------------------------------------------------------
+def test_deadline_slack_host_law():
+    """deadline_slack is the one slack law, host and traced: positive
+    slack means the job can still wait, zero at the critical point."""
+    assert deadline_slack(10.0, 2.0, 4.0, 1.0) == 4.0
+    assert deadline_slack(10.0, 2.0, 4.0, 1.0, buffer=4.0) == 0.0
+    # traced twin agrees
+    got = deadline_slack(jnp.float32(10.0), jnp.float32(2.0),
+                         jnp.float32(4.0), jnp.float32(1.0))
+    assert float(got) == 4.0
+
+
+def test_restart_overhead_from_timing():
+    """Measured checkpoint seconds → engine work units (the bridge the
+    elastic_spot_training example uses)."""
+    # save 3s + restore 1s over 2s steps, 2 steps per unit → 1 unit
+    assert restart_overhead_from_timing(3.0, 1.0, 2.0,
+                                        steps_per_unit=2.0) == 1.0
+    with pytest.raises(ValueError):
+        restart_overhead_from_timing(1.0, 1.0, 0.0)
+
+
+def test_work_model_validation():
+    """Malformed work models are loud host errors."""
+    with pytest.raises(ValueError, match="ckpt"):
+        WorkModel(ckpt="sometimes")
+    with pytest.raises(ValueError, match="total_work"):
+        WorkModel(total_work=0.0)
+    with pytest.raises(ValueError, match="ckpt_period"):
+        WorkModel.periodic(0.0)
+    with pytest.raises(TypeError, match="WorkModel"):
+        run_sim(Exponential(1.2), Exponential(0.9), ThreePhaseKernel(),
+                {"r": jnp.float32(2.0)}, k=10.0, n_events=100, key=KEY,
+                work="periodic")
+
+
+def test_timeline_from_trace_validation():
+    """Trace → timeline bridge: blackout tagging + loud shape errors."""
+    tl = timeline_from_trace([1.0, 2.0, 3.0],
+                             [(1, 1), (0, 0), (1, 1)])
+    from repro.core.env import SEG_BLACKOUT, SEG_NORMAL
+    assert tl.kind == (SEG_NORMAL, SEG_BLACKOUT, SEG_NORMAL, SEG_NORMAL)
+    assert tl.t_end[-1] >= 3e38  # held open-ended
+    with pytest.raises(ValueError, match="avail"):
+        timeline_from_trace([1.0, 2.0], [(1, 1)])
+    with pytest.raises(ValueError, match="segment"):
+        timeline_from_trace([], [])
